@@ -1,0 +1,88 @@
+"""Model-side benchmarks: UDF application throughput (paper Fig. 5/6 —
+applying a model to a column), serve decode rate, and train step rate, on
+the CPU-feasible reduced paper-lm."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.frame import AFrame
+from repro.engine.session import Session
+from repro.engine.table import Table
+from repro.models.optim import OptimConfig
+from repro.models.registry import get_api
+from repro.models.steps import (init_train_state, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.udf import model_udf
+
+
+def bench_udf(rows: int = 1024, seq: int = 16) -> dict:
+    model_udf.clear_registry()
+    cfg = get_config("paper-lm").reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    model_udf.register_model("clf", params, cfg, classes=3)
+
+    rng = np.random.default_rng(0)
+    sess = Session()
+    sess.create_dataset("T", Table({
+        "id": np.arange(rows, dtype=np.int32),
+        "toks": rng.integers(0, cfg.vocab, (rows, seq)).astype(np.int32),
+    }), dataverse="m")
+    df = AFrame("m", "T", session=sess)
+    df["pred"] = df["toks"].map("clf")
+
+    df.head(2)  # warm (compile)
+    t0 = time.perf_counter()
+    n_runs = 5
+    for _ in range(n_runs):
+        out = df.collect()
+    dt = (time.perf_counter() - t0) / n_runs
+    return {"rows": rows, "s_per_pass": dt, "rows_per_s": rows / dt}
+
+
+def bench_serve(batch: int = 8, prompt: int = 64, new_tokens: int = 16) -> dict:
+    cfg = get_config("paper-lm").reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (batch, prompt), 0, cfg.vocab)
+    prefill = jax.jit(make_prefill_step(cfg, api, max_len=prompt + new_tokens))
+    decode = jax.jit(make_decode_step(cfg, api))
+    cache, tok = prefill(params, {"tokens": toks})
+    cache, tok = decode(params, cache, tok)  # warm
+    jax.block_until_ready(tok)
+    t0 = time.perf_counter()
+    for _ in range(new_tokens):
+        cache, tok = decode(params, cache, tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    return {"batch": batch, "decode_steps_per_s": new_tokens / dt,
+            "tokens_per_s": batch * new_tokens / dt}
+
+
+def bench_train(batch: int = 4, seq: int = 64, steps: int = 5) -> dict:
+    cfg = get_config("paper-lm").reduced()
+    api = get_api(cfg)
+    params, opt = init_train_state(jax.random.key(0), cfg, api)
+    step = jax.jit(make_train_step(cfg, OptimConfig(total_steps=100), api))
+    b = {"tokens": jax.random.randint(jax.random.key(1), (batch, seq), 0, cfg.vocab)}
+    params, opt, m = step(params, opt, b)  # warm
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        params, opt, m = step(params, opt, b)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / steps
+    return {"s_per_step": dt, "tokens_per_s": batch * seq / dt,
+            "final_loss": float(m["loss"])}
+
+
+def run_model_bench() -> dict:
+    out = {"udf": bench_udf(), "serve": bench_serve(), "train": bench_train()}
+    for k, v in out.items():
+        print(f"{k}: {v}")
+    return out

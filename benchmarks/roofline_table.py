@@ -1,0 +1,61 @@
+"""Render the §Roofline table from the dry-run JSON records."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "pod") -> list[dict]:
+    d = RESULTS / mesh
+    recs = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    return recs
+
+
+def markdown_table(mesh: str = "pod", include_skips: bool = True) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
+            "useful FLOP ratio | HBM GB/chip (temp) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["status"] == "skipped":
+            if include_skips:
+                rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                            f"skip (full attention at 500k) | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        rf = r["roofline"]
+        temp = r.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['dominant']} | {rf['useful_flop_ratio']:.2f} | {temp:.2f} |")
+    return "\n".join(rows)
+
+
+def summary(mesh: str = "pod") -> dict:
+    recs = [r for r in load(mesh) if r["status"] == "ok"]
+    dom = {}
+    for r in recs:
+        dom.setdefault(r["roofline"]["dominant"], []).append(
+            (r["arch"], r["shape"]))
+    worst = sorted(
+        (r for r in recs if r["shape"] == "train_4k"),
+        key=lambda r: r["roofline"]["useful_flop_ratio"])
+    most_coll = sorted(
+        recs, key=lambda r: -(r["roofline"]["collective_s"] /
+                              max(sum(r["roofline"][k] for k in
+                                      ("compute_s", "memory_s", "collective_s")), 1e-12)))
+    return {"dominant_counts": {k: len(v) for k, v in dom.items()},
+            "worst_useful_train": [(r["arch"], r["shape"],
+                                    round(r["roofline"]["useful_flop_ratio"], 3))
+                                   for r in worst[:3]],
+            "most_collective_bound": [(r["arch"], r["shape"]) for r in most_coll[:3]]}
+
+
+if __name__ == "__main__":
+    print(markdown_table("pod"))
+    print()
+    print(json.dumps(summary("pod"), indent=2))

@@ -1,0 +1,62 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+  --single-node : Fig. 8-11 / Tables V-VI (12 expressions × variants × sizes)
+  --scaling     : Tables VII-VIII (speedup / scaleup via subprocess shards)
+  --model       : Fig. 5/6 analogue (model-UDF / serve / train rates)
+  --roofline    : §Roofline table from the dry-run artifacts
+  (no flags)    : quick versions of all of the above
+
+Outputs land in results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single-node", action="store_true")
+    ap.add_argument("--scaling", action="store_true")
+    ap.add_argument("--model", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="full dataset sizes (XS..XL); default quick=XS,S")
+    args = ap.parse_args()
+    run_all = not (args.single_node or args.scaling or args.model or args.roofline)
+    OUT.mkdir(parents=True, exist_ok=True)
+
+    if args.single_node or run_all:
+        from benchmarks.wisconsin_bench import SIZES, run_benchmark
+
+        sizes = SIZES if args.full else {k: SIZES[k] for k in ("XS", "S")}
+        print(f"== single-node DataFrame benchmark (sizes={list(sizes)}) ==")
+        run_benchmark(sizes, OUT / "single_node.csv")
+
+    if args.scaling or run_all:
+        from benchmarks.scaling_bench import run_scaling
+
+        print("== speedup / scaleup (subprocess shards) ==")
+        run_scaling(OUT / "scaling.json", quick=not args.full)
+
+    if args.model or run_all:
+        from benchmarks.model_bench import run_model_bench
+
+        print("== model UDF / serve / train ==")
+        (OUT / "model.json").write_text(json.dumps(run_model_bench(), indent=2))
+
+    if args.roofline or run_all:
+        from benchmarks.roofline_table import markdown_table, summary
+
+        print("== roofline (from dry-run artifacts) ==")
+        md = markdown_table("pod")
+        (OUT / "roofline_pod.md").write_text(md)
+        print(md)
+        print(json.dumps(summary("pod"), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Speedup / scaleup (paper §IV-D2, Tables VII/VIII).
+
+Each (shards, rows) point runs in a FRESH subprocess with
+``--xla_force_host_platform_device_count=<shards>`` so the shard_map engine
+partitions exactly as it would across machines.
+
+CPU-container caveat (recorded in EXPERIMENTS.md): one physical core executes
+all shards, so wall-clock cannot show hardware speedup — what these curves
+measure is the *distribution overhead structure* (per-shard work + collective
+emulation), i.e. the flat-or-gently-rising scaleup line and the
+overhead-dominated speedup line one expects from emulated shards.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+_CHILD = r"""
+import json, sys, time
+import numpy as np
+shards, rows = int(sys.argv[1]), int(sys.argv[2])
+from repro.data import wisconsin
+from repro.engine.session import Session
+from repro.core.frame import AFrame
+from repro.launch.mesh import make_local_mesh
+from benchmarks.wisconsin_bench import EXPRESSIONS, AFrameVariant, WARMUP, RUNS
+
+mesh = make_local_mesh(data=shards, model=1) if shards > 1 else None
+sess = Session(mesh=mesh, mode="shard_map" if shards > 1 else "gspmd")
+table = wisconsin.generate(rows, seed=11)
+sess.create_dataset("data", table, dataverse="bench", closed=True,
+                    indexes=["onePercent", "unique1"], primary="unique2")
+sess.create_dataset("data_r", table, dataverse="bench", closed=True,
+                    indexes=["onePercent", "unique1"], primary="unique2")
+v = AFrameVariant("aframe-index", sess, "data")
+t0 = time.perf_counter(); v.create(); creation = time.perf_counter() - t0
+out = {}
+for name, fn in EXPRESSIONS:
+    rng = np.random.default_rng(5)
+    ts = []
+    for _ in range(WARMUP + RUNS):
+        t0 = time.perf_counter(); fn(v, rng, rows); ts.append(time.perf_counter() - t0)
+    out[name] = float(np.mean(ts[WARMUP:]))
+print(json.dumps({"shards": shards, "rows": rows, "creation_s": creation,
+                  "expr_s": out}))
+"""
+
+
+def run_point(shards: int, rows: int, timeout: int = 560) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={max(shards, 1)}"
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT}"
+    r = subprocess.run([sys.executable, "-c", _CHILD, str(shards), str(rows)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def speedup(rows: int = 200_000, shard_counts=(1, 2, 4, 8)) -> list[dict]:
+    """Fixed data, growing shards (paper Table VII)."""
+    return [run_point(s, rows) for s in shard_counts]
+
+
+def scaleup(rows_per_shard: int = 50_000, shard_counts=(1, 2, 4, 8)) -> list[dict]:
+    """Data grows with shards (paper Table VIII)."""
+    return [run_point(s, rows_per_shard * s) for s in shard_counts]
+
+
+def run_scaling(out_json: pathlib.Path, quick: bool = False) -> dict:
+    counts = (1, 2, 4) if quick else (1, 2, 4, 8)
+    res = {"speedup": speedup(100_000 if quick else 200_000, counts),
+           "scaleup": scaleup(25_000 if quick else 50_000, counts)}
+    out_json.parent.mkdir(parents=True, exist_ok=True)
+    out_json.write_text(json.dumps(res, indent=2))
+    for kind in ("speedup", "scaleup"):
+        print(f"-- {kind} --")
+        for rec in res[kind]:
+            tot = sum(rec["expr_s"].values())
+            print(f"  shards={rec['shards']:2d} rows={rec['rows']:7d} "
+                  f"sum(expr)={tot*1e3:9.1f}ms create={rec['creation_s']*1e3:7.1f}ms")
+    return res

@@ -1,0 +1,228 @@
+"""The paper's DataFrame micro-benchmark (§IV): 12 expressions × variants ×
+dataset sizes, expression-only vs total (creation + expression) timing.
+
+Variants (paper labels):
+  numpy-eager    — "Pandas": eager evaluation over host arrays loaded from
+                   disk files; every expression materializes fully.
+  aframe         — open datatype, no indexes (schema-on-read cast per access)
+  aframe-schema  — closed datatype (typed columns)
+  aframe-index   — closed + primary(unique2) + secondary(onePercent, unique1)
+
+Methodology mirrors §IV-B: each expression runs WARMUP+RUNS times with
+randomized predicate literals; the first WARMUP results are dropped (JIT
+compile plays the role of the paper's JVM warmup) and the rest average.
+"""
+from __future__ import annotations
+
+import pathlib
+import tempfile
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine.session import Session
+from repro.engine.table import Table
+
+WARMUP, RUNS = 3, 7
+
+SIZES = {"XS": 50_000, "S": 125_000, "M": 250_000, "L": 375_000, "XL": 500_000}
+
+
+# -- variant harnesses -------------------------------------------------------------
+
+
+class NumpyEager:
+    """The Pandas stand-in: data lives in files; creation = full load."""
+
+    name = "numpy-eager"
+
+    def __init__(self, disk_dir: pathlib.Path):
+        self.disk = disk_dir
+
+    def create(self):
+        self.df = {p.stem: np.load(p) for p in sorted(self.disk.glob("*.npy"))}
+        return self
+
+    def e1(self):
+        return len(self.df["unique1"])
+
+    def e2(self):
+        return {k: self.df[k][:5].copy() for k in ("two", "four")}
+
+    def e3(self, x, y, z):
+        m = (self.df["ten"] == x) & (self.df["twentyPercent"] == y) & (self.df["two"] == z)
+        return int(m.sum())
+
+    def e4(self):
+        k, c = np.unique(self.df["oddOnePercent"], return_counts=True)
+        return c
+
+    def e5(self):
+        # eager: uppercases the WHOLE column before head (paper exp-5 eager-evaluation cost)
+        col = self.df["stringu1"]
+        up = np.where((col >= ord("a")) & (col <= ord("z")), col - 32, col)
+        return up[:5]
+
+    def e6(self):
+        return int(self.df["unique1"].max())
+
+    def e7(self):
+        return int(self.df["unique1"].min())
+
+    def e8(self):
+        out = {}
+        tw, fo = self.df["twenty"], self.df["four"]
+        for g in np.unique(tw):
+            out[g] = fo[tw == g].max()
+        return out
+
+    def e9(self):
+        order = np.argsort(self.df["unique1"])[::-1][:5]
+        return {k: v[order] for k, v in self.df.items()}
+
+    def e10(self, x):
+        m = self.df["ten"] == x
+        rows = {k: v[m] for k, v in self.df.items()}  # eager full selection
+        return {k: v[:5] for k, v in rows.items()}
+
+    def e11(self, x, y):
+        m = (self.df["onePercent"] >= x) & (self.df["onePercent"] <= y)
+        return int(m.sum())
+
+    def e12(self):
+        l = self.df["unique1"]
+        r = np.sort(self.df["unique1"])
+        lo = np.searchsorted(r, l, "left")
+        hi = np.searchsorted(r, l, "right")
+        return int((hi - lo).sum())
+
+
+class AFrameVariant:
+    def __init__(self, name: str, session: Session, dataset: str):
+        self.name = name
+        self.sess = session
+        self.dataset = dataset
+
+    def create(self):
+        self.df = AFrame("bench", self.dataset, session=self.sess)
+        return self
+
+    def e1(self):
+        return len(self.df)
+
+    def e2(self):
+        return self.df[["two", "four"]].head()
+
+    def e3(self, x, y, z):
+        d = self.df
+        return len(d[(d["ten"] == x) & (d["twentyPercent"] == y) & (d["two"] == z)])
+
+    def e4(self):
+        return self.df.groupby("oddOnePercent").agg("count")
+
+    def e5(self):
+        return self.df["stringu1"].map(str.upper).head()
+
+    def e6(self):
+        return self.df["unique1"].max()
+
+    def e7(self):
+        return self.df["unique1"].min()
+
+    def e8(self):
+        return self.df.groupby("twenty")["four"].agg("max")
+
+    def e9(self):
+        return self.df.sort_values("unique1", ascending=False).head()
+
+    def e10(self, x):
+        return self.df[self.df["ten"] == x].head()
+
+    def e11(self, x, y):
+        d = self.df
+        return len(d[(d["onePercent"] >= x) & (d["onePercent"] <= y)])
+
+    def e12(self):
+        other = AFrame("bench", self.dataset + "_r", session=self.sess)
+        return len(self.df.merge(other, left_on="unique1", right_on="unique1"))
+
+
+EXPRESSIONS: list[tuple[str, Callable]] = [
+    ("1_count", lambda v, rng, n: v.e1()),
+    ("2_project_head", lambda v, rng, n: v.e2()),
+    ("3_filter_count", lambda v, rng, n: v.e3(int(rng.integers(10)),
+                                              int(rng.integers(5)),
+                                              int(rng.integers(2)))),
+    ("4_group_count", lambda v, rng, n: v.e4()),
+    ("5_map_head", lambda v, rng, n: v.e5()),
+    ("6_max", lambda v, rng, n: v.e6()),
+    ("7_min", lambda v, rng, n: v.e7()),
+    ("8_group_max", lambda v, rng, n: v.e8()),
+    ("9_sort_head", lambda v, rng, n: v.e9()),
+    ("10_select_head", lambda v, rng, n: v.e10(int(rng.integers(10)))),
+    ("11_range_count", lambda v, rng, n: (lambda a, b: v.e11(min(a, b), max(a, b)))(
+        int(rng.integers(100)), int(rng.integers(100)))),
+    ("12_join_count", lambda v, rng, n: v.e12()),
+]
+
+
+def build_variants(n_rows: int, tmp: pathlib.Path, mesh=None, mode="auto"):
+    table = wisconsin.generate(n_rows, seed=11)
+    disk = tmp / f"disk_{n_rows}"
+    disk.mkdir(parents=True, exist_ok=True)
+    for k, v in table.columns.items():
+        np.save(disk / f"{k}.npy", np.asarray(v))
+
+    variants = [NumpyEager(disk)]
+    for name, closed, indexes, primary in [
+        ("aframe", False, [], None),
+        ("aframe-schema", True, [], None),
+        ("aframe-index", True, ["onePercent", "unique1"], "unique2"),
+    ]:
+        sess = Session(mesh=mesh, mode=mode)
+        sess.create_dataset("data", table, dataverse="bench", closed=closed,
+                            indexes=indexes, primary=primary)
+        sess.create_dataset("data_r", table, dataverse="bench", closed=closed,
+                            indexes=indexes, primary=primary)
+        variants.append(AFrameVariant(name, sess, "data"))
+    return variants
+
+
+def run_benchmark(sizes: dict[str, int], out_csv: pathlib.Path, mesh=None,
+                  mode="auto") -> list[dict]:
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        tmp = pathlib.Path(td)
+        for size_name, n in sizes.items():
+            variants = build_variants(n, tmp, mesh=mesh, mode=mode)
+            for v in variants:
+                t0 = time.perf_counter()
+                v.create()
+                creation = time.perf_counter() - t0
+                for expr_name, fn in EXPRESSIONS:
+                    rng = np.random.default_rng(5)
+                    times = []
+                    for i in range(WARMUP + RUNS):
+                        t0 = time.perf_counter()
+                        fn(v, rng, n)
+                        times.append(time.perf_counter() - t0)
+                    expr_s = float(np.mean(times[WARMUP:]))
+                    rows.append({
+                        "size": size_name, "rows": n, "variant": v.name,
+                        "expression": expr_name,
+                        "expr_s": expr_s, "creation_s": creation,
+                        "total_s": expr_s + creation,
+                    })
+                    print(f"{size_name:3s} {v.name:14s} {expr_name:15s} "
+                          f"expr={expr_s*1e3:9.2f}ms total={(expr_s+creation)*1e3:9.2f}ms")
+    out_csv.parent.mkdir(parents=True, exist_ok=True)
+    import csv
+
+    with open(out_csv, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return rows

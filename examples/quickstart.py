@@ -1,0 +1,52 @@
+"""Quickstart: the AFrame user experience (paper Figs. 2-3).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine.session import Session
+
+# -- "CREATE DATASET ... / LOAD DATASET" (paper Fig. 1) ------------------------
+sess = Session()
+table = wisconsin.generate(100_000, seed=0)
+sess.create_dataset("TrainingData", table, dataverse="demo",
+                    indexes=["onePercent"], primary="unique2")
+
+# -- In [2]: initializing an AFrame object is O(1): data is *managed* ----------
+df = AFrame("demo", "TrainingData", session=sess)
+
+# -- lazy expressions (paper Inputs 4-5): nothing executes yet -----------------
+evens = df[df["two"] == 0]
+small = evens[["unique1", "ten", "stringu1"]]
+
+# -- Inputs 7-8: inspect the incrementally-built query -------------------------
+print("underlying query:")
+print(" ", small.query)
+print("optimized form:")
+print(" ", small.optimized_query)
+
+# -- Input 6: an ACTION triggers evaluation (LIMIT pushed into the plan) -------
+print("\nhead(3):")
+for k, v in small.head(3).items():
+    print(f"  {k:10s} {v[:3]}")
+
+# -- aggregates / groupby / sort ------------------------------------------------
+print("\nlen(df)            =", len(df))
+print("df['unique1'].max() =", df["unique1"].max())
+g = df.groupby("twenty")["four"].agg("max")
+print("groupby('twenty')['four'].max() ->", dict(zip(g["twenty"][:5].tolist(),
+                                                     g["max_four"][:5].tolist())))
+top = df.sort_values("unique1", ascending=False).head(3)
+print("top-3 by unique1    =", top["unique1"].tolist())
+
+# -- index-accelerated range count (paper expression 11) ------------------------
+n = len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 19)])
+print("range count (index-only query) =", n)
+print("  executed as:", sess.last_optimized.to_sql())
+
+# -- persist (paper Input 15) ----------------------------------------------------
+saved = small.persist("EvenRows")
+print("\npersisted demo.EvenRows; len =", len(saved))
+print("plan cache:", sess.stats)

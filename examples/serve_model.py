@@ -1,0 +1,73 @@
+"""End-to-end serving driver: batched requests through prefill + decode with
+continuous batched generation — the serving-side e2e deliverable (the paper
+is an analytics/serving system, so serving is the primary driver).
+
+Run:  PYTHONPATH=src python examples/serve_model.py [--arch paper-lm] [--tokens 32]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.registry import get_api
+from repro.models.steps import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-lm")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (not reduced) config — TPU-sized!")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    api = get_api(cfg)
+    print(f"serving {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"({cfg.n_params()/1e6:.1f}M params)")
+
+    params = api.init(jax.random.key(0), cfg)
+    max_len = args.prompt + args.tokens
+    prefill = jax.jit(make_prefill_step(cfg, api, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg, api))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt)),
+                          jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.enc_len, cfg.d_model)), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.num_patches, cfg.patch_dim)), jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    cache, tok = prefill(params, batch)
+    jax.block_until_ready(tok)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch}×{args.prompt} tokens in {t_prefill*1e3:.1f}ms "
+          f"({args.batch*args.prompt/t_prefill:.0f} tok/s)")
+
+    generated = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens - 1):
+        cache, tok = decode(params, cache, tok)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decode:  {args.tokens-1} steps × batch {args.batch} in "
+          f"{t_decode*1e3:.1f}ms ({args.batch*(args.tokens-1)/t_decode:.0f} tok/s)")
+    print(f"sample continuation (request 0): {np.asarray(out[0])[:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

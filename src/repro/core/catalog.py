@@ -1,0 +1,88 @@
+"""The catalog: datasets, datatypes, indexes — AsterixDB's metadata node.
+
+A ``Dataset`` owns a row-sharded :class:`~repro.engine.table.Table` plus any
+indexes. ``closed`` datasets have a declared schema (typed dense columns);
+``open`` datasets simulate schema-on-read: values are stored widened
+(float64/boxed) and every access pays a cast — this models the paper's
+open-vs-closed datatype cost difference ("AFrame" vs "AFrame Schema").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.table import ColumnMeta, Table
+
+
+@dataclasses.dataclass
+class IndexInfo:
+    name: str
+    column: str
+    kind: str  # "primary" (clustered: table sorted by column) | "secondary"
+    # secondary index payload: sorted keys + row ids + per-block zone maps,
+    # each row-sharded like the base table.
+    sorted_keys: Optional[object] = None
+    row_ids: Optional[object] = None
+
+
+@dataclasses.dataclass
+class Dataset:
+    name: str
+    dataverse: str
+    table: Table
+    closed: bool = True  # closed datatype == schema provided
+    indexes: dict[str, IndexInfo] = dataclasses.field(default_factory=dict)
+
+    def index_on(self, column: str) -> Optional[IndexInfo]:
+        for ix in self.indexes.values():
+            if ix.column == column:
+                return ix
+        return None
+
+    @property
+    def primary_index(self) -> Optional[IndexInfo]:
+        for ix in self.indexes.values():
+            if ix.kind == "primary":
+                return ix
+        return None
+
+
+class Catalog:
+    def __init__(self):
+        self._datasets: dict[tuple[str, str], Dataset] = {}
+
+    def register(self, ds: Dataset) -> Dataset:
+        self._datasets[(ds.dataverse, ds.name)] = ds
+        return ds
+
+    def get(self, dataverse: str, name: str) -> Dataset:
+        key = (dataverse, name)
+        if key not in self._datasets:
+            raise KeyError(f"unknown dataset {dataverse}.{name}")
+        return self._datasets[key]
+
+    def drop(self, dataverse: str, name: str) -> None:
+        self._datasets.pop((dataverse, name), None)
+
+    def names(self) -> list[str]:
+        return [f"{dv}.{n}" for dv, n in self._datasets]
+
+
+def open_widen(table: Table) -> Table:
+    """Simulate an *open* datatype: numeric columns stored as float64 with a
+    per-access cast cost; schema-on-read (paper's open ADM datatype)."""
+    cols = {}
+    meta = {}
+    for name, col in table.columns.items():
+        m = table.meta[name]
+        if col.ndim == 1 and jnp.issubdtype(col.dtype, jnp.integer) and name != "__valid__":
+            cols[name] = col.astype(jnp.float32)
+            meta[name] = ColumnMeta(np.dtype(np.float32), m.lo, m.hi, m.distinct,
+                                    m.is_string, m.sorted_ascending)
+        else:
+            cols[name] = col
+            meta[name] = m
+    return Table(cols, meta, table.num_rows)

@@ -1,0 +1,372 @@
+"""Plan compiler: optimized logical plan → one jitted SPMD program.
+
+The AsterixDB analogue of "ship the SQL++ string, get an optimized Hyracks
+job": the plan lowers to a closed JAX function over (dataset columns, literal
+params) and jits once per plan *fingerprint* (literal values are runtime
+params, so the benchmark's randomized predicates reuse the executable — the
+prepared-statement effect the paper gets from AsterixDB's plan cache).
+
+Two execution modes:
+  * ``gspmd``     — plain jnp ops; under jit XLA GSPMD inserts collectives.
+    This is the paper-faithful baseline ("let the optimizer/partitioner do
+    it").
+  * ``shard_map`` — the beyond-paper optimized mode: relational operators
+    from engine/distributed.py with hand-placed minimal collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as P
+from repro.core.catalog import Catalog
+from repro.core.expr import collect_params, param_values
+from repro.engine import physical
+from repro.engine.table import Table
+
+
+@dataclasses.dataclass
+class ExecContext:
+    catalog: Catalog
+    mesh: Any = None            # jax Mesh when distributed
+    data_axes: tuple = ("data",)
+    mode: str = "gspmd"         # gspmd | shard_map
+
+    @property
+    def distributed(self) -> bool:
+        return self.mode == "shard_map" and self.mesh is not None
+
+
+@dataclasses.dataclass
+class CompiledQuery:
+    plan: P.Plan
+    fingerprint: str
+    kind: str                   # scalar | table | grouped
+    fn: Callable                # jitted: (tables, params) -> result
+    leaf_keys: list             # dataset keys feeding `tables`
+    lits: list                  # literal slots (plan order)
+
+    def run(self, catalog: Catalog, lits=None):
+        """``lits``: literal slots from the *current* plan instance — on a
+        plan-cache hit the executable is reused but the fresh literal values
+        must be bound (same fingerprint ⇒ same slot order)."""
+        tables = {}
+        for key in self.leaf_keys:
+            ds = catalog.get(*key)
+            tables[f"{key[0]}.{key[1]}"] = dict(ds.table.columns)
+            for ixname, ix in getattr(ds, "indexes", {}).items():
+                if getattr(ix, "sorted_keys", None) is not None:
+                    tables[f"{key[0]}.{key[1]}"][f"__ix_{ix.column}__"] = ix.sorted_keys
+                    tables[f"{key[0]}.{key[1]}"][f"__ixid_{ix.column}__"] = ix.row_ids
+        params = param_values(lits if lits is not None else self.lits)
+        return self.fn(tables, params)
+
+
+def _scan_leaves(plan: P.Plan) -> list[tuple[str, str]]:
+    keys = []
+    for node in P.walk(plan):
+        if isinstance(node, (P.Scan, P.IndexRangeScan)):
+            k = (node.dataverse, node.dataset)
+            if k not in keys:
+                keys.append(k)
+    return keys
+
+
+def compile_plan(plan: P.Plan, ctx: ExecContext) -> CompiledQuery:
+    leaf_keys = _scan_leaves(plan)
+    lits = collect_params(P.all_exprs(plan))
+    kind, build = _lower_terminal(plan, ctx)
+    jitted = jax.jit(build)
+    return CompiledQuery(plan, plan.fingerprint(), kind, jitted, leaf_keys, lits)
+
+
+# -- streaming lowering -------------------------------------------------------
+
+
+def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
+    """Returns fn(tables, params) -> (env, mask). Filters never compact
+    (selection-vector execution; DESIGN.md §2)."""
+    if isinstance(node, P.Scan):
+        key = f"{node.dataverse}.{node.dataset}"
+        ds = ctx.catalog.get(node.dataverse, node.dataset)
+        open_cast = not ds.closed
+
+        def fn(tables, params):
+            cols = tables[key]
+            env = {k: v for k, v in cols.items()
+                   if k != "__valid__" and not k.startswith("__ix")}
+            if open_cast:  # schema-on-read: pay a widen/cast per access
+                env = {k: (v.astype(jnp.float32) if jnp.issubdtype(v.dtype, jnp.integer)
+                           and v.ndim == 1 else v) for k, v in env.items()}
+            mask = cols.get("__valid__",
+                            jnp.ones((next(iter(env.values())).shape[0],), jnp.bool_))
+            return env, mask
+        return fn
+
+    if isinstance(node, P.IndexRangeScan):
+        key = f"{node.dataverse}.{node.dataset}"
+
+        def fn(tables, params):
+            cols = tables[key]
+            env = {k: v for k, v in cols.items()
+                   if k != "__valid__" and not k.startswith("__ix")}
+            mask = cols.get("__valid__",
+                            jnp.ones((next(iter(env.values())).shape[0],), jnp.bool_))
+            keys_col = env[node.index_col]
+            lo = node.lo.evaluate(env, params) if node.lo is not None else None
+            hi = node.hi.evaluate(env, params) if node.hi is not None else None
+            mask = physical.index_range_mask(keys_col, mask, lo, hi)
+            if node.residual is not None:
+                mask = mask & node.residual.evaluate(env, params)
+            return env, mask
+        return fn
+
+    if isinstance(node, P.Filter):
+        child = _lower_stream(node.children[0], ctx)
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            return env, mask & node.predicate.evaluate(env, params)
+        return fn
+
+    if isinstance(node, P.Project):
+        child = _lower_stream(node.children[0], ctx)
+        outputs = node.outputs
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            return {name: e.evaluate(env, params) for name, e in outputs}, mask
+        return fn
+
+    if isinstance(node, P.Limit):
+        child = _lower_stream(node.children[0], ctx)
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            if ctx.distributed:
+                from repro.engine import distributed as D
+                return D.dist_limit(ctx.mesh, ctx.data_axes, env, mask, node.n)
+            return physical.limit(env, mask, node.n)
+        return fn
+
+    if isinstance(node, P.TopK):
+        child = _lower_stream(node.children[0], ctx)
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            if ctx.distributed:
+                from repro.engine import distributed as D
+                return D.dist_topk(ctx.mesh, ctx.data_axes, env, mask,
+                                   node.key, node.k, node.ascending)
+            return physical.topk(env, mask, node.key, node.k, node.ascending)
+        return fn
+
+    if isinstance(node, P.Sort):
+        child = _lower_stream(node.children[0], ctx)
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            return physical.sort_full(env, mask, node.key, node.ascending)
+        return fn
+
+    if isinstance(node, P.GroupAgg):
+        return _lower_groupagg(node, ctx)
+
+    from repro.core.window import Window, execute_window
+
+    if isinstance(node, Window):
+        child = _lower_stream(node.children[0], ctx)
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            return execute_window(env, mask, node)
+        return fn
+
+    if isinstance(node, P.Join):
+        lchild = _lower_stream(node.children[0], ctx)
+        rchild = _lower_stream(node.children[1], ctx)
+        # materializing joins require unique build keys (static shapes:
+        # each probe row gathers ≤1 match). Catch violations via stats.
+        for leaf in P.walk(node.children[1]):
+            if isinstance(leaf, P.Scan):
+                ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
+                meta = ds.table.meta.get(node.right_on)
+                if meta is not None and meta.distinct is not None \
+                        and meta.distinct < len(ds.table):
+                    raise NotImplementedError(
+                        f"materializing join on non-unique key "
+                        f"{node.right_on!r} (distinct={meta.distinct} < "
+                        f"rows={len(ds.table)}); COUNT over such joins is "
+                        "supported (join-count path)")
+                break
+
+        def fn(tables, params):
+            lenv, lm = lchild(tables, params)
+            renv, rm = rchild(tables, params)
+            return physical.join_materialize(lenv, lm, renv, rm,
+                                             node.left_on, node.right_on)
+        return fn
+
+    raise NotImplementedError(f"stream lowering for {type(node).__name__}")
+
+
+def _group_domain(node: P.GroupAgg, ctx: ExecContext):
+    """Resolve (lo, num_groups) for the bounded-domain group-by from leaf
+    dataset column statistics (the DBMS catalog stats analogue)."""
+    key = node.keys[0]
+    for leaf in P.walk(node):
+        if isinstance(leaf, P.Scan):
+            ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
+            meta = ds.table.meta.get(key)
+            if meta is not None and meta.lo is not None and meta.hi is not None:
+                return int(meta.lo), int(meta.hi - meta.lo + 1)
+    raise ValueError(
+        f"group key {key!r} has no domain statistics; bounded-domain group-by "
+        "requires catalog lo/hi (Wisconsin columns carry them)")
+
+
+def _lower_groupagg(node: P.GroupAgg, ctx: ExecContext) -> Callable:
+    assert len(node.keys) == 1, "single-key group-by (paper expressions 4/8)"
+    key = node.keys[0]
+    lo, num_groups = _group_domain(node, ctx)
+    child = _lower_stream(node.children[0], ctx)
+    aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
+
+    def fn(tables, params):
+        env, mask = child(tables, params)
+        if ctx.distributed:
+            from repro.engine import distributed as D
+            value_cols = {c: env[c] for _, _, c in aggs if c}
+            out, gmask = D.dist_group_agg(ctx.mesh, ctx.data_axes, env[key], mask,
+                                          lo, num_groups, aggs, value_cols)
+            out[key] = out.pop("__key__")
+            return out, gmask
+        out, gmask = physical.group_agg(env, mask, key, lo, num_groups, aggs)
+        return out, gmask
+    return fn
+
+
+# -- terminal lowering -----------------------------------------------------------
+
+
+def _lower_terminal(plan: P.Plan, ctx: ExecContext) -> tuple[str, Callable]:
+    if isinstance(plan, P.FilterCount):
+        return "scalar", _lower_filter_count(plan, ctx)
+
+    if isinstance(plan, P.JoinCount):
+        return "scalar", _lower_join_count(plan, ctx)
+
+    if isinstance(plan, P.Agg):
+        # COUNT over a Join must use the duplicate-correct join-count path
+        # even when the optimizer was disabled (semantics ≠ optimization).
+        if len(plan.aggs) == 1 and plan.aggs[0].op == "count" \
+                and isinstance(plan.children[0], P.Join):
+            j = plan.children[0]
+            return "scalar", _lower_join_count(
+                P.JoinCount(j.children[0], j.children[1], j.left_on, j.right_on),
+                ctx)
+        child = _lower_stream(plan.children[0], ctx)
+        aggs = [(s.out_name, s.op, s.column) for s in plan.aggs]
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            out = {}
+            for name, op, col in aggs:
+                if ctx.distributed and op != "count":
+                    from repro.engine import distributed as D
+                    out[name] = D.dist_agg(ctx.mesh, ctx.data_axes, op, env[col], mask)
+                elif ctx.distributed:
+                    from repro.engine import distributed as D
+                    out[name] = D.dist_count(ctx.mesh, ctx.data_axes, mask)
+                else:
+                    out[name] = physical.agg_scalar(env, mask, op, col)
+            return out
+        return "scalar", fn
+
+    if isinstance(plan, P.GroupAgg):
+        return "grouped", _lower_groupagg(plan, ctx)
+
+    # table-producing terminals
+    stream = _lower_stream(plan, ctx)
+    return "table", stream
+
+
+def _lower_filter_count(plan: P.FilterCount, ctx: ExecContext) -> Callable:
+    child_node = plan.children[0]
+
+    # index-only count: FilterCount(IndexRangeScan, residual-free)
+    if isinstance(child_node, P.IndexRangeScan) and child_node.residual is None \
+            and plan.predicate is None:
+        node = child_node
+        key = f"{node.dataverse}.{node.dataset}"
+
+        def fn(tables, params):
+            cols = tables[key]
+            ix_keys = cols[f"__ix_{node.index_col}__"]
+            valid = cols.get("__valid__",
+                             jnp.ones((ix_keys.shape[0],), jnp.bool_))
+            lo = node.lo.evaluate({}, params) if node.lo is not None else None
+            hi = node.hi.evaluate({}, params) if node.hi is not None else None
+            if ctx.distributed:
+                from repro.engine import distributed as D
+                return {"count": D.dist_index_count(ctx.mesh, ctx.data_axes,
+                                                    ix_keys, valid, lo, hi)}
+            from repro.engine.index import index_count_local
+            nv = jnp.sum(valid, dtype=jnp.int32)
+            return {"count": index_count_local(ix_keys, nv, lo, hi)}
+        return fn
+
+    child = _lower_stream(child_node, ctx)
+    pred = plan.predicate
+
+    def fn(tables, params):
+        env, mask = child(tables, params)
+        if pred is not None:
+            mask = mask & pred.evaluate(env, params)
+        if ctx.distributed:
+            from repro.engine import distributed as D
+            return {"count": D.dist_count(ctx.mesh, ctx.data_axes, mask)}
+        return {"count": jnp.sum(mask, dtype=jnp.int32)}
+    return fn
+
+
+def _lower_join_count(plan: P.JoinCount, ctx: ExecContext) -> Callable:
+    lchild = _lower_stream(plan.children[0], ctx)
+    rchild = _lower_stream(plan.children[1], ctx)
+    left_on, right_on = plan.left_on, plan.right_on
+
+    # presorted build side when the right leaf has an index on the join key
+    presorted = False
+    rleaf = plan.children[1]
+    if isinstance(rleaf, P.Scan):
+        ds = ctx.catalog.get(rleaf.dataverse, rleaf.dataset)
+        presorted = ds.index_on(right_on) is not None
+    rkey_name = f"__ix_{right_on}__" if presorted else right_on
+
+    def fn(tables, params):
+        lenv, lm = lchild(tables, params)
+        renv, rm = rchild(tables, params)
+        if presorted:
+            rleaf_key = f"{rleaf.dataverse}.{rleaf.dataset}"
+            rkey = tables[rleaf_key][rkey_name]
+        else:
+            rkey = renv[right_on]
+        if ctx.distributed:
+            from repro.engine import distributed as D
+            return {"count": D.dist_join_count(ctx.mesh, ctx.data_axes,
+                                               lenv[left_on], lm, rkey, rm,
+                                               presorted_right=presorted)}
+        if presorted:
+            # index order: valid keys ascending, padding at +inf tail
+            n_r = jnp.sum(rm, dtype=jnp.int32)
+            lo = jnp.searchsorted(rkey, lenv[left_on], side="left")
+            hi = jnp.searchsorted(rkey, lenv[left_on], side="right")
+            hi = jnp.minimum(hi, n_r)
+            cnt = jnp.where(lm, jnp.maximum(hi - lo, 0), 0)
+            return {"count": jnp.sum(cnt, dtype=jnp.int32)}
+        return {"count": physical.join_count(lenv[left_on], lm, rkey, rm)}
+    return fn

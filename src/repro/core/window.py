@@ -1,0 +1,127 @@
+"""Window functions — the paper's §VI future-work item, implemented.
+
+``Window`` is a plan node computing per-row analytic functions over an
+optional bounded-domain partition and a sort order:
+
+    row_number()           ROW_NUMBER() OVER (PARTITION BY p ORDER BY o)
+    rank()                 RANK()        (ties share rank)
+    cumsum(col)            SUM(col)      with UNBOUNDED PRECEDING frame
+    moving_avg(col, k)     AVG(col)      over a k-row trailing frame
+
+TPU-native execution (static shapes, no per-group loops): one argsort by
+(partition, order) composite key, segment boundaries via searchsorted,
+vectorized prefix ops, inverse-permute back to storage order — rows keep
+their original positions (Pandas alignment semantics).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as P
+
+WINDOW_FUNCS = ("row_number", "rank", "cumsum", "moving_avg")
+
+
+class Window(P.Plan):
+    """Appends one window column to the child's output."""
+
+    def __init__(self, child: P.Plan, out_name: str, func: str,
+                 order_by: str, partition_by: Optional[str] = None,
+                 value_col: Optional[str] = None, frame: int = 0,
+                 ascending: bool = True):
+        assert func in WINDOW_FUNCS, func
+        self.children = (child,)
+        self.out_name, self.func = out_name, func
+        self.order_by, self.partition_by = order_by, partition_by
+        self.value_col, self.frame, self.ascending = value_col, frame, ascending
+
+    def fingerprint(self):
+        return (f"window({self.out_name},{self.func},{self.order_by},"
+                f"{self.partition_by},{self.value_col},{self.frame},"
+                f"{self.ascending},{self.children[0].fingerprint()})")
+
+    def required_columns(self):
+        cols = {self.order_by}
+        if self.partition_by:
+            cols.add(self.partition_by)
+        if self.value_col:
+            cols.add(self.value_col)
+        return cols
+
+    def to_sql(self):
+        over = []
+        if self.partition_by:
+            over.append(f"PARTITION BY t.{self.partition_by}")
+        over.append(f"ORDER BY t.{self.order_by}"
+                    f"{'' if self.ascending else ' DESC'}")
+        if self.func == "row_number":
+            fn = "ROW_NUMBER()"
+        elif self.func == "rank":
+            fn = "RANK()"
+        elif self.func == "cumsum":
+            fn = f"SUM(t.{self.value_col})"
+            over.append("ROWS UNBOUNDED PRECEDING")
+        else:
+            fn = f"AVG(t.{self.value_col})"
+            over.append(f"ROWS {self.frame - 1} PRECEDING")
+        return (f"SELECT t.*, {fn} OVER ({' '.join(over)}) AS {self.out_name} "
+                f"FROM ({self.children[0].to_sql()}) t")
+
+
+def execute_window(env: dict, mask: jax.Array, node: Window) -> tuple[dict, jax.Array]:
+    """Vectorized window evaluation (storage-order aligned)."""
+    n = mask.shape[0]
+    order_col = env[node.order_by]
+    okey = order_col.astype(jnp.float32)
+    if not node.ascending:
+        okey = -okey
+    # dead rows sort to the end; composite (partition, order) sort key
+    big = jnp.float32(3e38)
+    okey = jnp.where(mask, okey, big)
+    if node.partition_by is not None:
+        pcol = env[node.partition_by].astype(jnp.float32)
+        pkey = jnp.where(mask, pcol, big)
+        # lexicographic via two stable sorts: order first, then partition
+        perm = jnp.argsort(okey, stable=True)
+        perm = perm[jnp.argsort(pkey[perm], stable=True)]
+        part_sorted = pkey[perm]
+        starts_mask = jnp.concatenate(
+            [jnp.ones((1,), jnp.bool_), part_sorted[1:] != part_sorted[:-1]])
+    else:
+        perm = jnp.argsort(okey, stable=True)
+        starts_mask = jnp.zeros((n,), jnp.bool_).at[0].set(True)
+
+    pos = jnp.arange(n)
+    # index of each row's partition start, in sorted coordinates
+    start_idx = jnp.maximum.accumulate(jnp.where(starts_mask, pos, 0))
+
+    if node.func in ("row_number", "rank"):
+        rn = pos - start_idx + 1
+        if node.func == "rank":
+            ok_sorted = okey[perm]
+            new_val = jnp.concatenate(
+                [jnp.ones((1,), jnp.bool_), ok_sorted[1:] != ok_sorted[:-1]])
+            new_val = new_val | starts_mask
+            rank_anchor = jnp.maximum.accumulate(jnp.where(new_val, pos, 0))
+            rn = rank_anchor - start_idx + 1
+        out_sorted = rn.astype(jnp.int32)
+    elif node.func == "cumsum":
+        v = jnp.where(mask, env[node.value_col], 0)[perm].astype(jnp.float32)
+        cs = jnp.cumsum(v)
+        seg_base = jnp.maximum.accumulate(jnp.where(starts_mask, cs - v, -jnp.inf))
+        out_sorted = cs - seg_base
+    else:  # moving_avg over trailing `frame` rows within the partition
+        k = max(int(node.frame), 1)
+        v = jnp.where(mask, env[node.value_col], 0)[perm].astype(jnp.float32)
+        cs = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(v)])
+        lo = jnp.maximum(pos - k + 1, start_idx)
+        wsum = cs[pos + 1] - cs[lo]
+        out_sorted = wsum / jnp.maximum(pos - lo + 1, 1)
+
+    out = jnp.zeros((n,), out_sorted.dtype).at[perm].set(out_sorted)
+    new_env = dict(env)
+    new_env[node.out_name] = out
+    return new_env, mask

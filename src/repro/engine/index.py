@@ -1,0 +1,81 @@
+"""Indexes: sorted-column secondary indexes + clustered primary order.
+
+AsterixDB's B-trees have no TPU analogue (pointer chasing); the TPU-native
+equivalent (DESIGN.md §2) is *sorted storage*: a secondary index is the
+sorted key column plus the row-id permutation, built per shard (AsterixDB's
+per-NC local indexes) so every probe is a vectorized ``searchsorted``:
+  * range COUNT   — two binary searches per shard + psum (index-only query)
+  * range + LIMIT — gather k row-ids from the sorted run (no scan)
+  * equi-join     — the build side is pre-sorted: merge-join without sorting
+Zone maps (per-block min/max) ride along for block skipping in the Pallas
+filter kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ZONE_BLOCK = 1024
+
+
+@dataclasses.dataclass
+class SortedIndex:
+    """Per-shard sorted view of one column (device arrays, possibly sharded).
+
+    ``sorted_keys[i]`` ascending within each shard; ``row_ids`` maps back to
+    base-table row positions (shard-local). Invalid (padding) rows sort to
+    the end via +inf sentinel and are excluded by ``num_valid``.
+    """
+
+    column: str
+    kind: str  # "primary" | "secondary"
+    sorted_keys: jax.Array  # (n,) per-shard-sorted
+    row_ids: jax.Array      # (n,) int32 shard-local positions
+    zone_min: jax.Array     # (n / ZONE_BLOCK,)
+    zone_max: jax.Array
+
+
+def _sentinel_max(dtype):
+    return jnp.array(np.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating)
+                     else np.iinfo(dtype).max, dtype)
+
+
+def build_index_local(keys: jax.Array, valid: jax.Array, column: str,
+                      kind: str = "secondary") -> SortedIndex:
+    """Single-shard build (wrapped in shard_map for sharded tables)."""
+    sk = jnp.where(valid, keys, _sentinel_max(keys.dtype))
+    order = jnp.argsort(sk)
+    sorted_keys = sk[order]
+    n = keys.shape[0]
+    pad = (-n) % ZONE_BLOCK
+    zk = jnp.pad(sorted_keys, (0, pad), constant_values=sorted_keys[-1] if n else 0)
+    zk = zk.reshape(-1, ZONE_BLOCK)
+    return SortedIndex(column, kind, sorted_keys, order.astype(jnp.int32),
+                       zk.min(axis=1), zk.max(axis=1))
+
+
+def index_count_local(ix_keys: jax.Array, num_valid: jax.Array, lo, hi) -> jax.Array:
+    """Range count on one shard's sorted keys (index-only)."""
+    lo_pos = jnp.searchsorted(ix_keys, lo, side="left") if lo is not None else jnp.int32(0)
+    hi_pos = jnp.searchsorted(ix_keys, hi, side="right") if hi is not None else num_valid
+    hi_pos = jnp.minimum(hi_pos, num_valid)
+    lo_pos = jnp.minimum(lo_pos, num_valid)
+    return jnp.maximum(hi_pos - lo_pos, 0).astype(jnp.int32)
+
+
+def index_head_rows_local(ix: SortedIndex, num_valid, lo, hi, k: int):
+    """First-k row ids in index order within [lo, hi] (for LIMIT pushdown).
+
+    Returns (row_ids (k,), found count). Static k — the gather the paper's
+    index-NL join would do per-probe, used here for indexed head()."""
+    lo_pos = jnp.searchsorted(ix.sorted_keys, lo, side="left") if lo is not None else jnp.int32(0)
+    hi_pos = jnp.searchsorted(ix.sorted_keys, hi, side="right") if hi is not None else num_valid
+    hi_pos = jnp.minimum(hi_pos, num_valid)
+    found = jnp.maximum(hi_pos - lo_pos, 0)
+    take = jnp.minimum(found, k)
+    idx = lo_pos + jnp.arange(k)
+    idx = jnp.minimum(idx, jnp.maximum(num_valid - 1, 0))
+    return ix.row_ids[idx], take

@@ -1,0 +1,196 @@
+"""Physical operators, XLA-SPMD flavor.
+
+Every streaming operator maps ``(env, mask) -> (env, mask)`` where ``env`` is
+a dict of equal-length columns and ``mask`` marks live rows (the vectorized-DB
+selection-vector idea — TPU has no dynamic shapes, so filters never compact;
+compaction happens only at LIMIT/TopK/collect boundaries).
+
+This module is written in plain jnp over (possibly) sharded arrays: under
+``jit`` XLA GSPMD inserts the collectives (psum for reductions, all-gathers
+for sorts). ``engine/distributed.py`` holds the explicit ``shard_map``
+versions with hand-scheduled collectives (the beyond-paper optimized mode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Env = dict[str, jax.Array]
+
+NEG = -(2**62)
+POS = 2**62
+
+
+def _minval(dtype):
+    return jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).min
+
+
+def _maxval(dtype):
+    return jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).max
+
+
+# -- streaming ops ------------------------------------------------------------
+
+
+def filter_(env: Env, mask: jax.Array, pred: jax.Array) -> tuple[Env, jax.Array]:
+    return env, mask & pred
+
+
+def project(env: Env, mask: jax.Array, outputs: Env) -> tuple[Env, jax.Array]:
+    return outputs, mask
+
+
+def limit(env: Env, mask: jax.Array, n: int) -> tuple[Env, jax.Array]:
+    """Compact the first ``n`` live rows into a length-``n`` table."""
+    idx = jnp.nonzero(mask, size=n, fill_value=mask.shape[0] - 1)[0]
+    found = jnp.minimum(jnp.sum(mask), n)
+    out = {k: v[idx] for k, v in env.items()}
+    new_mask = jnp.arange(n) < found
+    return out, new_mask
+
+
+def topk(env: Env, mask: jax.Array, key: str, k: int, ascending: bool) -> tuple[Env, jax.Array]:
+    col = env[key]
+    score = col.astype(jnp.float32) if not jnp.issubdtype(col.dtype, jnp.floating) else col
+    if ascending:
+        score = -score
+    score = jnp.where(mask, score, -jnp.inf)
+    _, idx = jax.lax.top_k(score, k)
+    found = jnp.minimum(jnp.sum(mask), k)
+    out = {kk: v[idx] for kk, v in env.items()}
+    return out, jnp.arange(k) < found
+
+
+def sort_full(env: Env, mask: jax.Array, key: str, ascending: bool) -> tuple[Env, jax.Array]:
+    col = env[key]
+    sk = jnp.where(mask, col, _maxval(col.dtype) if ascending else _minval(col.dtype))
+    order = jnp.argsort(sk, stable=True)
+    if not ascending:
+        # invalid rows were pushed to the min side; re-sort keeps them last
+        order = jnp.argsort(-sk.astype(jnp.float32), stable=True)
+    out = {k: v[order] for k, v in env.items()}
+    return out, mask[order]
+
+
+# -- terminal aggregates ------------------------------------------------------
+
+
+def agg_scalar(env: Env, mask: jax.Array, op: str, column: Optional[str]) -> jax.Array:
+    if op == "count":
+        if column is None:
+            return jnp.sum(mask, dtype=jnp.int32)
+        return jnp.sum(mask, dtype=jnp.int32)
+    col = env[column]
+    if op == "max":
+        return jnp.max(jnp.where(mask, col, _minval(col.dtype)))
+    if op == "min":
+        return jnp.min(jnp.where(mask, col, _maxval(col.dtype)))
+    if op == "sum":
+        return jnp.sum(jnp.where(mask, col, 0))
+    if op == "mean":
+        s = jnp.sum(jnp.where(mask, col, 0).astype(jnp.float32))
+        return s / jnp.maximum(jnp.sum(mask), 1)
+    raise ValueError(op)
+
+
+def group_agg(env: Env, mask: jax.Array, key: str, lo: int, num_groups: int,
+              aggs: list[tuple[str, str, Optional[str]]]) -> tuple[Env, jax.Array]:
+    """Bounded-domain group-by: group id = key - lo.
+
+    Aggregation is a segment reduction; on TPU the count/sum cases lower to a
+    one-hot matmul on the MXU (see kernels/segment_agg.py for the Pallas
+    version used by the optimized mode). Cross-shard merge: psum via GSPMD.
+    """
+    key_col = env[key]
+    gid = (key_col - lo).astype(jnp.int32)
+    gid = jnp.where(mask, gid, num_groups)  # dump dead rows in overflow bucket
+    out: Env = {key: jnp.arange(lo, lo + num_groups, dtype=key_col.dtype)}
+    counts = jax.ops.segment_sum(mask.astype(jnp.int32), gid, num_groups + 1)[:num_groups]
+    for out_name, op, column in aggs:
+        if op == "count":
+            out[out_name] = counts
+        elif op in ("sum", "mean"):
+            col = jnp.where(mask, env[column], 0)
+            s = jax.ops.segment_sum(col, gid, num_groups + 1)[:num_groups]
+            out[out_name] = (s / jnp.maximum(counts, 1)) if op == "mean" else s
+        elif op == "max":
+            col = jnp.where(mask, env[column], _minval(env[column].dtype))
+            out[out_name] = jax.ops.segment_max(col, gid, num_groups + 1)[:num_groups]
+        elif op == "min":
+            col = jnp.where(mask, env[column], _maxval(env[column].dtype))
+            out[out_name] = jax.ops.segment_min(col, gid, num_groups + 1)[:num_groups]
+        else:
+            raise ValueError(op)
+    return out, counts > 0
+
+
+# -- joins ---------------------------------------------------------------------
+
+
+def join_count(lkey: jax.Array, lmask: jax.Array, rkey: jax.Array, rmask: jax.Array) -> jax.Array:
+    """Exact inner-equi-join cardinality via sort + vectorized binary search.
+
+    TPU-native replacement for AsterixDB's hybrid-hash join: no hash table —
+    sort the build side (bitonic on TPU), then each probe row finds its match
+    run with two ``searchsorted`` calls; |run| = upper - lower. Correct for
+    arbitrary duplicates on both sides.
+    """
+    sentinel = _maxval(rkey.dtype)
+    rs = jnp.sort(jnp.where(rmask, rkey, sentinel))
+    n_r = jnp.sum(rmask)
+    lo = jnp.searchsorted(rs, lkey, side="left")
+    hi = jnp.searchsorted(rs, lkey, side="right")
+    hi = jnp.minimum(hi, n_r)  # sentinel region is not real data
+    cnt = jnp.where(lmask, jnp.maximum(hi - lo, 0), 0)
+    return jnp.sum(cnt, dtype=jnp.int32)
+
+
+def join_materialize(lenv: Env, lmask: jax.Array, renv: Env, rmask: jax.Array,
+                     left_on: str, right_on: str, suffix: str = "_r") -> tuple[Env, jax.Array]:
+    """Left-probe inner join, unique build keys (paper's Wisconsin unique1).
+
+    Each live left row gathers its single match from the right side; output
+    has the left side's length (static), mask = matched & live.
+    """
+    rkey = renv[right_on]
+    sentinel = _maxval(rkey.dtype)
+    skey = jnp.where(rmask, rkey, sentinel)
+    order = jnp.argsort(skey)
+    rs = skey[order]
+    lkey = lenv[left_on]
+    pos = jnp.searchsorted(rs, lkey, side="left")
+    pos = jnp.minimum(pos, rs.shape[0] - 1)
+    matched = (rs[pos] == lkey) & lmask
+    src = order[pos]
+    out = dict(lenv)
+    for k, v in renv.items():
+        name = k if k not in lenv else k + suffix
+        out[name] = v[src]
+    return out, matched
+
+
+# -- index access ---------------------------------------------------------------
+
+
+def index_range_count(sorted_keys: jax.Array, num_valid: jax.Array,
+                      lo: Optional[jax.Array], hi: Optional[jax.Array]) -> jax.Array:
+    """Index-only range count: two binary searches over the sorted key column
+    (paper expression 11 with ``AFrame Index`` — the order-of-magnitude win)."""
+    lo_pos = jnp.searchsorted(sorted_keys, lo, side="left") if lo is not None else jnp.int32(0)
+    hi_pos = jnp.searchsorted(sorted_keys, hi, side="right") if hi is not None else num_valid
+    hi_pos = jnp.minimum(hi_pos, num_valid)
+    lo_pos = jnp.minimum(lo_pos, num_valid)
+    return jnp.maximum(hi_pos - lo_pos, 0).astype(jnp.int32)
+
+
+def index_range_mask(keys: jax.Array, valid: jax.Array,
+                     lo: Optional[jax.Array], hi: Optional[jax.Array]) -> jax.Array:
+    m = valid
+    if lo is not None:
+        m = m & (keys >= lo)
+    if hi is not None:
+        m = m & (keys <= hi)
+    return m

@@ -1,0 +1,184 @@
+"""Session: the client's connection to the engine (the paper's AsterixDB
+REST endpoint analogue). Owns the catalog, the mesh, the executable cache,
+and the timing hooks the DataFrame benchmark reads (creation time vs
+expression time, paper §IV-D).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import plan as P
+from repro.core.catalog import Catalog, Dataset, IndexInfo, open_widen
+from repro.core.compiler import CompiledQuery, ExecContext, compile_plan
+from repro.core.optimizer import optimize
+from repro.engine.table import Table
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.sharding import PartitionSpec as PS
+
+
+class Session:
+    def __init__(self, mesh: Optional[Mesh] = None, mode: str = "auto",
+                 data_axes: tuple[str, ...] = ("data",),
+                 enable_index: bool = True, enable_pushdown: bool = True):
+        """mode: 'auto' (shard_map when a mesh is given), 'gspmd',
+        'shard_map', or 'local'."""
+        self.catalog = Catalog()
+        self.mesh = mesh
+        if mode == "auto":
+            mode = "shard_map" if mesh is not None and mesh.devices.size > 1 else "gspmd"
+        self.mode = mode
+        self.data_axes = data_axes
+        self.enable_index = enable_index
+        self.enable_pushdown = enable_pushdown
+        self._cache: dict[str, CompiledQuery] = {}
+        self.timings: dict[str, float] = {}
+        self.stats = {"compiles": 0, "hits": 0}
+
+    # -- DDL ----------------------------------------------------------------
+
+    def create_dataset(self, name: str, table: Table, dataverse: str = "Default",
+                       closed: bool = True, indexes: Sequence[str] = (),
+                       primary: Optional[str] = None) -> Dataset:
+        """Register (and shard) a dataset; optionally build indexes.
+
+        ``primary`` sorts the stored table by that column (clustered);
+        ``indexes`` build secondary sorted indexes per shard."""
+        t0 = time.perf_counter()
+        table = _collect_stats(table)  # DBMS-style stats on load
+        if not closed:
+            table = open_widen(table)
+        if primary is not None:
+            order = np.argsort(np.asarray(table.columns[primary]), kind="stable")
+            cols = {k: np.asarray(v)[order] for k, v in table.columns.items()}
+            meta = dict(table.meta)
+            m = meta[primary]
+            meta[primary] = type(m)(m.dtype, m.lo, m.hi, m.distinct, m.is_string, True)
+            table = Table(cols, meta, table.num_rows)
+        if self.mesh is not None:
+            table = table.shard(self.mesh, self.data_axes)
+        ds = Dataset(name=name, dataverse=dataverse, table=table, closed=closed)
+        if primary is not None:
+            ds.indexes["primary"] = self._build_index(table, primary, "primary")
+        for col in indexes:
+            ds.indexes[f"ix_{col}"] = self._build_index(table, col, "secondary")
+        self.catalog.register(ds)
+        self.timings[f"create:{dataverse}.{name}"] = time.perf_counter() - t0
+        return ds
+
+    def _build_index(self, table: Table, column: str, kind: str) -> IndexInfo:
+        from repro.engine.index import build_index_local
+
+        keys = table.columns[column]
+        valid = table.valid
+        if self.mesh is not None and self.mesh.devices.size > 1:
+            dp = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+            def build(k, v):
+                ix = build_index_local(k, v, column, kind)
+                return ix.sorted_keys, ix.row_ids
+
+            sk, rid = jax.jit(_shard_map(
+                build, mesh=self.mesh,
+                in_specs=(PS(dp), PS(dp)),
+                out_specs=(PS(dp), PS(dp))))(keys, valid)
+        else:
+            def build1(k, v):
+                ix = build_index_local(k, v, column, kind)
+                return ix.sorted_keys, ix.row_ids
+
+            sk, rid = jax.jit(build1)(keys, valid)
+        return IndexInfo(name=f"{kind}:{column}", column=column, kind=kind,
+                         sorted_keys=sk, row_ids=rid)
+
+    # -- query execution -------------------------------------------------------
+
+    def exec_context(self) -> ExecContext:
+        return ExecContext(catalog=self.catalog, mesh=self.mesh,
+                           data_axes=self.data_axes, mode=self.mode)
+
+    def execute(self, plan: P.Plan):
+        """Optimize → compile (cached by fingerprint) → run → numpy-ify."""
+        t0 = time.perf_counter()
+        opt = optimize(plan, self.catalog, enable_index=self.enable_index,
+                       enable_pushdown=self.enable_pushdown)
+        fp = opt.fingerprint()
+        cq = self._cache.get(fp)
+        if cq is None:
+            cq = compile_plan(opt, self.exec_context())
+            self._cache[fp] = cq
+            self.stats["compiles"] += 1
+            lits = cq.lits
+        else:
+            self.stats["hits"] += 1
+            # rebind this plan instance's literal values to the cached slots
+            from repro.core.expr import collect_params
+            from repro.core.plan import all_exprs
+            lits = collect_params(all_exprs(opt))
+        out = cq.run(self.catalog, lits=lits)
+        out = jax.block_until_ready(out)
+        self.timings["last_execute"] = time.perf_counter() - t0
+        self.last_optimized = opt
+        if cq.kind == "scalar":
+            vals = {k: np.asarray(v).item() for k, v in out.items()}
+            return vals if len(vals) > 1 else next(iter(vals.values()))
+        env, mask = out
+        return _materialize(env, mask, cq.kind)
+
+    def persist(self, plan: P.Plan, name: str, dataverse: str = "Default") -> Dataset:
+        """CREATE DATASET AS <query> — result stays engine-resident (paper
+        Input 15: no data ever leaves storage)."""
+        opt = optimize(plan, self.catalog, enable_index=self.enable_index,
+                       enable_pushdown=self.enable_pushdown)
+        cq = compile_plan(opt, self.exec_context())
+        out = cq.run(self.catalog)
+        if cq.kind == "scalar":
+            raise ValueError("cannot persist a scalar result")
+        env, mask = out
+        cols = dict(env)
+        cols["__valid__"] = mask
+        table = _collect_stats(Table(cols, num_rows=int(mask.shape[0])))
+        ds = Dataset(name=name, dataverse=dataverse, table=table, closed=True)
+        self.catalog.register(ds)
+        return ds
+
+
+def _collect_stats(table: Table) -> Table:
+    """Fill missing lo/hi/distinct for integer columns (the statistics a DBMS
+    gathers at load; the bounded-domain group-by and index selection read
+    them from the catalog)."""
+    from repro.engine.table import ColumnMeta
+
+    meta = dict(table.meta)
+    for name, col in table.columns.items():
+        if name == "__valid__":
+            continue
+        m = meta.get(name)
+        if m is not None and m.lo is not None:
+            continue
+        a = np.asarray(col)
+        if a.ndim == 1 and np.issubdtype(a.dtype, np.integer) and a.size:
+            lo, hi = int(a.min()), int(a.max())
+            distinct = min(hi - lo + 1, a.size)
+            meta[name] = ColumnMeta(a.dtype, lo, hi, distinct)
+    return Table(table.columns, meta, table.num_rows)
+
+
+def _materialize(env: dict, mask, kind: str) -> dict[str, np.ndarray]:
+    """Compact to valid rows on the host (result delivery boundary)."""
+    m = np.asarray(mask)
+    out = {}
+    for k, v in env.items():
+        a = np.asarray(v)
+        out[k] = a[m]
+    return out

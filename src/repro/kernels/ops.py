@@ -1,0 +1,220 @@
+"""Public kernel ops: backend dispatch + the flash custom_vjp.
+
+``flash_attention`` is the training-grade op: forward via the Pallas kernel
+(TPU) or an XLA online-softmax twin (same math, used where Pallas cannot
+compile — e.g. the CPU-hosted dry-run); EITHER way the custom_vjp saves only
+(q, k, v, out, lse) and the backward *recomputes* probabilities blockwise —
+no (Sq × Skv) probability tensor is ever stored. Swapping the models'
+attention onto this op is §Perf iteration 1 (memory-roofline win).
+
+Backend selection: ``backend="auto"`` uses Pallas-interpret on CPU (kernel
+semantics validated everywhere) and compiled Pallas on TPU; "xla" forces the
+jnp twin (what the dry-run lowers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode as _flash_decode_pallas
+from repro.kernels.filter_count import filter_count as _filter_count
+from repro.kernels.flash_attention import flash_mha_fwd as _flash_fwd_pallas
+from repro.kernels.merge_join import merge_join_count as _merge_join
+from repro.kernels.segment_agg import segment_agg as _segment_agg
+from repro.kernels.topk_mask import topk_merge as _topk_merge
+
+_DEFAULT_BACKEND = "xla"
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("xla", "pallas")
+    _DEFAULT_BACKEND = name
+
+
+def _use_pallas(backend: Optional[str]) -> bool:
+    b = backend or _DEFAULT_BACKEND
+    return b == "pallas"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# -- relational kernels ------------------------------------------------------------
+
+def filter_count(cols, bounds, n_valid, backend: Optional[str] = None):
+    if _use_pallas(backend):
+        return _filter_count(cols, bounds, n_valid, interpret=_interpret())
+    return ref.filter_count(cols, bounds, n_valid)
+
+
+def segment_agg(values, gids, num_groups, n_valid, backend: Optional[str] = None):
+    if _use_pallas(backend):
+        return _segment_agg(values, gids, num_groups, n_valid,
+                            interpret=_interpret())
+    return ref.segment_agg(values, gids, num_groups, n_valid)
+
+
+def merge_join_count(lkeys, rkeys, nl, nr, backend: Optional[str] = None):
+    if _use_pallas(backend):
+        return _merge_join(lkeys, rkeys, nl, nr, interpret=_interpret())
+    return ref.merge_join_count(lkeys, rkeys, nl, nr)
+
+
+def topk(scores, mask, n_valid, k, backend: Optional[str] = None):
+    if _use_pallas(backend):
+        return _topk_merge(scores, mask, n_valid, k, interpret=_interpret())
+    v, i = ref.block_topk(scores, mask, scores.shape[0])  # pragma: no cover
+    raise NotImplementedError
+
+
+# -- flash attention (training-grade custom_vjp) -------------------------------------
+
+
+def _xla_flash_fwd(q, k, v, causal: bool, bq: int):
+    """Online-softmax forward in plain jnp (scan over q blocks), emitting
+    (out, lse) — identical contract to the Pallas kernel."""
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    bq = min(bq, Sq)
+    nqb = Sq // bq
+    rem = Sq - nqb * bq
+    kg = k.astype(jnp.float32)
+    vg = v.astype(jnp.float32)
+
+    def one(qc, qpos):
+        qq = qc.reshape(B, KV, G, -1, D).astype(jnp.float32) * scale
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qq, kg)
+        if causal:
+            m = qpos[:, None] >= jnp.arange(Skv)[None, :]
+            s = jnp.where(m[None, None, None], s, -1e30)
+        mx = jnp.max(s, axis=-1)
+        p = jnp.exp(s - mx[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgqs,bksd->bkgqd", p, vg) / jnp.maximum(l, 1e-30)[..., None]
+        lse = mx + jnp.log(jnp.maximum(l, 1e-30))
+        qlen = qq.shape[3]
+        return o.reshape(B, H, qlen, D), lse.reshape(B, H, qlen)
+
+    outs, lses = [], []
+    if nqb:
+        qs = q[:, :, : nqb * bq].reshape(B, H, nqb, bq, D).transpose(2, 0, 1, 3, 4)
+        ps = jnp.arange(nqb * bq).reshape(nqb, bq)
+
+        def body(_, xs):
+            qc, pp = xs
+            o, ls = one(qc.transpose(0, 1, 2, 3), pp)
+            return None, (o, ls)
+
+        _, (o_s, l_s) = jax.lax.scan(body, None, (qs, ps))
+        outs.append(o_s.transpose(1, 2, 0, 3, 4).reshape(B, H, nqb * bq, D))
+        lses.append(l_s.transpose(1, 2, 0, 3).reshape(B, H, nqb * bq))
+    if rem:
+        o, ls = one(q[:, :, nqb * bq:], jnp.arange(nqb * bq, Sq))
+        outs.append(o)
+        lses.append(ls)
+    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+    lse = jnp.concatenate(lses, axis=2) if len(lses) > 1 else lses[0]
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 512,
+                    backend: str = "xla"):
+    """GQA attention, O(S) residuals. q: (B,H,Sq,D); k,v: (B,KV,Skv,D)."""
+    out, _ = _flash_fwd_dispatch(q, k, v, causal, bq, backend)
+    return out
+
+
+def _flash_fwd_dispatch(q, k, v, causal, bq, backend):
+    if backend == "pallas":
+        return _flash_fwd_pallas(q, k, v, causal=causal, bq=min(bq, q.shape[2]),
+                                 interpret=_interpret())
+    return _xla_flash_fwd(q, k, v, causal, bq)
+
+
+def _flash_fwd_rule(q, k, v, causal, bq, backend):
+    out, lse = _flash_fwd_dispatch(q, k, v, causal, bq, backend)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, bq, backend, res, do):
+    """Recompute-probabilities backward, blocked over q chunks (no (Sq×Skv)
+    residual). Standard flash equations with the saved lse."""
+    q, k, v, out, lse = res
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    bq_ = min(bq, Sq)
+    nqb = Sq // bq_
+    rem = Sq - nqb * bq_
+
+    def chunk_grads(qc, oc, dc, lc, qpos):
+        qf = qc.reshape(B, KV, G, -1, D).astype(jnp.float32)
+        of = oc.reshape(B, KV, G, -1, D).astype(jnp.float32)
+        df = dc.reshape(B, KV, G, -1, D).astype(jnp.float32)
+        lf = lc.reshape(B, KV, G, -1)
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qf * scale, kf)
+        if causal:
+            m = qpos[:, None] >= jnp.arange(Skv)[None, :]
+            s = jnp.where(m[None, None, None], s, -1e30)
+        p = jnp.exp(s - lf[..., None])  # exact probs from lse
+        dp = jnp.einsum("bkgqd,bksd->bkgqs", df, vf)
+        delta = jnp.sum(df * of, axis=-1)  # (B,KV,G,q)
+        ds = p * (dp - delta[..., None])
+        dqc = jnp.einsum("bkgqs,bksd->bkgqd", ds, kf) * scale
+        dkc = jnp.einsum("bkgqs,bkgqd->bksd", ds, qf) * scale
+        dvc = jnp.einsum("bkgqs,bkgqd->bksd", p, df)
+        return dqc.reshape(B, H, -1, D), dkc, dvc
+
+    dq_parts = []
+    dk = jnp.zeros((B, KV, Skv, D), jnp.float32)
+    dv = jnp.zeros((B, KV, Skv, D), jnp.float32)
+    if nqb:
+        def split4(a):
+            return a[:, :, : nqb * bq_].reshape(B, H, nqb, bq_, D).transpose(2, 0, 1, 3, 4)
+
+        qs = split4(q)
+        os_ = split4(out)
+        dos = split4(do)
+        ls = lse[:, :, : nqb * bq_].reshape(B, H, nqb, bq_).transpose(2, 0, 1, 3)
+        ps = jnp.arange(nqb * bq_).reshape(nqb, bq_)
+
+        def body(carry, xs):
+            dk_, dv_ = carry
+            qc, oc, dc, lc, pp = xs
+            dqc, dkc, dvc = chunk_grads(qc, oc, dc, lc, pp)
+            return (dk_ + dkc, dv_ + dvc), dqc
+
+        (dk, dv), dq_s = jax.lax.scan(body, (dk, dv), (qs, os_, dos, ls, ps))
+        dq_parts.append(dq_s.transpose(1, 2, 0, 3, 4).reshape(B, H, nqb * bq_, D))
+    if rem:
+        dqc, dkc, dvc = chunk_grads(q[:, :, nqb * bq_:], out[:, :, nqb * bq_:],
+                                    do[:, :, nqb * bq_:], lse[:, :, nqb * bq_:],
+                                    jnp.arange(nqb * bq_, Sq))
+        dk = dk + dkc
+        dv = dv + dvc
+        dq_parts.append(dqc)
+    dq = jnp.concatenate(dq_parts, axis=2) if len(dq_parts) > 1 else dq_parts[0]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_decode(q, k, v, lengths, backend: Optional[str] = None):
+    """Single-token decode attention. q: (B,H,D); k,v: (B,KV,S,D)."""
+    if _use_pallas(backend):
+        return _flash_decode_pallas(q, k, v, lengths, interpret=_interpret())
+    return ref.decode_attention(q, k, v, lengths)

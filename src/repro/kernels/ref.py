@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the semantic specification; kernels/<name>.py must match it
+for all shapes/dtypes the tests sweep (interpret=True on CPU, compiled on
+real TPUs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def filter_count(cols: jax.Array, bounds: jax.Array, n_valid) -> jax.Array:
+    """cols: (k, n) int32; bounds: (k, 2) int32 [lo, hi] inclusive.
+    Count of rows i < n_valid with AND_k (lo_k <= cols[k, i] <= hi_k)."""
+    k, n = cols.shape
+    m = jnp.arange(n) < n_valid
+    ok = jnp.all((cols >= bounds[:, :1]) & (cols <= bounds[:, 1:2]), axis=0)
+    return jnp.sum(ok & m, dtype=jnp.int32)
+
+
+def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int,
+                n_valid) -> jax.Array:
+    """values: (n, c) f32; gids: (n,) int32. Per-group column sums (G, c)."""
+    n = values.shape[0]
+    m = (jnp.arange(n) < n_valid) & (gids >= 0) & (gids < num_groups)
+    safe = jnp.where(m, gids, num_groups)
+    v = jnp.where(m[:, None], values, 0.0)
+    return jax.ops.segment_sum(v, safe, num_segments=num_groups + 1)[:num_groups]
+
+
+def merge_join_count(lkeys: jax.Array, rkeys: jax.Array, nl, nr) -> jax.Array:
+    """Sorted equi-join cardinality: Σ_{i<nl, j<nr} [lkeys_i == rkeys_j]."""
+    lm = jnp.arange(lkeys.shape[0]) < nl
+    rm = jnp.arange(rkeys.shape[0]) < nr
+    eq = (lkeys[:, None] == rkeys[None, :]) & lm[:, None] & rm[None, :]
+    return jnp.sum(eq, dtype=jnp.int32)
+
+
+def block_topk(scores: jax.Array, mask: jax.Array, k: int, block: int):
+    """Per-block top-k: scores (n,) split into n/block blocks; returns
+    (values (nb, k), global indices (nb, k)); masked-out -> -inf."""
+    n = scores.shape[0]
+    nb = n // block
+    s = jnp.where(mask, scores.astype(jnp.float32), -jnp.inf).reshape(nb, block)
+    v, i = jax.lax.top_k(s, k)
+    return v, i + (jnp.arange(nb) * block)[:, None]
+
+
+def mha(q, k, v, *, causal: bool = True, scale=None, pos_offset: int = 0):
+    """GQA attention oracle. q: (B,H,Sq,D); k,v: (B,KV,Skv,D). fp32 softmax."""
+    B, H, Sq, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Skv = k.shape[2]
+        qpos = jnp.arange(Sq) + pos_offset
+        mask = qpos[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def decode_attention(q, k, v, lengths):
+    """Flash-decode oracle. q: (B,H,D); k,v: (B,KV,S,D); lengths: (B,) valid
+    cache length per sequence. Returns (B,H,D)."""
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    m = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(m[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,64 @@
+"""Group-by aggregation as one-hot matmul — the MXU segment reduction
+(paper expressions 4/8; also the MoE combine primitive).
+
+Per grid step: a (BLOCK,) tile of group ids becomes a (G, BLOCK) one-hot
+matrix multiplied against the (BLOCK, C) value tile on the MXU, accumulating
+(G, C) partial sums in the output block (revisited every step — Pallas keeps
+it resident in VMEM). Bounded-domain keys (Wisconsin mod-columns, MoE expert
+ids) make G small, so the one-hot GEMM beats scatter-adds on TPU, which has
+no efficient random-access memory path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048
+
+
+def _kernel(nvalid_ref, gid_ref, val_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    gids = gid_ref[0, :]  # (BLOCK,)
+    vals = val_ref[...]   # (BLOCK, C)
+    b = gids.shape[0]
+    G = out_ref.shape[0]
+    base = step * b
+    live = (base + jax.lax.broadcasted_iota(jnp.int32, (b,), 0)) < nvalid_ref[0, 0]
+    live = live & (gids >= 0) & (gids < G)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (G, b), 0) == gids[None, :])
+    onehot = onehot.astype(jnp.float32) * live[None, :].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot(onehot, vals.astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "block", "interpret"))
+def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int, n_valid,
+                *, block: int = BLOCK, interpret: bool = True) -> jax.Array:
+    """values: (n, c) f32; gids: (n,) int32 -> (num_groups, c) sums."""
+    n, c = values.shape
+    pad = (-n) % block
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        gids = jnp.pad(gids, (0, pad))
+    nb = values.shape[0] // block
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((block, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_groups, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, c), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
+      gids.astype(jnp.int32).reshape(1, -1), values)

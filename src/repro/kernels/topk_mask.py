@@ -1,0 +1,74 @@
+"""Masked per-block top-k (paper expression 9: ORDER BY ... LIMIT k).
+
+Distributed top-k never sorts the dataset: each block yields its k local
+maxima (k rounds of max + mask-out on the VPU — k is tiny, LIMIT 5 in the
+benchmark), the (n/BLOCK, k) candidates merge with one small host-side
+top_k. The kernel emits (values, global row indices) per block; dead rows
+enter as -inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+NEG = float("-inf")
+
+
+def _kernel(nvalid_ref, scores_ref, mask_ref, vals_ref, idx_ref):
+    step = pl.program_id(0)
+    s = scores_ref[0, :].astype(jnp.float32)
+    m = mask_ref[0, :]
+    b = s.shape[0]
+    base = step * b
+    live = ((base + jax.lax.broadcasted_iota(jnp.int32, (b,), 0)) < nvalid_ref[0, 0])
+    s = jnp.where(m & live, s, NEG)
+    k = vals_ref.shape[1]
+    for kk in range(k):  # k is static & small
+        v = jnp.max(s)
+        a = jnp.argmax(s).astype(jnp.int32)
+        vals_ref[0, kk] = v
+        idx_ref[0, kk] = base + a
+        s = jnp.where(jax.lax.broadcasted_iota(jnp.int32, (b,), 0) == a, NEG, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def block_topk(scores: jax.Array, mask: jax.Array, n_valid, k: int,
+               *, block: int = BLOCK, interpret: bool = True):
+    """scores (n,), mask (n,) -> (values (nb, k), indices (nb, k))."""
+    n = scores.shape[0]
+    pad = (-n) % block
+    if pad:
+        scores = jnp.pad(scores, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    nb = scores.shape[0] // block
+    vals, idx = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, k), jnp.float32),
+                   jax.ShapeDtypeStruct((nb, k), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
+      scores.astype(jnp.float32).reshape(1, -1), mask.reshape(1, -1))
+    return vals, idx
+
+
+def topk_merge(scores, mask, n_valid, k: int, *, block: int = BLOCK,
+               interpret: bool = True):
+    """Full top-k: block_topk + one small merge (the k×nb candidate set)."""
+    vals, idx = block_topk(scores, mask, n_valid, k, block=block,
+                           interpret=interpret)
+    flat_v = vals.reshape(-1)
+    flat_i = idx.reshape(-1)
+    top_v, pos = jax.lax.top_k(flat_v, k)
+    return top_v, flat_i[pos]

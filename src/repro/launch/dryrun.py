@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against the production mesh and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the host device count at first init, and 512 placeholder CPU devices are what
+lets ``jax.make_mesh`` build the 2×16×16 production mesh in this container.
+Nothing else in the repo sets this flag (smoke tests and benches see 1 dev).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both] [--skip-done]
+
+Each cell writes results/dryrun/<mesh>/<arch>__<shape>.json with
+memory_analysis, cost_analysis, the per-collective HLO byte breakdown, and
+the derived roofline terms (EXPERIMENTS.md §Dry-run / §Roofline read these).
+"""
+import argparse
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# -- TPU v5e hardware model (targets; this container is CPU-only) ---------------
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (assignment constant)
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "multipod" if multi_pod else "pod"
+
+
+# -- HLO collective parsing ------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|f64|s32|s8|u8|u32|s64|u64|pred|s16|u16)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_COLL_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+)\s*=\s*(?:\([^)]*\)|[\w\[\],{}: ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Sum the byte sizes of the result shapes on an HLO line (post-SPMD these
+    are *per-device* shapes)."""
+    total = 0
+    # result part is before the op name's '('; take shapes up to the '=' rhs op
+    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split("(", 1)[0]
+    for m in _SHAPE_RE.finditer(lhs):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# wire-byte multiplier per op kind (ring algorithms, group size g):
+#   all-gather: each device receives (g-1)/g of the result       -> ~1x result
+#   all-reduce: reduce-scatter + all-gather                      -> ~2x
+#   reduce-scatter: sends (g-1)/g of the (larger) operand; the result shape is
+#     already 1/g so ~g x result ≈ operand — we approximate with operand ≈
+#     result × g unavailable, use 1x result (lower bound) and record kind.
+_WIRE_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-op-kind result-shape bytes (per device) from post-SPMD HLO."""
+    by_kind: dict[str, dict] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:  # async pair: count the -start only
+            continue
+        kind = m.group(1)
+        b = _first_shape_bytes(line)
+        rec = by_kind.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    total_wire = sum(_WIRE_MULT[k] * v["bytes"] for k, v in by_kind.items())
+    return {"by_kind": by_kind, "wire_bytes_per_device": total_wire}
+
+
+# -- cell lowering ----------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None) -> dict:
+    import dataclasses
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.launch.mesh import MeshAxes, make_production_mesh
+    from repro.models import registry, steps
+    from repro.models.config import SHAPES, cell_applicable
+    from repro.models.optim import OptimConfig
+    from repro.models.sharding import sharding_ctx
+
+    cfg = get_config(arch)
+    if overrides:
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(cfg, k)
+            typed[k] = type(cur)(v) if cur is not None and not isinstance(cur, str) else v
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+                "status": "skipped", "reason": why}
+    cfg = registry.shape_adjusted_cfg(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = MeshAxes.for_mesh(mesh)
+    chips = mesh.devices.size
+
+    from repro.models.sharding import sanitize_spec_tree
+
+    def ns(spec_tree, abstract_tree):
+        """Shardings sanitized against actual shapes (jit in_shardings
+        rejects uneven partitions — e.g. whisper's 51865 vocab, batch=1)."""
+        clean = sanitize_spec_tree(spec_tree, abstract_tree, mesh)
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), clean,
+            is_leaf=lambda x: isinstance(x, P))
+
+    params_abs = registry.abstract_params(cfg)
+    pspecs = registry.params_pspecs(cfg, axes)
+    api = registry.get_api(cfg)
+    if shape.kind != "train" and cfg.serve_params_dtype == "bf16":
+        import jax.numpy as jnp
+
+        params_abs = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if len(s.shape) >= 2 else s, params_abs)
+    t0 = time.time()
+
+    with sharding_ctx(mesh, axes):
+        if shape.kind == "train":
+            from repro.models.optim import init_opt_state
+
+            step = steps.make_train_step(cfg, OptimConfig())
+            opt_abs = jax.eval_shape(init_opt_state, params_abs)
+            opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+            batch_abs = registry.batch_specs(cfg, shape.global_batch, shape.seq_len)
+            bspecs = registry.batch_pspecs(cfg, axes)
+            jitted = jax.jit(step,
+                             in_shardings=(ns(pspecs, params_abs),
+                                           ns(opt_specs, opt_abs),
+                                           ns(bspecs, batch_abs)),
+                             out_shardings=(ns(pspecs, params_abs),
+                                            ns(opt_specs, opt_abs), None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            clen = registry.prefill_cache_len(cfg, shape.seq_len)
+            step = steps.make_prefill_step(cfg, max_len=clen)
+            batch_abs = registry.batch_specs(cfg, shape.global_batch, shape.seq_len)
+            bspecs = registry.batch_pspecs(cfg, axes)
+            cache_abs = api.make_cache(cfg, shape.global_batch, clen, abstract=True)
+            cspecs = registry.cache_pspecs(cfg, axes)
+            jitted = jax.jit(step,
+                             in_shardings=(ns(pspecs, params_abs),
+                                           ns(bspecs, batch_abs)),
+                             out_shardings=(ns(cspecs, cache_abs), None))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode: one new token against a seq_len-deep cache
+            step = steps.make_decode_step(cfg)
+            tok_abs, cache_abs = registry.decode_specs(cfg, shape.global_batch,
+                                                       shape.seq_len)
+            cspecs = registry.cache_pspecs(cfg, axes)
+            tok_sharding = ns({"tokens": P(axes.data, None)}, tok_abs)["tokens"]
+            jitted = jax.jit(step,
+                             in_shardings=(ns(pspecs, params_abs),
+                                           ns(cspecs, cache_abs), tok_sharding),
+                             out_shardings=(ns(cspecs, cache_abs), None),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, tok_abs["tokens"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {k: int(getattr(mem, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes")
+                   if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        mem_rec = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        cost_rec = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and
+                    (k in ("flops", "bytes accessed", "optimal_seconds")
+                     or k.startswith("bytes accessed"))}
+    except Exception as e:  # pragma: no cover
+        cost_rec = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    from repro.launch import hlocost
+
+    model = hlocost.analyze(hlo)  # trip-count-corrected, per chip
+    coll = model["collectives"]
+
+    # -- roofline terms (per chip; the SPMD module's shapes are per-chip).
+    # NOTE: XLA's executable.cost_analysis() counts while bodies once, so the
+    # flops/bytes here come from launch/hlocost.py (trip-count aware); the raw
+    # cost_analysis record is kept for reference.
+    flops = model["flops"]
+    bytes_acc = model["bytes"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll["wire_bytes_per_device"] / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+
+    # MODEL_FLOPS: 6·N·D train, 2·N·D forward (prefill), 2·N·B decode
+    n_params = cfg.n_active_params() if cfg.moe else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_params * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_params * tokens
+    else:
+        model_flops = 2 * n_params * shape.global_batch
+    model_flops_per_chip = model_flops / chips
+    useful_ratio = model_flops_per_chip / flops if flops else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_rec, "cost_analysis_raw": cost_rec,
+        "hlo_model": {"flops": flops, "bytes": bytes_acc},
+        "collectives": coll,
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant,
+            "model_flops_total": model_flops,
+            "model_flops_per_chip": model_flops_per_chip,
+            "useful_flop_ratio": useful_ratio,
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             overrides: dict | None = None) -> dict:
+    rec = lower_cell(arch, shape_name, multi_pod, overrides)
+    if overrides:
+        rec["overrides"] = overrides
+    out = out_dir / _mesh_tag(multi_pod) / f"{arch}__{shape_name}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VALUE",
+                    help="ArchConfig override (perf iterations), e.g. "
+                         "--set attn_impl=flash")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multipod"]
+    overrides = dict(kv.split("=", 1) for kv in args.set) or None
+
+    if not args.all:
+        assert args.arch and args.shape
+        for mp in meshes:
+            rec = run_cell(args.arch, args.shape, mp, out_dir, overrides)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" compile={rec['compile_s']}s dominant={r['dominant']}"
+                         f" terms=({r['compute_s']:.4f},{r['memory_s']:.4f},"
+                         f"{r['collective_s']:.4f})s useful={r['useful_flop_ratio']:.2f}")
+            print(f"[{rec['mesh']}] {args.arch} × {args.shape}: {status}{extra}")
+        return 0
+
+    # --all: one fresh subprocess per cell (isolation against compiler state)
+    from repro.configs import ALL_ARCHS
+    from repro.models.config import SHAPES
+
+    failures = []
+    for mp in meshes:
+        for arch in ALL_ARCHS:
+            for shape_name in SHAPES:
+                dest = out_dir / _mesh_tag(mp) / f"{arch}__{shape_name}.json"
+                if args.skip_done and dest.exists():
+                    try:
+                        if json.loads(dest.read_text()).get("status") in ("ok", "skipped"):
+                            continue
+                    except Exception:
+                        pass
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--mesh", "multipod" if mp else "pod", "--out", str(out_dir)]
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                sys.stdout.write(r.stdout)
+                if r.returncode != 0:
+                    failures.append((arch, shape_name, _mesh_tag(mp)))
+                    dest.parent.mkdir(parents=True, exist_ok=True)
+                    dest.write_text(json.dumps({
+                        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(mp),
+                        "status": "error", "stderr": r.stderr[-4000:],
+                        "elapsed_s": round(time.time() - t0, 1)}, indent=2))
+                    sys.stdout.write(f"[{_mesh_tag(mp)}] {arch} × {shape_name}: ERROR\n")
+                sys.stdout.flush()
+    if failures:
+        print(f"{len(failures)} failures: {failures}")
+        return 1
+    print("all cells ok")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)

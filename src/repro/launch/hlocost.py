@@ -1,0 +1,341 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's built-in ``Executable.cost_analysis()`` counts a ``while`` body ONCE,
+so any scan-over-layers model is undercounted by ~L× (verified empirically —
+see EXPERIMENTS.md §Dry-run methodology). This module re-derives the three
+roofline inputs from ``compiled.as_text()`` with loop bodies multiplied by
+their ``known_trip_count`` backend annotation:
+
+  * flops            — 2·M·N·K for dots (batch dims included), 1/elem for
+                       elementwise arithmetic, operand-size for reductions
+  * bytes            — fusion-aware: a fusion reads its operands and writes
+                       its result; internals stay in registers/VMEM
+  * collective bytes — per-kind result-shape bytes (per-device, since the
+                       module is already SPMD-partitioned) × ring multiplier
+
+Everything is *per chip*: post-partitioning shapes are per-device shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+                "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _dtype_bytes(dt: str) -> int:
+    return _DTYPE_BYTES.get(dt, 1)  # f8* and friends default to 1
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"(?:branch_computations|true_computation|false_computation)=\{?%?([\w.\-,% ]+)\}?")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "and", "or", "xor", "not", "compare", "select", "clamp", "convert",
+    "exponential", "exponential-minus-one", "tanh", "sine", "cosine", "sqrt",
+    "rsqrt", "log", "log-plus-one", "power", "remainder", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "is-finite", "atan2",
+    "logistic", "cbrt", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "popcnt", "erf",
+}
+ZERO_BYTES = {"parameter", "get-tuple-element", "tuple", "bitcast",
+              "after-all", "partition-id", "replica-id", "add-dependency",
+              "opt-barrier"}
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all"}
+WIRE_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+             "all-to-all": 1.0, "collective-permute": 1.0,
+             "ragged-all-to-all": 1.0}
+
+
+def _shapes_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _dtype_bytes(m.group(1))
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _shape_elems(type_str: str) -> int:
+    n = 1
+    for d in _shape_dims(type_str):
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += int(v * mult)
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[Op]] = {}
+        self._parse(hlo_text)
+        self._memo: dict[str, Totals] = {}
+        self.entry = self._entry_name(hlo_text)
+
+    def _parse(self, text: str):
+        current = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+            if mc:
+                current = mc.group(1)
+                self.comps[current] = []
+                continue
+            if current is None:
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            mo = _OP_RE.match(line)
+            if mo:
+                self.comps[current].append(Op(mo.group(1), mo.group(2),
+                                              mo.group(3), mo.group(4)))
+
+    @staticmethod
+    def _entry_name(text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)\s*\(", text, re.M)
+        return m.group(1) if m else next(iter([]), "")
+
+    # -- per-computation totals ----------------------------------------------
+    def comp_totals(self, name: str) -> Totals:
+        if name in self._memo:
+            return self._memo[name]
+        t = Totals()
+        self._memo[name] = t  # break cycles defensively
+        shapes = {op.name: op.type_str for op in self.comps.get(name, [])}
+        for op in self.comps.get(name, []):
+            self._add_op(t, op, shapes)
+        return t
+
+    def _add_op(self, t: Totals, op: Op, shapes: dict):
+        oc = op.opcode
+        if oc == "while":
+            trip = 1
+            mt = _TRIP_RE.search(op.rest)
+            if mt:
+                trip = int(mt.group(1))
+            mb, mc2 = _BODY_RE.search(op.rest), _COND_RE.search(op.rest)
+            if mb:
+                t.add(self.comp_totals(mb.group(1)), trip)
+            if mc2:
+                t.add(self.comp_totals(mc2.group(1)), trip + 1)
+            return
+        if oc == "fusion":
+            mcall = _CALLS_RE.search(op.rest)
+            if mcall:
+                sub = self.comp_totals(mcall.group(1))
+                t.flops += sub.flops  # flops from internals
+                t.add(Totals(coll_bytes=dict(sub.coll_bytes),
+                             coll_count=dict(sub.coll_count)))
+                t.bytes += self._fusion_bytes(mcall.group(1), op, shapes)
+            else:
+                t.bytes += self._operand_bytes(op, shapes) + _shapes_bytes(op.type_str)
+            return
+        if oc in ("call", "async-start"):
+            mcall = _CALLS_RE.search(op.rest) or _CALLS_RE.search(op.type_str)
+            if mcall:
+                t.add(self.comp_totals(mcall.group(1)))
+            return
+        if oc == "conditional":
+            # count the most expensive branch (documented upper bound)
+            branches = re.findall(r"%([\w.\-]+)", op.rest.split("(")[-1])
+            cands = [b for b in branches if b in self.comps]
+            if cands:
+                best = max((self.comp_totals(b) for b in cands),
+                           key=lambda s: s.flops + s.bytes)
+                t.add(best)
+            return
+        if oc in COLLECTIVES or (oc.endswith("-start") and oc[:-6] in COLLECTIVES):
+            kind = oc[:-6] if oc.endswith("-start") else oc
+            b = _shapes_bytes(op.type_str)
+            # XLA's host AllReducePromotion pass upcasts bf16 reduces to f32
+            # (to_apply=%..._promoted); the TPU target reduces bf16 natively
+            # with in-hardware f32 accumulation, so wire bytes are half.
+            if "_promoted" in op.rest:
+                b *= 0.5
+            t.coll_bytes[kind] += b
+            t.coll_count[kind] += 1
+            t.bytes += self._operand_bytes(op, shapes) + b
+            return
+        if oc.endswith("-done"):
+            return
+        if oc in ZERO_BYTES:
+            return
+        if oc in ("slice", "dynamic-slice"):
+            t.bytes += 2 * _shapes_bytes(op.type_str)  # read slice + write
+            return
+        if oc == "dynamic-update-slice":
+            ops_names = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+            upd = _shapes_bytes(shapes.get(ops_names[1], "")) if len(ops_names) > 1 else 0
+            t.bytes += 2 * upd  # in-place: read update, write region
+            return
+        if oc in ("broadcast", "iota", "constant"):
+            t.bytes += _shapes_bytes(op.type_str)  # write-only (tiny reads)
+            return
+        if oc == "dot":
+            out_elems = _shape_elems(op.type_str)
+            contract = 1
+            mcd = _CONTRACT_RE.search(op.rest)
+            lhs = _OPERAND_RE.search(op.rest)
+            if mcd and lhs and lhs.group(1) in shapes:
+                ldims = _shape_dims(shapes[lhs.group(1)])
+                for ci in mcd.group(1).split(","):
+                    if ci and int(ci) < len(ldims):
+                        contract *= ldims[int(ci)]
+            t.flops += 2.0 * out_elems * contract
+            t.bytes += self._operand_bytes(op, shapes) + _shapes_bytes(op.type_str)
+            return
+        if oc in ("reduce", "reduce-window", "sort", "scatter", "gather",
+                  "cumsum", "select-and-scatter"):
+            t.flops += self._operand_elems(op, shapes)
+            t.bytes += self._operand_bytes(op, shapes) + _shapes_bytes(op.type_str)
+            return
+        if oc in ELEMENTWISE:
+            t.flops += _shape_elems(op.type_str)
+            t.bytes += self._operand_bytes(op, shapes) + _shapes_bytes(op.type_str)
+            return
+        # default data-movement ops (slice, concat, copy, dus, broadcast,
+        # transpose, reshape, iota, constant, pad, custom-call, rng, ...)
+        t.bytes += self._operand_bytes(op, shapes) + _shapes_bytes(op.type_str)
+
+    def _fusion_bytes(self, fused_name: str, op: Op, shapes: dict) -> float:
+        """HBM bytes for one fusion call.
+
+        Reads: per fusion parameter — if every internal consumer (through
+        bitcast/reshape/convert chains) is a slice/dynamic-slice, only the
+        sliced region is pulled from HBM (the scan-over-layers param-stack
+        pattern); otherwise the whole operand. The operand aliased by a
+        root dynamic-update-slice is a pass-through (0 read).
+        Writes: root DUS → update region only (in-place); else result shape.
+        """
+        ops = self.comps.get(fused_name, [])
+        if not ops:
+            return self._operand_bytes(op, shapes) + _shapes_bytes(op.type_str)
+        ishapes = {o.name: o.type_str for o in ops}
+        params: dict[int, str] = {}
+        consumers: dict[str, list[Op]] = defaultdict(list)
+        for o in ops:
+            if o.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", o.opcode + "(" + o.rest)
+                if m:
+                    params[int(m.group(1))] = o.name
+            seg = o.rest.split(")", 1)[0]
+            for mm in _OPERAND_RE.finditer(seg):
+                consumers[mm.group(1)].append(o)
+        root = ops[-1]
+        dus_alias: str | None = None
+        write_bytes: float = _shapes_bytes(root.type_str)
+        if root.opcode == "dynamic-update-slice":
+            names = _OPERAND_RE.findall(root.rest.split(")", 1)[0])
+            if names:
+                dus_alias = names[0]
+                write_bytes = 2 * _shapes_bytes(ishapes.get(names[1], "")) \
+                    if len(names) > 1 else 0
+
+        passthrough = {"bitcast", "reshape", "convert", "copy", "transpose"}
+
+        def read_size(pname: str, seen: frozenset) -> float:
+            if pname in seen:
+                return _shapes_bytes(ishapes.get(pname, ""))
+            total = 0.0
+            for c in consumers.get(pname, []):
+                if c.opcode in ("slice", "dynamic-slice"):
+                    total += _shapes_bytes(c.type_str)
+                elif c.opcode in passthrough:
+                    total += read_size(c.name, seen | {pname})
+                elif c.opcode == "dynamic-update-slice" and \
+                        _OPERAND_RE.findall(c.rest.split(")", 1)[0])[:1] == [pname]:
+                    total += 0  # aliased through DUS
+                else:
+                    return _shapes_bytes(ishapes.get(pname, ""))
+            return min(total, _shapes_bytes(ishapes.get(pname, "")))
+
+        # map call-site operands (in order) to parameter numbers
+        call_operands = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+        read_total = 0.0
+        for i, outer in enumerate(call_operands):
+            pname = params.get(i)
+            if pname is None:
+                read_total += _shapes_bytes(shapes.get(outer, ""))
+                continue
+            if pname == dus_alias:
+                continue  # in-place aliased operand
+            full = _shapes_bytes(shapes.get(outer, "")) or _shapes_bytes(ishapes.get(pname, ""))
+            refined = read_size(pname, frozenset())
+            read_total += min(refined, full) if refined else full
+        return read_total + write_bytes
+
+    def _operand_bytes(self, op: Op, shapes: dict) -> int:
+        operands = op.rest.split(")", 1)[0] if ")" in op.rest else op.rest
+        total = 0
+        for m in _OPERAND_RE.finditer(operands):
+            if m.group(1) in shapes:
+                total += _shapes_bytes(shapes[m.group(1)])
+        return total
+
+    def _operand_elems(self, op: Op, shapes: dict) -> int:
+        operands = op.rest.split(")", 1)[0] if ")" in op.rest else op.rest
+        total = 0
+        for m in _OPERAND_RE.finditer(operands):
+            if m.group(1) in shapes:
+                total += _shape_elems(shapes[m.group(1)])
+        return total
+
+    # -- public ---------------------------------------------------------------
+    def totals(self) -> dict:
+        t = self.comp_totals(self.entry)
+        wire = sum(WIRE_MULT.get(k, 1.0) * v for k, v in t.coll_bytes.items())
+        return {
+            "flops": t.flops,
+            "bytes": t.bytes,
+            "collectives": {
+                "by_kind": {k: {"count": t.coll_count[k], "bytes": v}
+                            for k, v in sorted(t.coll_bytes.items())},
+                "wire_bytes_per_device": wire,
+            },
+        }
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloCostModel(hlo_text).totals()

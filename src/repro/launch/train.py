@@ -1,0 +1,117 @@
+"""Production training launcher: mesh + sharded state + fault-tolerant loop.
+
+On real hardware:   python -m repro.launch.train --arch qwen3-1.7b --multi-pod
+In this container:  add --local-devices 8 (forces host devices BEFORE jax
+init) and a reduced config is substituted automatically on CPU.
+
+Everything the dry-run lowers is what runs here: same step functions, same
+shardings, plus CheckpointManager/FaultTolerantLoop around the loop.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-lm")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--local-devices", type=int, default=0,
+                    help="force N host devices (CPU dry runs)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config")
+    args = ap.parse_args()
+
+    if args.local_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.local_devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.launch.mesh import MeshAxes, make_local_mesh, make_production_mesh
+    from repro.models import registry
+    from repro.models.optim import OptimConfig, init_opt_state
+    from repro.models.sharding import param_shardings, sharding_ctx, sanitize_spec_tree
+    from repro.models.steps import init_train_state, make_train_step
+    from repro.runtime.checkpoint import CheckpointManager
+    from repro.runtime.fault import FaultTolerantLoop, TrainLoopConfig
+
+    cfg = get_config(args.arch)
+    on_cpu = jax.default_backend() != "tpu"
+    if args.reduced or (on_cpu and cfg.n_params() > 5e8):
+        cfg = cfg.reduced()
+        print(f"[cpu] using reduced config {cfg.name}")
+    api = registry.get_api(cfg)
+
+    ndev = len(jax.devices())
+    if ndev >= 512:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        model_par = 2 if ndev % 2 == 0 and ndev > 1 else 1
+        mesh = make_local_mesh(data=ndev // model_par, model=model_par)
+    axes = MeshAxes.for_mesh(mesh)
+    print(f"mesh: {dict(mesh.shape)} ({mesh.devices.size} devices)")
+
+    params, opt = init_train_state(jax.random.key(0), cfg, api)
+    shards = param_shardings(params, mesh, axes)
+    params = jax.device_put(params, shards)
+    opt = init_opt_state(params)
+
+    opt_cfg = OptimConfig(total_steps=args.steps)
+    with sharding_ctx(mesh, axes):
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, api),
+                          donate_argnums=(0, 1))
+
+        B, S = args.global_batch, args.seq
+        tok_sharding = NamedSharding(mesh, P(axes.data, None)) \
+            if B % axes.data_size(mesh) == 0 else None
+
+        def data_factory(start):
+            def gen():
+                i = start
+                while True:
+                    rng = np.random.default_rng(777 + i)
+                    t = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+                    if tok_sharding is not None:
+                        t = jax.device_put(t, tok_sharding)
+                    batch = {"tokens": t}
+                    if cfg.family == "encdec":
+                        batch["frames"] = jnp.asarray(
+                            rng.normal(size=(B, cfg.enc_len, cfg.d_model)), jnp.bfloat16)
+                    if cfg.family == "vlm":
+                        batch["patches"] = jnp.asarray(
+                            rng.normal(size=(B, cfg.num_patches, cfg.patch_dim)),
+                            jnp.bfloat16)
+                    yield batch
+                    i += 1
+            return gen()
+
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+        start = 0
+        if args.resume and ckpt.latest_step() is not None:
+            start, state = ckpt.restore(None, {"params": params, "opt": opt},
+                                        shardings={"params": shards, "opt": None})
+            params, opt = state["params"], state["opt"]
+            print(f"resumed at step {start}")
+        loop = FaultTolerantLoop(step_fn, ckpt,
+                                 TrainLoopConfig(ckpt_every=args.ckpt_every))
+        params, opt, log = loop.run(params, opt, data_factory, args.steps,
+                                    start_step=start)
+    for s, l in log[:: max(len(log) // 10, 1)]:
+        print(f"step {s:5d}  loss {l:.4f}")
+    print(f"done; final loss {log[-1][1]:.4f}; events: {loop.events or 'none'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Group decomposition for the hybrid stack.
+
+The zamba2 layer loop is decomposed into ``n_invocations`` *groups* — one
+shared-attention application followed by an inner ``lax.scan`` over the
+group's SSD blocks. Groups are unrolled in Python (static invocation index →
+no ``lax.cond``/dynamic indexing), keeping HLO size O(groups + one block)
+while making per-op cost attribution exact (launch/hlocost.py counts each
+group once, inner scan bodies × trip count).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.config import ArchConfig
+
+
+def group_bounds(cfg: ArchConfig) -> list[tuple[int, int]]:
+    """[(start, end)) layer ranges; a shared-attn invocation precedes each."""
+    out = []
+    s = 0
+    while s < cfg.n_layers:
+        out.append((s, min(s + cfg.attn_every, cfg.n_layers)))
+        s += cfg.attn_every
+    return out
+
+
+def slice_stack(tree, start: int, end: int):
+    return jax.tree_util.tree_map(lambda a: a[start:end], tree)

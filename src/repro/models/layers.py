@@ -1,0 +1,135 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Parameters are plain dict pytrees. Initializers take an int seed-stream via
+``jax.random`` keys. Compute dtype is bf16 with fp32 norms/softmax; params
+are stored fp32 (the optimizer keeps fp32 master state anyway).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def he_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[0]
+    return (jax.random.normal(key, shape) * (1.0 / np.sqrt(fan_in))).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """f32 statistics, compute-dtype application: the reduction runs in f32
+    (fused cast, no f32 tensor materializes) but every full-size tensor —
+    and therefore every cotangent GSPMD might move across the mesh — stays
+    in x.dtype (§Perf iteration A5: halves activation-collective bytes)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True) - jnp.square(mu)
+    inv = jax.lax.rsqrt(jnp.maximum(var, 0) + eps).astype(x.dtype)
+    return (x - mu.astype(x.dtype)) * inv * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+# -- rotary embeddings ---------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))  # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- mlp -------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w1": he_init(ks[0], (d_model, d_ff)), "w2": he_init(ks[1], (d_ff, d_model))}
+    if gated:
+        p["w3"] = he_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = x @ p["w1"].astype(x.dtype)
+    if "w3" in p:  # swiglu
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+    else:  # gelu (whisper)
+        h = jax.nn.gelu(h)
+    h = constrain(h, "data", None, "model")
+    return h @ p["w2"].astype(x.dtype)
+
+
+# -- embedding / logits / loss ---------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d_model)) * 0.02
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(embed, tokens, axis=0).astype(COMPUTE_DTYPE)
+    return constrain(out, "data", None, None)
+
+
+def logits_from_hidden(h: jax.Array, head: jax.Array) -> jax.Array:
+    """h: (..., d); head: (d, V) -> fp32 logits, vocab sharded over model."""
+    out = (h @ head.astype(h.dtype)).astype(jnp.float32)
+    return constrain(out, "data", None, "model")
+
+
+def _ce_from_logits(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - gold) * mask)
+
+
+def chunked_ce_loss(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                    mask: jax.Array | None = None, chunk: int = 2048) -> jax.Array:
+    """Cross entropy without materializing full (B,S,V) fp32 logits.
+
+    Scans over sequence chunks; ``jax.checkpoint`` makes the backward re-
+    compute the per-chunk logits, so peak memory is one chunk of logits.
+    Returns summed loss (caller divides by token count).
+    """
+    B, S, D = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), dtype=jnp.float32)
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    @jax.checkpoint
+    def chunk_loss(h_c, l_c, m_c):
+        logits = logits_from_hidden(h_c, head)
+        return _ce_from_logits(logits, l_c, m_c)
+
+    def body(acc, xs):
+        h_c, l_c, m_c = xs
+        return acc + chunk_loss(h_c, l_c, m_c), None
+
+    hs = hidden[:, : n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1)
+    ls = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls, ms))
+    if rem:
+        total = total + chunk_loss(hidden[:, n * chunk:], labels[:, n * chunk:], mask[:, n * chunk:])
+    return total

@@ -1,0 +1,143 @@
+"""Uniform model API + abstract input/cache/param specs per (arch × shape).
+
+Everything the launcher needs to lower a cell without allocating a byte:
+  * ``get_api(cfg)``      — init/loss/prefill/decode for the arch family
+  * ``batch_specs``       — ShapeDtypeStructs for the train/prefill batch
+  * ``decode_specs``      — token + cache ShapeDtypeStructs for decode cells
+  * ``abstract_params``   — eval_shape over init (no allocation)
+  * ``*_pspecs``          — PartitionSpecs for params / batch / cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import MeshAxes
+from repro.models import hybrid, rwkv, transformer, whisper
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.models.sharding import param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    make_cache: Callable
+
+
+def get_api(cfg: ArchConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelAPI(transformer.init_lm, transformer.lm_loss,
+                        transformer.lm_prefill, transformer.lm_decode_step,
+                        transformer.make_cache)
+    if fam == "rwkv":
+        return ModelAPI(rwkv.init_rwkv_lm, rwkv.rwkv_loss, rwkv.rwkv_prefill,
+                        rwkv.rwkv_decode_step, rwkv.make_cache)
+    if fam == "hybrid":
+        return ModelAPI(hybrid.init_hybrid, hybrid.hybrid_loss,
+                        hybrid.hybrid_prefill, hybrid.hybrid_decode_step,
+                        hybrid.make_cache)
+    if fam == "encdec":
+        return ModelAPI(whisper.init_whisper, whisper.whisper_loss,
+                        whisper.whisper_prefill, whisper.whisper_decode_step,
+                        whisper.make_cache)
+    raise ValueError(f"unknown family {fam}")
+
+
+def shape_adjusted_cfg(cfg: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """Per-shape config tweaks: zamba2's shared attention gets a 4k sliding
+    window at 500k context (DESIGN.md §6 deviation — sub-quadratic serving)."""
+    if cfg.family == "hybrid" and shape.seq_len > 100_000:
+        return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg
+
+
+# -- abstract specs ---------------------------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Train / prefill batch ShapeDtypeStructs."""
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_len, cfg.d_model),
+                                               jnp.bfloat16)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct((batch, cfg.num_patches, cfg.patch_dim),
+                                                jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, batch: int, cache_len: int) -> tuple[dict, dict]:
+    """(token spec, cache specs) for a decode cell."""
+    api = get_api(cfg)
+    tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    cache = api.make_cache(cfg, batch, cache_len, abstract=True)
+    return {"tokens": tokens}, cache
+
+
+def abstract_params(cfg: ArchConfig) -> Any:
+    api = get_api(cfg)
+    return jax.eval_shape(lambda k: api.init(k, cfg), jax.random.key(0))
+
+
+def prefill_cache_len(cfg: ArchConfig, seq: int) -> int:
+    """Cache depth a prefill of ``seq`` tokens produces (vlm prepends its
+    projected patch prefix to the context)."""
+    return seq + (cfg.num_patches if cfg.family == "vlm" else 0)
+
+
+# -- PartitionSpecs ----------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ArchConfig, axes: MeshAxes) -> dict:
+    D = axes.data if len(axes.data) > 1 else axes.data[0]
+    specs = {"tokens": P(D, None)}
+    if cfg.family == "encdec":
+        specs["frames"] = P(D, None, None)
+    if cfg.family == "vlm":
+        specs["patches"] = P(D, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ArchConfig, axes: MeshAxes) -> dict:
+    """Decode-cache shardings: batch over data; model axis placement is
+    cfg.cache_shard_dim:
+      "seq"  — baseline: cache sequence over "model". Memory-balanced, but
+               GSPMD lowers the dynamic cache write on a sharded dim as a
+               full-buffer select (every step rewrites the local cache).
+      "head" — head_dim over "model" (d_head % TP == 0 for every assigned
+               arch): the sequence dim stays local so the cache write is a
+               true in-place DUS; attention contracts the sharded head_dim
+               with one small score psum (§Perf iteration C3)."""
+    D = axes.data if len(axes.data) > 1 else axes.data[0]
+    M = axes.model
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.cache_shard_dim == "head":
+            spec = P(None, D, None, None, M)
+        else:
+            spec = P(None, D, M, None, None)
+        return {"k": spec, "v": spec, "pos": P()}
+    if fam == "rwkv":
+        return {"att_x": P(None, D, None), "att_state": P(None, D, M, None, None),
+                "ffn_x": P(None, D, None), "pos": P()}
+    if fam == "hybrid":
+        return {"conv": P(None, D, None, M), "state": P(None, D, M, None, None),
+                "attn_k": P(None, D, None, M, None),
+                "attn_v": P(None, D, None, M, None), "pos": P()}
+    if fam == "encdec":
+        return {"k": P(None, D, M, None, None), "v": P(None, D, M, None, None),
+                "xk": P(None, D, None, None, None), "xv": P(None, D, None, None, None),
+                "pos": P()}
+    raise ValueError(fam)
+
+
+def params_pspecs(cfg: ArchConfig, axes: MeshAxes) -> Any:
+    return param_specs(abstract_params(cfg), axes)

@@ -1,0 +1,298 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay.
+
+Training / prefill uses a *chunked* linear-recurrence form: within a chunk of
+length C the pairwise decay factorizes into r̃ = r·exp(ecum), k̃ = k·exp(-cum)
+so intra-chunk interaction is one (C×C) matmul per head (MXU-friendly);
+chunk-to-chunk state flows through a ``lax.scan``. Decode keeps the exact
+O(1) recurrence: state is one (N×N) matrix per head per layer — this is why
+rwkv6 *runs* the long_500k cell that full-attention archs must skip.
+
+Numerical note (recorded deviation, DESIGN.md §7): the chunked factorization
+bounds per-chunk decay, so log-decay is clamped to ≥ -4/step and C = 16,
+keeping exp magnitudes ≤ e^64 < f32 max. The sequential oracle
+(``wkv6_sequential``) has no clamp; tests compare the two under benign decay.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import he_init, layer_norm, rms_norm
+from repro.models.sharding import constrain
+
+CHUNK = 16
+LW_MIN = -4.0  # per-step log-decay clamp for the chunked path
+
+
+def init_rwkv_block(key, cfg: ArchConfig) -> dict:
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.rwkv_lora
+    H = d // cfg.rwkv_head_dim
+    N = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    wkv = {
+        "wr": he_init(ks[0], (d, d)),
+        "wk": he_init(ks[1], (d, d)),
+        "wv": he_init(ks[2], (d, d)),
+        "wg": he_init(ks[3], (d, d)),
+        "wo": he_init(ks[4], (d, d)),
+        "w_lora_a": he_init(ks[5], (d, r)) * 0.1,
+        "w_lora_b": he_init(ks[6], (r, d)) * 0.1,
+        "w0": jnp.full((d,), -0.6),  # decay ≈ exp(-exp(-0.6)) ≈ 0.58
+        "u": jnp.zeros((H, N)),
+        "mu_r": jnp.full((d,), 0.5), "mu_k": jnp.full((d,), 0.5),
+        "mu_v": jnp.full((d,), 0.5), "mu_w": jnp.full((d,), 0.5),
+        "mu_g": jnp.full((d,), 0.5),
+        "ln_x": jnp.ones((d,)),
+    }
+    cmix = {
+        "mu_k": jnp.full((d,), 0.5), "mu_r": jnp.full((d,), 0.5),
+        "ck": he_init(ks[7], (d, f)),
+        "cv": he_init(ks[8], (f, d)),
+        "cr": he_init(ks[9], (d, d)),
+    }
+    return {
+        "wkv": wkv, "cmix": cmix,
+        "ln1": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """x: (B,S,D); x_prev_last: (B,D) carry from previous segment (zeros at
+    sequence start). Returns x shifted right one step."""
+    return jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _project_rkvwg(x, xs, p, H, N):
+    B, S, d = x.shape
+    r = _lerp(x, xs, p["mu_r"]) @ p["wr"].astype(x.dtype)
+    k = _lerp(x, xs, p["mu_k"]) @ p["wk"].astype(x.dtype)
+    v = _lerp(x, xs, p["mu_v"]) @ p["wv"].astype(x.dtype)
+    g = jax.nn.silu(_lerp(x, xs, p["mu_g"]) @ p["wg"].astype(x.dtype))
+    xw = _lerp(x, xs, p["mu_w"])
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) @ p["w_lora_b"].astype(x.dtype)
+    lw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32),
+                           -20.0, 1.386))  # log-decay in (-4, 0)
+    lw = jnp.maximum(lw, LW_MIN)
+    shp = (B, S, H, N)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp), g,
+            lw.reshape(shp))
+
+
+def wkv6_chunked(r, k, v, lw, u, state0=None, chunk: int = CHUNK):
+    """Chunked WKV6. r,k,v,lw: (B,S,H,N) — lw is log-decay (fp32, ≤0);
+    u: (H,N). Returns (out (B,S,H,N), final state (B,H,N,N) fp32)."""
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    if S % chunk:  # pad tail: k=v=0 adds nothing, lw=0 leaves state untouched
+        pad = chunk - S % chunk
+        pw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        out, state = wkv6_chunked(jnp.pad(r, pw), jnp.pad(k, pw), jnp.pad(v, pw),
+                                  jnp.pad(lw, pw), u, state0, chunk)
+        return out[:, :S], state
+    nc = S // chunk
+    rf = r.astype(jnp.float32).reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4)
+    kf = k.astype(jnp.float32).reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4)
+    vf = v.astype(jnp.float32).reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4)
+    lwf = lw.astype(jnp.float32).reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4)
+    # shapes now (nc, B, H, C, N)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    uu = u.astype(jnp.float32)  # (H, N)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # strict lower
+
+    def body(S_in, xs):
+        rc, kc, vc, lwc = xs  # (B,H,C,N)
+        cum = jnp.cumsum(lwc, axis=2)          # inclusive
+        ecum = cum - lwc                        # exclusive (cum_{t-1})
+        total = cum[:, :, -1:, :]               # (B,H,1,N)
+        r_t = rc * jnp.exp(ecum)
+        k_t = kc * jnp.exp(-cum)
+        att = jnp.einsum("bhcn,bhsn->bhcs", r_t, k_t) * mask
+        diag = jnp.einsum("bhcn,hn->bhc", rc * kc, uu)
+        out = jnp.einsum("bhcs,bhsn->bhcn", att, vc) + diag[..., None] * vc
+        out = out + jnp.einsum("bhcn,bhnm->bhcm", r_t, S_in)
+        k_hat = kc * jnp.exp(total - cum)
+        S_out = jnp.exp(total).transpose(0, 1, 3, 2) * S_in \
+            + jnp.einsum("bhsn,bhsm->bhnm", k_hat, vc)
+        return S_out, out
+
+    state, outs = jax.lax.scan(body, state0, (rf, kf, vf, lwf))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return out.astype(r.dtype), state
+
+
+def wkv6_sequential(r, k, v, lw, u, state0=None):
+    """Exact per-step recurrence (oracle + decode). Same signature."""
+    B, S, H, N = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    lwf = lw.astype(jnp.float32)
+    uu = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs  # (B,H,N)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + uu[None, :, :, None] * kv)
+        S_new = jnp.exp(lwt)[..., None] * S + kv
+        return S_new, out
+
+    xs = tuple(a.swapaxes(0, 1) for a in (rf, kf, vf, lwf))  # (S,B,H,N)
+    state, outs = jax.lax.scan(step, state0, xs)
+    return outs.swapaxes(0, 1).astype(r.dtype), state
+
+
+def rwkv_time_mix(x, p, cfg: ArchConfig, x_prev=None, state=None, *, sequential=False):
+    """x: (B,S,D). Returns (y, (new_x_prev, new_state))."""
+    B, S, d = x.shape
+    H, N = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    r, k, v, g, lw = _project_rkvwg(x, xs, p, H, N)
+    fn = wkv6_sequential if sequential else wkv6_chunked
+    out, new_state = fn(r, k, v, lw, p["u"], state)
+    out = rms_norm(out, p["ln_x"].reshape(H, N), cfg.norm_eps).reshape(B, S, d)
+    out = out * g
+    y = out @ p["wo"].astype(x.dtype)
+    return constrain(y, "data", None, None), (x[:, -1, :], new_state)
+
+
+def rwkv_channel_mix(x, p, x_prev=None):
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    k = jnp.square(jax.nn.relu(_lerp(x, xs, p["mu_k"]) @ p["ck"].astype(x.dtype)))
+    k = constrain(k, "data", None, "model")
+    kv = k @ p["cv"].astype(x.dtype)
+    rgate = jax.nn.sigmoid(_lerp(x, xs, p["mu_r"]) @ p["cr"].astype(x.dtype))
+    return rgate * kv, x[:, -1, :]
+
+
+def rwkv_block(x, p, cfg: ArchConfig, cache=None, *, sequential=False):
+    """Full block. cache: None (train) or dict with att_x/att_state/ffn_x."""
+    c = cache or {}
+    att, (ax, astate) = rwkv_time_mix(
+        layer_norm(x, p["ln1"], p["ln1_b"], cfg.norm_eps), p["wkv"], cfg,
+        c.get("att_x"), c.get("att_state"), sequential=sequential)
+    x = x + att
+    ffn, fx = rwkv_channel_mix(layer_norm(x, p["ln2"], p["ln2_b"], cfg.norm_eps),
+                               p["cmix"], c.get("ffn_x"))
+    x = x + ffn
+    return x, {"att_x": ax, "att_state": astate, "ffn_x": fx}
+
+
+# -- LM assembly -----------------------------------------------------------------
+
+
+def init_rwkv_lm(key, cfg: ArchConfig) -> dict:
+    from repro.models.layers import he_init as _he, init_embed
+
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": init_embed(ks[1], cfg.vocab, cfg.d_model),
+        "ln0": jnp.ones((cfg.d_model,)), "ln0_b": jnp.zeros((cfg.d_model,)),
+        "layers": jax.vmap(lambda k: init_rwkv_block(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "final_norm_b": jnp.zeros((cfg.d_model,)),
+        "lm_head": _he(ks[2], (cfg.d_model, cfg.vocab), fan_in=cfg.d_model),
+    }
+
+
+def rwkv_forward_hidden(params, tokens, cfg: ArchConfig):
+    from repro.models.layers import embed_tokens
+
+    x = embed_tokens(params["embed"], tokens)
+    x = layer_norm(x, params["ln0"], params["ln0_b"], cfg.norm_eps)
+
+    def body(carry, lp):
+        out, _ = rwkv_block(carry, lp, cfg)
+        return constrain(out, "data", None, None), None
+
+    step = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    return layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+
+
+def rwkv_loss(params, batch, cfg: ArchConfig):
+    from repro.models.layers import chunked_ce_loss
+
+    tokens = batch["tokens"]
+    hidden = rwkv_forward_hidden(params, tokens, cfg)
+    loss_sum = chunked_ce_loss(hidden[:, :-1], params["lm_head"], tokens[:, 1:],
+                               chunk=cfg.loss_chunk)
+    ntok = tokens.shape[0] * (tokens.shape[1] - 1)
+    return loss_sum / ntok, {"ce": loss_sum / ntok}
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, abstract: bool = False) -> dict:
+    """RWKV cache is O(1) in sequence length — (N×N) state per head per layer
+    plus the token-shift carries. ``max_len`` is irrelevant (the reason this
+    arch runs long_500k)."""
+    d = cfg.d_model
+    H, N = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    L = cfg.n_layers
+    shapes = {
+        "att_x": ((L, batch, d), jnp.bfloat16),
+        "att_state": ((L, batch, H, N, N), jnp.float32),
+        "ffn_x": ((L, batch, d), jnp.bfloat16),
+        "pos": ((), jnp.int32),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}
+
+
+def rwkv_prefill(params, batch, cfg: ArchConfig, max_len: int | None = None):
+    from repro.models.layers import embed_tokens, logits_from_hidden
+
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    x = layer_norm(x, params["ln0"], params["ln0_b"], cfg.norm_eps)
+
+    def body(carry, lp):
+        out, c = rwkv_block(carry, lp, cfg)
+        return constrain(out, "data", None, None), (
+            c["att_x"].astype(jnp.bfloat16), c["att_state"],
+            c["ffn_x"].astype(jnp.bfloat16))
+
+    x, (ax, ast, fx) = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+    x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    logits = logits_from_hidden(x[:, -1:, :], params["lm_head"])
+    cache = {"att_x": ax, "att_state": ast, "ffn_x": fx,
+             "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return cache, logits
+
+
+def rwkv_decode_step(params, cache, tokens, cfg: ArchConfig):
+    from repro.models.layers import embed_tokens, logits_from_hidden
+
+    x = embed_tokens(params["embed"], tokens)
+    x = layer_norm(x, params["ln0"], params["ln0_b"], cfg.norm_eps)
+
+    def body(carry, xs):
+        lp, ax_l, st_l, fx_l = xs
+        out, c = rwkv_block(carry, lp, cfg,
+                            cache={"att_x": ax_l.astype(carry.dtype),
+                                   "att_state": st_l,
+                                   "ffn_x": fx_l.astype(carry.dtype)},
+                            sequential=True)
+        return out, (c["att_x"].astype(jnp.bfloat16), c["att_state"],
+                     c["ffn_x"].astype(jnp.bfloat16))
+
+    x, (ax, ast, fx) = jax.lax.scan(body, x, (params["layers"], cache["att_x"],
+                                              cache["att_state"], cache["ffn_x"]))
+    x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    logits = logits_from_hidden(x, params["lm_head"])
+    new_cache = {"att_x": ax, "att_state": ast, "ffn_x": fx,
+                 "pos": cache["pos"] + tokens.shape[1]}
+    return new_cache, logits

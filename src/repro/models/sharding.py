@@ -1,0 +1,176 @@
+"""Sharding rules: parameter PartitionSpecs and activation constraints.
+
+2-D weight sharding (DESIGN.md §5): FSDP over the data axes × tensor
+parallelism over "model". Column-parallel matrices (qkv / up-projections /
+gate) shard their output dim over "model" and input dim over data; row-
+parallel matrices (attention out / down-projection) shard input over "model"
+and output over data. Expert weights shard the expert dim over "model"
+(expert parallelism) and d_model over data. Layer-stacked params (leading L
+dim from the scan layout) keep L unsharded.
+
+Specs are assigned by *path pattern* over the param pytree, so every model in
+the zoo shares one rule table. ``constrain`` is a no-op outside a mesh
+context, letting the same model code run on 1 CPU device in tests.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import MeshAxes
+
+# pattern -> spec builder; D = data axes tuple, M = model axis name.
+# Patterns are matched against "/"-joined pytree paths, first match wins.
+# The trailing-dims spec applies to the *last* n dims; leading (scan) dims
+# are unsharded.
+_RULES: list[tuple[str, Any]] = [
+    # -- embeddings / heads ---------------------------------------------------
+    (r"embed$", lambda D, M: P(M, D)),            # (V, d): vocab over model
+    (r"lm_head$", lambda D, M: P(D, M)),          # (d, V): vocab over model
+    (r"patch_proj$", lambda D, M: P(None, D)),    # (patch_dim, d)
+    # -- MoE ------------------------------------------------------------------
+    (r"router$", lambda D, M: P(D, None)),        # (d, E) replicated-ish
+    (r"experts/w(1|3)$", lambda D, M: P(M, D, None)),  # (E, d, fe): EP over model
+    (r"experts/w2$", lambda D, M: P(M, None, D)),       # (E, fe, d)
+    (r"shared/w(1|3)$", lambda D, M: P(D, M)),
+    (r"shared/w2$", lambda D, M: P(M, D)),
+    # -- attention ------------------------------------------------------------
+    (r"(attn|xattn|shared_attn)/w(q|k|v)$", lambda D, M: P(D, M)),
+    (r"(attn|xattn|shared_attn)/b(q|k|v)$", lambda D, M: P(M)),
+    (r"(attn|xattn|shared_attn)/wo$", lambda D, M: P(M, D)),
+    # -- mlp -------------------------------------------------------------------
+    (r"mlp/w(1|3)$", lambda D, M: P(D, M)),
+    (r"mlp/w2$", lambda D, M: P(M, D)),
+    (r"mlp/b1$", lambda D, M: P(M)),
+    # -- rwkv ------------------------------------------------------------------
+    (r"wkv/w(r|k|v|g)$", lambda D, M: P(D, M)),
+    (r"wkv/wo$", lambda D, M: P(M, D)),
+    (r"wkv/(w_lora_a)$", lambda D, M: P(D, None)),
+    (r"wkv/(w_lora_b)$", lambda D, M: P(None, M)),
+    # -- mamba2 ----------------------------------------------------------------
+    (r"ssm/w_in$", lambda D, M: P(D, M)),         # (d, 2*di + 2N + H)
+    (r"ssm/w_out$", lambda D, M: P(M, D)),        # (di, d)
+]
+
+
+def spec_for_path(path: str, ndim: int, axes: MeshAxes) -> P:
+    D, M = axes.data, axes.model
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            spec = fn(D, M)
+            pad = ndim - len(spec)
+            if pad < 0:  # spec longer than array rank (e.g. scalar bias)
+                return P()
+            return P(*([None] * pad), *spec)
+    return P()  # norms, scales, small vectors: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_tree: Any, axes: MeshAxes) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (arrays or SDStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_path(_path_str(path), np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim, axes),
+        params_tree,
+    )
+
+
+def param_shardings(params_tree: Any, mesh: Mesh, axes: MeshAxes) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_tree, axes)
+    )
+
+
+"""Trace-time mesh context.
+
+Model code calls ``constrain(x, "data", None, "model")`` with *symbolic* axis
+names; the active :class:`ShardingCtx` (installed by the dry-run / trainer
+around tracing) resolves "data" to the data-axis tuple and "model" to the TP
+axis. With no context installed (CPU unit tests) every constraint is a no-op,
+so the exact same model code runs on one device.
+"""
+
+import contextlib
+import threading
+
+_TLS = threading.local()
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, axes: MeshAxes | None = None):
+        self.mesh = mesh
+        self.axes = axes or MeshAxes.for_mesh(mesh)
+
+    def resolve(self, spec: tuple) -> P:
+        out = []
+        for s in spec:
+            if s == "data":
+                out.append(self.axes.data if len(self.axes.data) > 1 else self.axes.data[0])
+            elif s == "model":
+                out.append(self.axes.model)
+            else:
+                out.append(s)
+        return P(*out)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, axes: MeshAxes | None = None):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = ShardingCtx(mesh, axes)
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def current_ctx() -> ShardingCtx | None:
+    return getattr(_TLS, "ctx", None)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Symbolic with_sharding_constraint; identity with no ctx installed.
+    Axis entries whose mesh extent does not divide the dim are dropped
+    (e.g. batch=1 long-context decode cannot batch-shard)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    resolved = sanitize_pspec(ctx.resolve(spec), x.shape, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, resolved))
+
+
+def sanitize_pspec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes do not divide evenly — jit
+    in_shardings rejects uneven partitions (no implicit padding)."""
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(shape):
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        ext = 1
+        for nm in names:
+            ext *= mesh.shape.get(nm, 1)
+        out.append(entry if ext and shape[d] % ext == 0 else None)
+    return P(*out)
+
+
+def sanitize_spec_tree(spec_tree, abstract_tree, mesh: Mesh):
+    """tree_map sanitize_pspec over matching (specs, ShapeDtypeStruct) trees."""
+    return jax.tree_util.tree_map(
+        lambda s, a: sanitize_pspec(s, a.shape, mesh),
+        spec_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, P))

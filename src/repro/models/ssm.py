@@ -1,0 +1,153 @@
+"""Mamba2 (state-space dual / SSD) blocks — used by the zamba2 hybrid.
+
+Scalar-per-head decay makes the chunked form *unconditionally* stable: every
+exponent is a within-chunk decay difference ≤ 0 (contrast rwkv.py, whose
+per-channel factorization needs a clamp). Intra-chunk work is (C×C) matmuls
+on the MXU; inter-chunk state ((H,N,P) per sequence) flows through lax.scan.
+Decode is the exact O(1) recurrence plus a depthwise-conv ring cache — this
+is why zamba2 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import he_init, rms_norm
+from repro.models.sharding import constrain
+
+SSD_CHUNK = 64
+CONV_W = 4
+
+
+def dims(cfg: ArchConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = di // P
+    N = cfg.ssm_state
+    return di, H, P, N
+
+
+def init_ssm_block(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di, H, P, N = dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * N
+    return {
+        "ssm": {
+            "w_in": he_init(ks[0], (d, 2 * di + 2 * N + H)),
+            "conv_w": jax.random.normal(ks[1], (conv_ch, CONV_W)) * 0.2,
+            "conv_b": jnp.zeros((conv_ch,)),
+            "dt_bias": jnp.zeros((H,)),
+            "A_log": jnp.zeros((H,)),  # a = exp(-exp(A_log)·dt)
+            "D": jnp.ones((H,)),
+            "norm": jnp.ones((di,)),
+            "w_out": he_init(ks[2], (di, d), fan_in=di),
+        },
+        "ln": jnp.ones((d,)),
+    }
+
+
+def _causal_conv(x, w, b, x_prev=None):
+    """Depthwise causal conv. x: (B,S,Ch); w: (Ch,W); x_prev: (B,W-1,Ch)."""
+    B, S, Ch = x.shape
+    W = w.shape[1]
+    if x_prev is None:
+        x_prev = jnp.zeros((B, W - 1, Ch), x.dtype)
+    xp = jnp.concatenate([x_prev, x], axis=1)  # (B, S+W-1, Ch)
+    out = sum(xp[:, j:j + S, :] * w[:, j].astype(x.dtype) for j in range(W))
+    out = out + b.astype(x.dtype)
+    return jax.nn.silu(out), xp[:, -(W - 1):, :]
+
+
+def ssd_chunked(xh, Bc, Cc, la, dt, state0=None, chunk: int = SSD_CHUNK):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) head inputs; Bc/Cc: (B,S,N); la: (B,S,H) log-decay ≤ 0;
+    dt: (B,S,H) input gates. Returns (y (B,S,H,P), state (B,H,N,P) fp32).
+    """
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:  # pad tail: dt=0 adds no state, la=0 leaves decay at 1
+        pad = chunk - S % chunk
+        p3 = [(0, 0), (0, pad), (0, 0)]
+        p4 = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        out, state = ssd_chunked(jnp.pad(xh, p4), jnp.pad(Bc, p3), jnp.pad(Cc, p3),
+                                 jnp.pad(la, p3), jnp.pad(dt, p3), state0, chunk)
+        return out[:, :S], state
+    nc = S // chunk
+    f32 = jnp.float32
+
+    def split(a, tail):
+        return a.astype(f32).reshape((B, nc, chunk) + tail).swapaxes(0, 1)
+
+    xs = (split(xh, (H, P)), split(Bc, (N,)), split(Cc, (N,)),
+          split(la, (H,)), split(dt, (H,)))
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, P), f32)
+    mask = jnp.tril(jnp.ones((chunk, chunk), f32))  # s <= t inclusive
+
+    def body(S_in, x):
+        xc, bc, cc, lac, dtc = x  # (B,C,H,P) (B,C,N) (B,C,N) (B,C,H) (B,C,H)
+        cum = jnp.cumsum(lac, axis=1)  # (B,C,H) inclusive
+        total = cum[:, -1:, :]  # (B,1,H)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)  # shared across heads
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,t,s,H)
+        att = cb[..., None] * dec * dtc[:, None, :, :] * mask[None, :, :, None]
+        y = jnp.einsum("btsh,bshp->bthp", att, xc)
+        # carry-in contribution
+        y = y + jnp.einsum("btn,bhnp->bthp", cc, S_in) * jnp.exp(cum)[..., None]
+        # state update (all exponents ≤ 0)
+        khat = jnp.exp(total - cum) * dtc  # (B,C,H)
+        S_out = jnp.exp(total)[:, 0, :, None, None] * S_in \
+            + jnp.einsum("bsn,bshp,bsh->bhnp", bc, xc, khat)
+        return S_out, y
+
+    state, ys = jax.lax.scan(body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    return y.astype(xh.dtype), state
+
+
+def ssd_sequential(xh, Bc, Cc, la, dt, state0=None):
+    """Exact per-step oracle / decode path. Same signature as ssd_chunked."""
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    f32 = jnp.float32
+    xs = (xh.astype(f32).swapaxes(0, 1), Bc.astype(f32).swapaxes(0, 1),
+          Cc.astype(f32).swapaxes(0, 1), la.astype(f32).swapaxes(0, 1),
+          dt.astype(f32).swapaxes(0, 1))
+
+    def step(S, x):
+        xt, bt, ct, lat, dtt = x  # (B,H,P) (B,N) (B,N) (B,H) (B,H)
+        S_new = jnp.exp(lat)[:, :, None, None] * S \
+            + jnp.einsum("bn,bhp,bh->bhnp", bt, xt, dtt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, S_new)
+        return S_new, y
+
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(xh.dtype), state
+
+
+def ssm_mixer(x, p, cfg: ArchConfig, cache=None, *, sequential=False):
+    """Mamba2 mixer. x: (B,S,d). cache: {conv: (B,W-1,Ch), state: (B,H,N,P)}."""
+    B, S, d = x.shape
+    di, H, P, N = dims(cfg)
+    c = cache or {}
+    proj = x @ p["w_in"].astype(x.dtype)
+    proj = constrain(proj, "data", None, "model")
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], c.get("conv"))
+    xc, Bc, Cc = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    la = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt  # log decay ≤ 0
+    xh = xc.reshape(B, S, H, P)
+    fn = ssd_sequential if sequential else ssd_chunked
+    y, state = fn(xh, Bc, Cc, la, dt, c.get("state"))
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    return constrain(out, "data", None, None), {"conv": conv_state, "state": state}

@@ -1,0 +1,77 @@
+"""Step functions: train / prefill / decode — the units the launcher jits,
+the dry-run lowers, and the fault-tolerant trainer drives.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.optim import OptimConfig, adamw_update, init_opt_state
+from repro.models.registry import ModelAPI, get_api
+
+
+def cast_once(params, cfg: ArchConfig):
+    """Optional step-entry bf16 cast of matrix params (on the local FSDP
+    shard) so weight all-gathers move bf16 (cfg.cast_params_once, §Perf)."""
+    if not cfg.cast_params_once:
+        return params
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.bfloat16)
+        if a.ndim >= 2 and a.dtype == jnp.float32 else a, params)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimConfig, api: ModelAPI | None = None):
+    api = api or get_api(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return api.loss(cast_once(p, cfg), batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, api: ModelAPI | None = None):
+    api = api or get_api(cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = api.loss(params, batch, cfg)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, api: ModelAPI | None = None,
+                      max_len: int | None = None):
+    api = api or get_api(cfg)
+
+    def prefill_step(params, batch):
+        cache, logits = api.prefill(params, batch, cfg, max_len)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return cache, next_token[:, None]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, api: ModelAPI | None = None):
+    api = api or get_api(cfg)
+
+    def decode_step(params, cache, tokens):
+        cache, logits = api.decode(params, cache, tokens, cfg)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return cache, next_token[:, None]
+
+    return decode_step
+
+
+def init_train_state(key, cfg: ArchConfig, api: ModelAPI | None = None
+                     ) -> tuple[Any, dict]:
+    api = api or get_api(cfg)
+    params = api.init(key, cfg)
+    return params, init_opt_state(params)

@@ -1,0 +1,261 @@
+"""Decoder-only transformer LM covering the dense, moe and vlm families.
+
+Layer parameters are *stacked* along a leading L dim (init via vmap over
+per-layer keys) so the layer loop is one ``jax.lax.scan`` over a
+``jax.checkpoint``-ed block: the HLO stays one-layer-sized (compile time at
+512 devices) and activation memory is one layer's worth per remat segment.
+DeepSeek-style MoE keeps its first ``first_dense_layers`` blocks dense —
+those live outside the scan as separately-stacked params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attention, decode_attention, init_attention)
+from repro.models.config import ArchConfig
+from repro.models.layers import (chunked_ce_loss, embed_tokens, he_init,
+                                 init_embed, init_mlp, logits_from_hidden,
+                                 mlp, rms_norm)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.sharding import constrain
+
+
+def _init_block(key, cfg: ArchConfig, moe_layer: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": init_attention(k1, cfg),
+        "ln1": jnp.ones((cfg.d_model,)),
+        "ln2": jnp.ones((cfg.d_model,)),
+    }
+    if moe_layer:
+        p["moe"] = init_moe(k2, cfg, cfg.moe)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None:  # dense layer inside a MoE arch
+            d_ff = (cfg.moe.top_k + cfg.moe.num_shared) * cfg.moe.d_ff_expert
+        p["mlp"] = init_mlp(k2, cfg.d_model, d_ff, gated=True)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    n_first = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - n_first
+    params: dict = {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(ks[1], (cfg.d_model, cfg.vocab), fan_in=cfg.d_model)
+    layer_keys = jax.random.split(ks[2], n_scan)
+    params["layers"] = jax.vmap(lambda k: _init_block(k, cfg, cfg.moe is not None))(layer_keys)
+    if n_first:
+        fkeys = jax.random.split(ks[3], n_first)
+        params["first_layers"] = jax.vmap(lambda k: _init_block(k, cfg, False))(fkeys)
+    if cfg.family == "vlm":
+        params["patch_proj"] = he_init(ks[1], (cfg.patch_dim, cfg.d_model),
+                                       fan_in=cfg.patch_dim)
+    return params
+
+
+def _head(params, cfg: ArchConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def _residual_constrain(x, cfg: ArchConfig):
+    if cfg.seq_parallel:
+        return constrain(x, "data", "model", None)
+    return constrain(x, "data", None, None)
+
+
+def _norm_in(x, scale, cfg: ArchConfig):
+    """Norm for a block input. Under sequence parallelism the norm runs in
+    the S-sharded domain (elementwise over d) and the SP all-gather is pinned
+    to its bf16 OUTPUT — otherwise GSPMD floats the gather onto the f32 norm
+    intermediates and doubles the wire bytes (§Perf iteration A4)."""
+    h = rms_norm(x, scale, cfg.norm_eps)
+    if cfg.seq_parallel:
+        h = constrain(h, "data", None, None)
+    return h
+
+
+def _block_apply(x, lp, cfg: ArchConfig, positions, moe_layer: bool):
+    h = attention(_norm_in(x, lp["ln1"], cfg), lp["attn"], cfg,
+                  positions=positions)
+    x = _residual_constrain(x + h, cfg)
+    hidden = _norm_in(x, lp["ln2"], cfg)
+    if moe_layer:
+        f, aux = moe_ffn(hidden, lp["moe"], cfg, cfg.moe)
+    else:
+        f, aux = mlp(hidden, lp["mlp"]), jnp.zeros((), jnp.float32)
+    x = _residual_constrain(x + f, cfg)
+    return x, aux
+
+
+def embed_input(params, tokens, cfg: ArchConfig, patches=None):
+    """Token (+ optional projected patch prefix) embedding."""
+    x = embed_tokens(params["embed"], tokens)
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm needs patch embeddings (stub frontend)"
+        pe = (patches.astype(x.dtype) @ params["patch_proj"].astype(x.dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig, patches=None):
+    """Training/prefill trunk: (B,S[,+P],d) hidden states + MoE aux loss."""
+    x = embed_input(params, tokens, cfg, patches)
+    S_total = x.shape[1]
+    positions = jnp.arange(S_total)
+    moe_layer = cfg.moe is not None
+
+    if "first_layers" in params:
+        n_first = cfg.moe.first_dense_layers
+
+        def first_body(carry, lp):
+            return _block_apply(carry, lp, cfg, positions, False)[0], None
+
+        x, _ = jax.lax.scan(jax.checkpoint(first_body), x, params["first_layers"])
+
+    def body(carry, lp):
+        return _block_apply(carry, lp, cfg, positions, moe_layer)
+
+    n_scan = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    segs = cfg.remat_segments
+    if cfg.remat and segs and n_scan % segs == 0 and segs < n_scan:
+        # nested remat: outer scan saves `segs` carries; inner layers
+        # recompute during the outer segment's backward.
+        inner = n_scan // segs
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape(segs, inner, *a.shape[1:]), params["layers"])
+
+        def seg_body(carry, seg_params):
+            # per-layer checkpoint INSIDE the segment: the segment backward
+            # re-runs layers one at a time instead of storing their internals
+            x2, auxs = jax.lax.scan(jax.checkpoint(body), carry, seg_params)
+            return x2, jnp.sum(auxs)
+
+        x, auxs = jax.lax.scan(jax.checkpoint(seg_body), x, stacked)
+    else:
+        step = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(step, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(auxs)
+
+
+def lm_loss(params, batch, cfg: ArchConfig):
+    """batch: {"tokens": (B,S) int32[, "patches": (B,P,pd)]}"""
+    tokens = batch["tokens"]
+    hidden, aux = forward_hidden(params, tokens, cfg, batch.get("patches"))
+    S = tokens.shape[1]
+    hidden = hidden[:, -S:]  # drop patch positions (vlm)
+    loss_sum = chunked_ce_loss(hidden[:, :-1], _head(params, cfg), tokens[:, 1:],
+                               chunk=cfg.loss_chunk)
+    ntok = tokens.shape[0] * (S - 1)
+    loss = loss_sum / ntok
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss, {"ce": loss_sum / ntok, "aux": aux}
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               abstract: bool = False) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    if abstract:
+        return {"k": jax.ShapeDtypeStruct(shape, dtype),
+                "v": jax.ShapeDtypeStruct(shape, dtype),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def lm_prefill(params, batch, cfg: ArchConfig, max_len: int | None = None):
+    """Runs the trunk capturing per-layer KV; returns (cache, last logits).
+
+    Every attention layer caches — including DeepSeek-style first dense-FFN
+    layers, whose cache entries simply occupy the leading slots of the
+    (n_layers, ...) cache arrays.
+    """
+    from repro.models.attention import _project_qkv, attention_core
+
+    tokens = batch["tokens"]
+    x = embed_input(params, tokens, cfg, batch.get("patches"))
+    B, S_total = x.shape[0], x.shape[1]
+    max_len = max(max_len or 0, S_total)  # vlm: patch prefix extends context
+    positions = jnp.arange(S_total)
+
+    def make_body(moe_layer: bool):
+        def body(carry, lp):
+            x = carry
+            h_in = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = _project_qkv(h_in, h_in, lp["attn"], cfg, positions, positions, True)
+            o = attention_core(q, k, v, positions, positions, cfg, causal=True)
+            o = o.reshape(B, S_total, -1) @ lp["attn"]["wo"].astype(x.dtype)
+            x = constrain(x + o, "data", None, None)
+            hidden = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if moe_layer:
+                f, _ = moe_ffn(hidden, lp["moe"], cfg, cfg.moe)
+            else:
+                f = mlp(hidden, lp["mlp"])
+            x = constrain(x + f, "data", None, None)
+            pad = [(0, 0), (0, max_len - S_total), (0, 0), (0, 0)]
+            return x, (jnp.pad(k, pad).astype(jnp.bfloat16),
+                       jnp.pad(v, pad).astype(jnp.bfloat16))
+        return body
+
+    caches = []
+    if "first_layers" in params:
+        x, kv = jax.lax.scan(jax.checkpoint(make_body(False)), x, params["first_layers"])
+        caches.append(kv)
+    x, kv = jax.lax.scan(jax.checkpoint(make_body(cfg.moe is not None)), x, params["layers"])
+    caches.append(kv)
+    ck = jnp.concatenate([c[0] for c in caches], axis=0)
+    cv = jnp.concatenate([c[1] for c in caches], axis=0)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(x[:, -1:, :], _head(params, cfg))
+    cache = {"k": ck, "v": cv, "pos": jnp.asarray(S_total, jnp.int32)}
+    return cache, logits
+
+
+def lm_decode_step(params, cache, tokens, cfg: ArchConfig):
+    """One decode step. tokens: (B, 1). Returns (new_cache, logits (B,1,V))."""
+    x = embed_tokens(params["embed"], tokens)
+    pos = cache["pos"]
+
+    def make_body(moe_layer: bool):
+        def body(carry, xs):
+            lp, ck_l, cv_l = xs
+            h, ck2, cv2 = decode_attention(rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                                           lp["attn"], cfg, ck_l, cv_l, pos)
+            x2 = constrain(carry + h, "data", None, None)
+            hidden = rms_norm(x2, lp["ln2"], cfg.norm_eps)
+            if moe_layer:
+                f, _ = moe_ffn(hidden, lp["moe"], cfg, cfg.moe)
+            else:
+                f = mlp(hidden, lp["mlp"])
+            return constrain(x2 + f, "data", None, None), (ck2, cv2)
+        return body
+
+    n_first = cfg.moe.first_dense_layers if (cfg.moe and "first_layers" in params) else 0
+    new_k, new_v = [], []
+    if n_first:
+        x, (k0, v0) = jax.lax.scan(make_body(False), x,
+                                   (params["first_layers"],
+                                    cache["k"][:n_first], cache["v"][:n_first]))
+        new_k.append(k0)
+        new_v.append(v0)
+    x, (ck, cv) = jax.lax.scan(make_body(cfg.moe is not None), x,
+                               (params["layers"], cache["k"][n_first:],
+                                cache["v"][n_first:]))
+    new_k.append(ck)
+    new_v.append(cv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(x, _head(params, cfg))
+    new_cache = {"k": jnp.concatenate(new_k, axis=0) if n_first else ck,
+                 "v": jnp.concatenate(new_v, axis=0) if n_first else cv,
+                 "pos": pos + tokens.shape[1]}
+    return new_cache, logits

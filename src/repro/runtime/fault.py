@@ -1,0 +1,117 @@
+"""Fault-tolerant training driver: checkpoint/rollback, NaN recovery,
+injected node failures, straggler mitigation (simulated deadlines).
+
+The driver owns the step loop so every failure mode has one recovery path:
+restore the latest good checkpoint, fast-forward the data iterator, resume.
+On a real pod the failure signal is a missing heartbeat / XLA collective
+timeout; here ``FailureInjector`` raises on schedule so tests exercise the
+exact same recovery code (EXPERIMENTS.md §Fault).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+class NodeFailure(RuntimeError):
+    pass
+
+
+class Straggler(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic failure schedule: {step: kind} with kind in
+    {"node", "nan", "straggler"}."""
+
+    schedule: dict[int, str] = dataclasses.field(default_factory=dict)
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        kind = self.schedule.get(step)
+        if kind is None or step in self.fired:
+            return None
+        self.fired.add(step)
+        return kind
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    ckpt_every: int = 10
+    max_retries_per_step: int = 3
+    step_deadline_s: float = 0.0  # 0 = disabled; >0 enables straggler check
+
+
+class FaultTolerantLoop:
+    """Drives (params, opt_state) through ``train_step`` with recovery.
+
+    ``data_iter_factory(start_step)`` must return an iterator positioned at
+    ``start_step`` — deterministic data order is what makes rollback exact
+    (the fast-skip the paper-scale systems use)."""
+
+    def __init__(self, train_step: Callable, ckpt: CheckpointManager,
+                 cfg: TrainLoopConfig = TrainLoopConfig(),
+                 injector: Optional[FailureInjector] = None):
+        self.train_step = train_step
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.injector = injector or FailureInjector()
+        self.events: list[tuple[int, str]] = []
+
+    def run(self, params: Any, opt_state: Any, data_iter_factory: Callable,
+            num_steps: int, start_step: int = 0):
+        step = start_step
+        it = data_iter_factory(step)
+        metrics_log = []
+        retries = 0
+        # step 0 checkpoint so the first rollback has a target
+        self.ckpt.save(step, {"params": params, "opt": opt_state}, wait=True)
+        while step < num_steps:
+            try:
+                kind = self.injector.check(step)
+                if kind == "node":
+                    raise NodeFailure(f"injected node failure at step {step}")
+                if kind == "straggler":
+                    raise Straggler(f"injected straggler at step {step}")
+                t0 = time.perf_counter()
+                batch = next(it)
+                if kind == "nan":  # poison the batch -> NaN loss path
+                    batch = jax.tree_util.tree_map(
+                        lambda x: (x.astype(np.float32) * np.nan).astype(x.dtype)
+                        if np.issubdtype(np.asarray(x).dtype, np.floating) else x,
+                        batch)
+                params, opt_state, metrics = self.train_step(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                if self.cfg.step_deadline_s and \
+                        time.perf_counter() - t0 > self.cfg.step_deadline_s:
+                    raise Straggler(f"step {step} exceeded deadline")
+                metrics_log.append((step, loss))
+                step += 1
+                retries = 0
+                if step % self.cfg.ckpt_every == 0:
+                    self.ckpt.save(step, {"params": params, "opt": opt_state})
+            except (NodeFailure, Straggler, FloatingPointError) as e:
+                retries += 1
+                self.events.append((step, f"{type(e).__name__}: {e}"))
+                if retries > self.cfg.max_retries_per_step:
+                    raise RuntimeError(
+                        f"step {step} failed {retries} times; giving up") from e
+                # rollback: latest good checkpoint + iterator fast-skip
+                good, state = self.ckpt.restore(None, {"params": params,
+                                                       "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                step = good
+                it = data_iter_factory(step)
+        self.ckpt.save(step, {"params": params, "opt": opt_state}, wait=True)
+        return params, opt_state, metrics_log

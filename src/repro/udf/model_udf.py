@@ -1,0 +1,80 @@
+"""Model UDFs: JAX models applied inside query programs (paper §III-C).
+
+The paper drops a locally-trained sklearn pipeline into AsterixDB as a UDF
+and applies it per-row, distributed. Here the registered UDF is a JAX model
+from ``repro/models``; applied to a fixed-width token column it runs batched
+inside the *same* jitted SPMD program as the rest of the plan — TP-sharded
+over "model", row-parallel over the data axes, no serialization boundary.
+
+    register_model("sentiment", params, cfg)          # Fig. 4's `dump`
+    df["sentiment"] = df["text_tokens"].map(ModelHandle("sentiment"))
+    df.persist("demo.negTweets")                      # Fig. 6
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+_REGISTRY: dict[str, "ModelHandle"] = {}
+
+
+@dataclasses.dataclass
+class ModelHandle:
+    name: str
+    fn: Optional[Callable] = None  # (tokens (n, seq) int32) -> (n,) predictions
+
+    def __call__(self, tokens: jax.Array) -> jax.Array:
+        return _REGISTRY[self.name].fn(tokens)
+
+
+def register_fn(name: str, fn: Callable) -> ModelHandle:
+    """Register a raw (n, seq) -> (n,) JAX function as a UDF."""
+    h = ModelHandle(name, fn)
+    _REGISTRY[name] = h
+    return h
+
+
+def register_model(name: str, params, cfg, *, classes: int | None = None,
+                   microbatch: int | None = None) -> ModelHandle:
+    """Register an LM from the zoo as a classification UDF.
+
+    Prediction = argmax over the first ``classes`` logits at the last token
+    (the sentiment-head convention of the example pipeline). ``microbatch``
+    bounds activation memory for very wide columns via lax.map."""
+    from repro.models.registry import get_api
+
+    api = get_api(cfg)
+
+    def predict(tokens: jax.Array) -> jax.Array:
+        tokens = tokens.astype(jnp.int32)
+
+        def run(chunk):
+            _, logits = api.prefill(params, {"tokens": chunk}, cfg)
+            head = logits[:, -1, :]
+            if classes is not None:
+                head = head[:, :classes]
+            return jnp.argmax(head, axis=-1).astype(jnp.int32)
+
+        if microbatch is not None and tokens.shape[0] > microbatch:
+            n = tokens.shape[0]
+            pad = (-n) % microbatch
+            t = jnp.pad(tokens, ((0, pad), (0, 0)))
+            out = jax.lax.map(run, t.reshape(-1, microbatch, tokens.shape[1]))
+            return out.reshape(-1)[:n]
+        return run(tokens)
+
+    return register_fn(name, predict)
+
+
+def get_udf(name: str) -> Callable:
+    if name not in _REGISTRY:
+        raise KeyError(f"no model UDF {name!r} registered "
+                       f"(known: {sorted(_REGISTRY)})")
+    return _REGISTRY[name].fn
+
+
+def clear_registry() -> None:
+    _REGISTRY.clear()

@@ -1,0 +1,110 @@
+"""Expression AST + SQL++ rendering (paper Fig. 3 Inputs 7/8, Appendix C)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.expr import (Arith, BoolOp, Col, Compare, IsKnown, Lit,
+                             StrUpper, collect_params, param_values)
+from repro.core import plan as P
+from repro.core.frame import AFrame
+from repro.engine.session import Session
+from repro.engine.table import Table, encode_strings
+
+
+def test_compare_sql():
+    e = Compare("==", Col("ten"), Lit(5))
+    assert e.to_sql() == "t.ten = 5"
+    assert e.columns() == {"ten"}
+
+
+def test_boolop_sql():
+    e = BoolOp("AND", Compare(">=", Col("a"), Lit(1)), Compare("<=", Col("a"), Lit(9)))
+    assert e.to_sql() == "(t.a >= 1 AND t.a <= 9)"
+
+
+def test_isknown_matches_paper_input7():
+    e = IsKnown(Col("coordinate"))
+    assert e.to_sql() == "t.coordinate IS KNOWN"
+
+
+def test_upper_sql():
+    assert StrUpper(Col("stringu1")).to_sql() == "UPPER(t.stringu1)"
+
+
+def test_eval_numeric():
+    env = {"x": jnp.asarray([1, 2, 3, 4])}
+    e = (Compare("<", Col("x"), Lit(3)))
+    lits = collect_params([e])
+    out = e.evaluate(env, param_values(lits))
+    assert list(np.asarray(out)) == [True, True, False, False]
+
+
+def test_eval_string_equality():
+    env = {"s": jnp.asarray(encode_strings(["abc", "abd", "abc"]))}
+    e = Compare("==", Col("s"), Lit("abc"))
+    lits = collect_params([e])
+    out = e.evaluate(env, param_values(lits))
+    assert list(np.asarray(out)) == [True, False, True]
+
+
+def test_fingerprint_excludes_literal_values():
+    a = Compare("==", Col("x"), Lit(3))
+    b = Compare("==", Col("x"), Lit(99))
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_arith_eval():
+    env = {"x": jnp.asarray([2, 4])}
+    e = Arith("*", Col("x"), Lit(3))
+    lits = collect_params([e])
+    assert list(np.asarray(e.evaluate(env, param_values(lits)))) == [6, 12]
+
+
+# -- plan SQL++ matches paper appendix C patterns ------------------------------
+
+
+@pytest.fixture(scope="module")
+def df():
+    from repro.data import wisconsin
+
+    sess = Session()
+    sess.create_dataset("Data", wisconsin.generate(100), dataverse="d")
+    return AFrame("d", "Data", session=sess)
+
+
+def test_scan_sql(df):
+    assert df.query == "SELECT VALUE t FROM d.Data t;"
+
+
+def test_filter_sql(df):
+    q = df[df["ten"] == 3].query
+    assert "WHERE t.ten = 3" in q
+
+
+def test_limit_sql(df):
+    q = P.Limit(df._plan, 5).to_sql()
+    assert q.endswith("LIMIT 5")
+
+
+def test_groupby_sql(df):
+    plan = P.GroupAgg(df._plan, ["oddOnePercent"],
+                      [P.AggSpec("cnt", "count", None)])
+    q = plan.to_sql()
+    assert "GROUP BY t.oddOnePercent" in q and "COUNT(*) AS cnt" in q
+
+
+def test_join_count_sql(df):
+    plan = P.JoinCount(df._plan, df._plan, "unique1", "unique1")
+    q = plan.to_sql()
+    assert "JOIN" in q and "COUNT(*)" in q and "l.unique1 = r.unique1" in q
+
+
+def test_plan_cache_hit(df):
+    sess = df._session
+    before = dict(sess.stats)
+    len(df[df["ten"] == 1])
+    mid = dict(sess.stats)
+    len(df[df["ten"] == 7])  # different literal, same fingerprint
+    after = dict(sess.stats)
+    assert after["compiles"] == mid["compiles"]
+    assert after["hits"] == mid["hits"] + 1

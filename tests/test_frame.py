@@ -1,0 +1,127 @@
+"""End-to-end AFrame behaviour: all 12 paper benchmark expressions vs a
+numpy oracle (paper Table I), plus persist/setitem (Fig. 6)."""
+import numpy as np
+import pytest
+
+from repro.core.frame import AFrame
+from repro.engine.table import decode_strings
+
+
+@pytest.fixture()
+def df(session_with_data):
+    sess, raw = session_with_data
+    return AFrame("demo", "Data", session=sess), raw
+
+
+def test_exp1_total_count(df):
+    d, raw = df
+    assert len(d) == len(raw["unique1"])
+
+
+def test_exp2_project_head(df):
+    d, raw = df
+    h = d[["two", "four"]].head()
+    assert set(h) == {"two", "four"} and len(h["two"]) == 5
+
+
+def test_exp3_filter_count(df):
+    d, raw = df
+    n = len(d[(d["ten"] == 3) & (d["twentyPercent"] == 2) & (d["two"] == 1)])
+    ref = int(((raw["ten"] == 3) & (raw["twentyPercent"] == 2) & (raw["two"] == 1)).sum())
+    assert n == ref
+
+
+def test_exp4_group_count(df):
+    d, raw = df
+    g = d.groupby("oddOnePercent").agg("count")
+    assert g["count"].sum() == len(raw["unique1"])
+    assert len(g["count"]) == 100
+    k = int(g["oddOnePercent"][7])
+    assert g["count"][7] == (raw["oddOnePercent"] == k).sum()
+
+
+def test_exp5_map_upper_head(df):
+    d, raw = df
+    up = d["stringu1"].map(str.upper).head(3)
+    s = decode_strings(up["stringu1"])
+    assert len(s) == 3 and all(x == x.upper() for x in s)
+
+
+def test_exp6_max(df):
+    d, raw = df
+    assert d["unique1"].max() == raw["unique1"].max()
+
+
+def test_exp7_min(df):
+    d, raw = df
+    assert d["unique1"].min() == raw["unique1"].min()
+
+
+def test_exp8_group_max(df):
+    d, raw = df
+    g = d.groupby("twenty")["four"].agg("max")
+    for k, v in zip(g["twenty"], g["max_four"]):
+        assert v == raw["four"][raw["twenty"] == k].max()
+
+
+def test_exp9_sort_head(df):
+    d, raw = df
+    sh = d.sort_values("unique1", ascending=False).head(5)
+    assert list(sh["unique1"]) == sorted(raw["unique1"])[-5:][::-1]
+
+
+def test_exp10_selection_head(df):
+    d, raw = df
+    sel = d[d["ten"] == 4].head(5)
+    assert all(sel["ten"] == 4) and len(sel["ten"]) == 5
+
+
+def test_exp11_range_count(df):
+    d, raw = df
+    n = len(d[(d["onePercent"] >= 10) & (d["onePercent"] <= 30)])
+    assert n == int(((raw["onePercent"] >= 10) & (raw["onePercent"] <= 30)).sum())
+
+
+def test_exp12_join_count(df):
+    d, raw = df
+    d2 = AFrame("demo", "Data", session=d._session)
+    assert len(d.merge(d2, left_on="unique1", right_on="unique1")) == len(raw["unique1"])
+
+
+def test_mean_describe(df):
+    d, raw = df
+    assert abs(d["unique1"].mean() - raw["unique1"].mean()) < 0.5
+
+
+def test_setitem_and_persist(df):
+    d, raw = df
+    sub = d[d["two"] == 0][["unique1", "ten"]]
+    sub["ten_sq"] = sub["ten"] * sub["ten"]
+    out = sub.persist("TwoZero")
+    n = len(out)
+    assert n == int((raw["two"] == 0).sum())
+    h = out.head(4)
+    assert all(h["ten_sq"] == h["ten"] * h["ten"])
+
+
+def test_open_vs_closed_types(wisconsin_small):
+    """Paper 'AFrame' (open) vs 'AFrame Schema' (closed) both answer
+    identically; open pays a cast."""
+    from repro.engine.session import Session
+
+    t, raw = wisconsin_small
+    sess = Session()
+    sess.create_dataset("Open", t, dataverse="d", closed=False)
+    sess.create_dataset("Closed", t, dataverse="d", closed=True)
+    a = AFrame("d", "Open", session=sess)
+    b = AFrame("d", "Closed", session=sess)
+    assert len(a[a["ten"] == 3]) == len(b[b["ten"] == 3])
+
+
+def test_lazy_no_execution_until_action(df):
+    d, raw = df
+    sess = d._session
+    before = sess.stats["compiles"] + sess.stats["hits"]
+    filtered = d[d["ten"] == 1][["two", "four"]]  # builds plan only
+    assert sess.stats["compiles"] + sess.stats["hits"] == before
+    assert "WHERE" in filtered.query

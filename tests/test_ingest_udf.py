@@ -1,0 +1,116 @@
+"""Live ingestion (paper §III-A data feeds) and model UDFs (§III-C)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+from repro.udf import model_udf
+
+
+def test_feed_flush_and_query_consistency():
+    t = wisconsin.generate(2000, seed=3)
+    sess = Session()
+    sess.create_dataset("Live", t, dataverse="d", indexes=["onePercent"],
+                        primary="unique2")
+    df = AFrame("d", "Live", session=sess)
+    assert len(df) == 2000
+    feed = Feed(sess, "Live", "d", flush_rows=500)
+    extra = wisconsin.generate(600, seed=9)
+    rows = {k: np.asarray(v) for k, v in extra.columns.items()}
+    # shift keys so they do not collide
+    rows["unique2"] = rows["unique2"] + 2000
+    feed.push(rows)  # 600 >= 500 -> auto-flush
+    assert feed.stats["flushes"] == 1
+    df = AFrame("d", "Live", session=sess)
+    assert len(df) == 2600
+    # index still answers correctly after compaction
+    n = len(df[(df["onePercent"] >= 0) & (df["onePercent"] <= 4)])
+    raw1 = np.asarray(t.columns["onePercent"])
+    raw2 = rows["onePercent"]
+    want = int(((raw1 >= 0) & (raw1 <= 4)).sum() + ((raw2 >= 0) & (raw2 <= 4)).sum())
+    assert n == want
+
+
+def test_feed_buffers_below_threshold():
+    t = wisconsin.generate(100, seed=3)
+    sess = Session()
+    sess.create_dataset("Live", t, dataverse="d")
+    feed = Feed(sess, "Live", "d", flush_rows=1000)
+    feed.push({k: np.asarray(v)[:10] for k, v in t.columns.items()})
+    assert feed.stats["flushes"] == 0
+    assert len(AFrame("d", "Live", session=sess)) == 100  # not yet visible
+    feed.flush()
+    assert len(AFrame("d", "Live", session=sess)) == 110
+
+
+@pytest.fixture()
+def sentiment_setup():
+    """Tiny end-to-end: 'tweets' as fixed-width token columns + a trained
+    classifier UDF (the paper's Fig. 4/5 pipeline in miniature)."""
+    model_udf.clear_registry()
+    from repro.configs import get_config
+    from repro.models.registry import get_api
+
+    cfg = get_config("paper-lm").reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    model_udf.register_model("sentiment", params, cfg, classes=3)
+
+    rng = np.random.default_rng(0)
+    n = 256
+    tokens = rng.integers(0, cfg.vocab, (n, 16)).astype(np.int32)
+    sess = Session()
+    from repro.engine.table import Table
+
+    sess.create_dataset("Tweets", Table({
+        "id": np.arange(n, dtype=np.int32),
+        "text_tokens": tokens,
+        "ten": (np.arange(n) % 10).astype(np.int32),
+    }), dataverse="demo")
+    return sess, cfg, params, tokens
+
+
+def test_model_udf_map_and_persist(sentiment_setup):
+    sess, cfg, params, tokens = sentiment_setup
+    df = AFrame("demo", "Tweets", session=sess)
+    df["sentiment"] = df["text_tokens"].map("sentiment")
+    out = df.head(8)
+    assert set(out) >= {"id", "sentiment"}
+    assert np.all((out["sentiment"] >= 0) & (out["sentiment"] < 3))
+    # paper Input 14/15: filter on the prediction, persist
+    neg = df[df["sentiment"] == 0][["id", "sentiment"]]
+    saved = neg.persist("negTweets")
+    got = saved.collect()
+    assert np.all(got["sentiment"] == 0)
+    # prediction matches direct model application
+    from repro.udf.model_udf import get_udf
+
+    direct = np.asarray(get_udf("sentiment")(jnp.asarray(tokens)))
+    assert len(got["id"]) == int((direct == 0).sum())
+
+
+def test_udf_lazy_limit_pushdown(sentiment_setup):
+    """head(2) after map must run the model on 2 rows, not the table —
+    the paper's expression-5 lazy-evaluation win."""
+    sess, cfg, params, tokens = sentiment_setup
+    df = AFrame("demo", "Tweets", session=sess)
+    mapped = df["text_tokens"].map("sentiment")
+    plan_sql = sess.last_optimized if hasattr(sess, "last_optimized") else None
+    out = mapped.head(2)
+    from repro.core import plan as P
+
+    opt = sess.last_optimized
+    # optimized plan: Project(UDF) sits ABOVE Limit
+    assert isinstance(opt, P.Project)
+    assert isinstance(opt.children[0], P.Limit)
+    assert len(out[list(out)[0]]) == 2
+
+
+def test_unknown_udf_raises():
+    model_udf.clear_registry()
+    with pytest.raises(KeyError, match="no model UDF"):
+        model_udf.get_udf("nope")

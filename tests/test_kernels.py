@@ -1,0 +1,115 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.filter_count import filter_count
+from repro.kernels.flash_attention import flash_mha_fwd
+from repro.kernels.merge_join import merge_join_count
+from repro.kernels.segment_agg import segment_agg
+from repro.kernels.topk_mask import topk_merge
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n,k,block", [(1000, 1, 256), (5000, 3, 512),
+                                       (8192, 2, 4096), (300, 4, 128)])
+def test_filter_count_sweep(n, k, block):
+    cols = jnp.asarray(RNG.integers(0, 50, (k, n)), jnp.int32)
+    bounds = jnp.asarray(np.sort(RNG.integers(0, 50, (k, 2)), axis=1), jnp.int32)
+    nv = int(n * 0.9)
+    got = filter_count(cols, bounds, nv, block=block)
+    want = ref.filter_count(cols, bounds, nv)
+    assert int(got) == int(want)
+
+
+@pytest.mark.parametrize("n,c,g,block", [(1000, 1, 7, 256), (4096, 4, 20, 1024),
+                                         (513, 3, 100, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_agg_sweep(n, c, g, block, dtype):
+    vals = jnp.asarray(RNG.normal(size=(n, c)), dtype)
+    gids = jnp.asarray(RNG.integers(0, g, n), jnp.int32)
+    nv = n - 5
+    got = segment_agg(vals.astype(jnp.float32), gids, g, nv, block=block)
+    want = ref.segment_agg(vals.astype(jnp.float32), gids, g, nv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("nl,nr,dom,block", [(500, 700, 50, 128),
+                                             (2048, 2048, 5000, 512),
+                                             (100, 4000, 10, 256)])
+def test_merge_join_sweep(nl, nr, dom, block):
+    l = np.sort(RNG.integers(0, dom, nl)).astype(np.int32)
+    r = np.sort(RNG.integers(0, dom, nr)).astype(np.int32)
+    got = merge_join_count(jnp.asarray(l), jnp.asarray(r), nl - 3, nr - 7, block=block)
+    want = ref.merge_join_count(jnp.asarray(l), jnp.asarray(r), nl - 3, nr - 7)
+    assert int(got) == int(want)
+
+
+@pytest.mark.parametrize("n,k,block", [(2048, 5, 512), (4096, 1, 1024),
+                                       (1000, 8, 256)])
+def test_topk_sweep(n, k, block):
+    sc = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    mask = jnp.asarray(RNG.random(n) > 0.2)
+    nv = n - 11
+    v, i = topk_merge(sc, mask, nv, k, block=block)
+    smask = np.where(np.asarray(mask) & (np.arange(n) < nv), np.asarray(sc), -np.inf)
+    want = np.sort(smask)[::-1][:k]
+    np.testing.assert_allclose(np.asarray(v), want, rtol=1e-6)
+    # indices point at the right values
+    np.testing.assert_allclose(smask[np.asarray(i)], want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D,bq,bk", [
+    (1, 2, 2, 128, 16, 32, 32),    # MHA
+    (2, 4, 2, 256, 32, 64, 128),   # GQA, uneven blocks
+    (1, 8, 1, 64, 64, 64, 16),     # MQA, single q block
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_fwd_sweep(B, H, KV, S, D, bq, bk, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, H, S, D)), dtype) * 0.3
+    k = jnp.asarray(RNG.normal(size=(B, KV, S, D)), dtype) * 0.3
+    v = jnp.asarray(RNG.normal(size=(B, KV, S, D)), dtype) * 0.3
+    out, lse = flash_mha_fwd(q, k, v, causal=causal, bq=bq, bk=bk)
+    want = ref.mha(q, k, v, causal=causal)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_xla_twin_matches_pallas():
+    q = jnp.asarray(RNG.normal(size=(2, 4, 128, 32)), jnp.float32) * 0.4
+    k = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)), jnp.float32) * 0.4
+    v = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)), jnp.float32) * 0.4
+    o_pallas, _ = flash_mha_fwd(q, k, v, causal=True, bq=32, bk=32)
+    o_xla = ops.flash_attention(q, k, v, True, 32, "xla")
+    np.testing.assert_allclose(o_pallas, o_xla, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_vjp_matches_oracle_grads():
+    q = jnp.asarray(RNG.normal(size=(1, 4, 96, 16)), jnp.float32) * 0.4
+    k = jnp.asarray(RNG.normal(size=(1, 2, 96, 16)), jnp.float32) * 0.4
+    v = jnp.asarray(RNG.normal(size=(1, 2, 96, 16)), jnp.float32) * 0.4
+    f = lambda q, k, v: jnp.sum(jnp.tanh(ops.flash_attention(q, k, v, True, 32, "xla")))
+    g = lambda q, k, v: jnp.sum(jnp.tanh(ref.mha(q, k, v, causal=True)))
+    got = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D,bk", [(2, 4, 2, 256, 32, 64),
+                                           (1, 8, 8, 128, 64, 128),
+                                           (3, 6, 2, 512, 16, 256)])
+def test_flash_decode_sweep(B, H, KV, S, D, bk):
+    q = jnp.asarray(RNG.normal(size=(B, H, D)), jnp.float32) * 0.4
+    k = jnp.asarray(RNG.normal(size=(B, KV, S, D)), jnp.float32) * 0.4
+    v = jnp.asarray(RNG.normal(size=(B, KV, S, D)), jnp.float32) * 0.4
+    lens = jnp.asarray(RNG.integers(1, S, B), jnp.int32)
+    got = flash_decode(q, k, v, lens, bk=bk)
+    want = ref.decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

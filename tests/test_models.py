@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+same-family config and runs one forward/train step on CPU (output shapes, no
+NaNs), plus prefill→decode == full-forward consistency. The FULL configs are
+exercised only by the dry-run (ShapeDtypeStructs, never allocated).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models.config import SHAPES, cell_applicable
+from repro.models.optim import OptimConfig
+from repro.models.registry import batch_specs, get_api
+from repro.models.steps import (init_train_state, make_decode_step,
+                                make_prefill_step, make_train_step)
+
+
+def _smoke_batch(cfg, B=2, S=32, seed=1):
+    batch = {"tokens": jax.random.randint(jax.random.key(seed), (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.num_patches, cfg.patch_dim), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_train_smoke(arch):
+    cfg = get_config(arch).reduced()
+    api = get_api(cfg)
+    params, opt = init_train_state(jax.random.key(0), cfg, api)
+    batch = _smoke_batch(cfg)
+    step = jax.jit(make_train_step(cfg, OptimConfig(total_steps=10), api))
+    p2, o2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"])), m
+    assert np.isfinite(float(m["grad_norm"]))
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree_util.tree_leaves(params),
+                                jax.tree_util.tree_leaves(p2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_serve_consistency(arch):
+    """prefill(n) + decode(1) logits == prefill(n+1) last logits."""
+    cfg = get_config(arch).reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    batch = _smoke_batch(cfg, B=2, S=17)
+    full_batch = dict(batch)
+    part_batch = dict(batch)
+    part_batch["tokens"] = batch["tokens"][:, :16]
+    cache_full, logits_full = api.prefill(params, full_batch, cfg, 24)
+    cache, _ = api.prefill(params, part_batch, cfg, 24)
+    cache, logits_dec = api.decode(params, cache, batch["tokens"][:, 16:17], cfg)
+    d = float(jnp.max(jnp.abs(logits_full[:, -1] - logits_dec[:, -1])))
+    assert d < 0.1, f"{arch}: prefill/decode mismatch {d}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_loss_decreases(arch):
+    cfg = get_config(arch).reduced()
+    api = get_api(cfg)
+    params, opt = init_train_state(jax.random.key(0), cfg, api)
+    batch = _smoke_batch(cfg, B=2, S=32)
+    step = jax.jit(make_train_step(cfg, OptimConfig(lr=3e-3, warmup_steps=0,
+                                                    total_steps=100), api))
+    losses = []
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], f"{arch}: no learning {losses}"
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment block."""
+    expect = {
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }
+    for arch, (L, d, h, kv, ff, V) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+            == (L, d, h, kv, ff, V), arch
+    assert get_config("deepseek-moe-16b").moe.num_experts == 64
+    assert get_config("deepseek-moe-16b").moe.top_k == 6
+    assert get_config("moonshot-v1-16b-a3b").moe.num_shared == 2
+    assert get_config("qwen3-1.7b").qk_norm
+    assert get_config("qwen2-72b").qkv_bias
+    assert get_config("zamba2-1.2b").ssm_state == 64
+
+
+def test_long_500k_applicability():
+    """Sub-quadratic archs run long_500k; full-attention archs skip."""
+    runs = {a: cell_applicable(get_config(a), SHAPES["long_500k"])[0]
+            for a in ALL_ARCHS}
+    assert runs["rwkv6-1.6b"] and runs["zamba2-1.2b"]
+    assert not runs["qwen2-72b"] and not runs["whisper-base"]
+    assert sum(runs.values()) == 2
+
+
+def test_param_counts_are_sane():
+    """n_params() within ballpark of the marketing numbers."""
+    # moonshot: the ASSIGNED config says 48L × 64 experts, which arithmetically
+    # is ~26-28B total (the hf 16B model has 27L); we implement the assignment.
+    approx = {"qwen2-72b": 72e9, "qwen2.5-14b": 14e9, "qwen3-1.7b": 1.7e9,
+              "command-r-35b": 35e9, "rwkv6-1.6b": 1.6e9,
+              "deepseek-moe-16b": 16e9, "moonshot-v1-16b-a3b": 27e9,
+              "llava-next-mistral-7b": 7e9, "zamba2-1.2b": 1.2e9}
+    for arch, want in approx.items():
+        got = get_config(arch).n_params()
+        assert 0.5 * want < got < 1.7 * want, (arch, got, want)
+    # MoE active params ~3-5B for the (48L) A3B-style moonshot config
+    active = get_config("moonshot-v1-16b-a3b").n_active_params()
+    assert 1.5e9 < active < 6e9, active

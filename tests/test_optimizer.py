@@ -1,0 +1,128 @@
+"""Optimizer rewrite rules (the AsterixDB query-optimizer analogue)."""
+import pytest
+
+from repro.core import plan as P
+from repro.core.expr import BoolOp, Col, Compare, Lit, StrUpper
+from repro.core.optimizer import optimize
+from repro.core.catalog import Catalog, Dataset
+from repro.data import wisconsin
+from repro.engine.session import Session
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    sess = Session()
+    sess.create_dataset("Data", wisconsin.generate(1000), dataverse="d",
+                        indexes=["onePercent"], primary="unique2")
+    return sess.catalog
+
+
+def scan():
+    return P.Scan("Data", "d")
+
+
+def test_fuse_filters(catalog):
+    p = P.Filter(P.Filter(scan(), Compare("==", Col("a"), Lit(1))),
+                 Compare("==", Col("b"), Lit(2)))
+    opt = optimize(p, catalog, enable_index=False)
+    assert isinstance(opt, P.Filter)
+    assert isinstance(opt.children[0], P.Scan)
+    assert isinstance(opt.predicate, BoolOp)
+
+
+def test_limit_sort_becomes_topk(catalog):
+    p = P.Limit(P.Sort(scan(), "unique1", False), 5)
+    opt = optimize(p, catalog)
+    assert isinstance(opt, P.TopK)
+    assert opt.k == 5 and not opt.ascending
+
+
+def test_limit_pushes_below_project(catalog):
+    """The paper's expression-5 win: the UDF runs on n rows, not the table."""
+    p = P.Limit(P.Project(scan(), [("u", StrUpper(Col("stringu1")))]), 5)
+    opt = optimize(p, catalog)
+    assert isinstance(opt, P.Project)
+    assert isinstance(opt.children[0], P.Limit)
+
+
+def test_count_filter_fuses(catalog):
+    p = P.Agg(P.Filter(scan(), Compare("==", Col("ten"), Lit(1))),
+              [P.AggSpec("count", "count", None)])
+    opt = optimize(p, catalog, enable_index=False)
+    assert isinstance(opt, P.FilterCount)
+
+
+def test_count_join_fuses(catalog):
+    p = P.Agg(P.Join(scan(), scan(), "unique1", "unique1"),
+              [P.AggSpec("count", "count", None)])
+    opt = optimize(p, catalog)
+    assert isinstance(opt, P.JoinCount)
+
+
+def test_index_selected_for_range(catalog):
+    """Paper expression 11: range count -> index-only query."""
+    pred = BoolOp("AND", Compare(">=", Col("onePercent"), Lit(10)),
+                  Compare("<=", Col("onePercent"), Lit(30)))
+    p = P.Agg(P.Filter(scan(), pred), [P.AggSpec("count", "count", None)])
+    opt = optimize(p, catalog)
+    assert isinstance(opt, P.FilterCount)
+    assert isinstance(opt.children[0], P.IndexRangeScan)
+    assert opt.children[0].index_col == "onePercent"
+    assert "/*+ index(onePercent) */" in opt.to_sql()
+
+
+def test_index_point_with_residual(catalog):
+    pred = BoolOp("AND", Compare("==", Col("onePercent"), Lit(10)),
+                  Compare("==", Col("two"), Lit(1)))
+    p = P.Filter(scan(), pred)
+    opt = optimize(p, catalog)
+    assert isinstance(opt, P.IndexRangeScan)
+    assert opt.residual is not None
+
+
+def test_no_index_without_catalog_entry(catalog):
+    pred = Compare(">=", Col("twenty"), Lit(3))
+    p = P.Filter(scan(), pred)
+    opt = optimize(p, catalog)
+    assert isinstance(opt, P.Filter)  # twenty is not indexed
+
+
+def test_column_pruning_inserts_narrow_project(catalog):
+    p = P.Agg(scan(), [P.AggSpec("m", "max", "unique1")])
+    opt = optimize(p, catalog, enable_index=False)
+    # the scan should now be wrapped in a single-column project
+    inner = opt.children[0]
+    assert isinstance(inner, P.Project)
+    assert [n for n, _ in inner.outputs] == ["unique1"]
+
+
+def test_point_then_range_cache_collision():
+    """Regression (found by hypothesis): a point predicate (== v) and a range
+    predicate (>= a AND <= b) on an indexed column share a plan fingerprint;
+    the point plan must NOT alias one Lit as both bounds or a later cache hit
+    cross-binds the range literals."""
+    import numpy as np
+    from repro.data import wisconsin
+    from repro.engine.session import Session
+
+    t = wisconsin.generate(2000, seed=7)
+    raw = np.asarray(t.columns["onePercent"])
+    sess = Session()
+    sess.create_dataset("D", t, dataverse="r", indexes=["onePercent"])
+    point = P.Agg(P.Filter(P.Scan("D", "r"), Compare("==", Col("onePercent"), Lit(3))),
+                  [P.AggSpec("count", "count", None)])
+    assert sess.execute(point) == int((raw == 3).sum())
+    rng = P.Agg(P.Filter(P.Scan("D", "r"),
+                         BoolOp("AND", Compare(">=", Col("onePercent"), Lit(0)),
+                                Compare("<=", Col("onePercent"), Lit(1)))),
+                [P.AggSpec("count", "count", None)])
+    assert sess.execute(rng) == int(((raw >= 0) & (raw <= 1)).sum())
+    assert sess.stats["hits"] == 1  # same fingerprint, correct rebinding
+
+
+def test_optimizer_disabled_modes(catalog):
+    pred = BoolOp("AND", Compare(">=", Col("onePercent"), Lit(10)),
+                  Compare("<=", Col("onePercent"), Lit(30)))
+    p = P.Agg(P.Filter(scan(), pred), [P.AggSpec("count", "count", None)])
+    opt = optimize(p, catalog, enable_index=False, enable_pushdown=False)
+    assert isinstance(opt, P.Agg)

@@ -1,0 +1,127 @@
+"""Hypothesis property tests on the system's invariants.
+
+Core invariant: the optimizer NEVER changes results — for random data and
+random predicate trees, (optimized plan) == (unoptimized plan) == numpy
+oracle, with and without indexes.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plan as P
+from repro.core.expr import BoolOp, Col, Compare, Expr, Lit, Not
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine.session import Session
+
+COLS = ["two", "four", "ten", "twenty", "onePercent", "twentyPercent"]
+DOMAIN = {"two": 2, "four": 4, "ten": 10, "twenty": 20, "onePercent": 100,
+          "twentyPercent": 5}
+OPS = ["==", "!=", "<", "<=", ">", ">="]
+
+N_ROWS = 2_000
+
+
+def _sessions():
+    t = wisconsin.generate(N_ROWS, seed=7)
+    raw = {k: np.asarray(v) for k, v in t.columns.items()}
+    s_plain = Session(enable_index=False, enable_pushdown=False)
+    s_plain.create_dataset("D", t, dataverse="p")
+    s_opt = Session()
+    s_opt.create_dataset("D", t, dataverse="p",
+                         indexes=["onePercent", "ten"], primary="unique2")
+    return raw, s_plain, s_opt
+
+
+RAW, S_PLAIN, S_OPT = _sessions()
+
+
+@st.composite
+def predicates(draw, depth=0) -> tuple:
+    """Returns (Expr builder fn, numpy evaluator fn)."""
+    if depth < 2 and draw(st.booleans()):
+        op = draw(st.sampled_from(["AND", "OR", "NOT"]))
+        l_e, l_np = draw(predicates(depth=depth + 1))
+        if op == "NOT":
+            return (lambda: Not(l_e()), lambda r: ~l_np(r))
+        r_e, r_np = draw(predicates(depth=depth + 1))
+        if op == "AND":
+            return (lambda: BoolOp("AND", l_e(), r_e()),
+                    lambda r: l_np(r) & r_np(r))
+        return (lambda: BoolOp("OR", l_e(), r_e()),
+                lambda r: l_np(r) | r_np(r))
+    col = draw(st.sampled_from(COLS))
+    op = draw(st.sampled_from(OPS))
+    val = draw(st.integers(min_value=-1, max_value=DOMAIN[col]))
+    np_ops = {"==": np.equal, "!=": np.not_equal, "<": np.less,
+              "<=": np.less_equal, ">": np.greater, ">=": np.greater_equal}
+    return (lambda: Compare(op, Col(col), Lit(val)),
+            lambda r: np_ops[op](r[col], val))
+
+
+@settings(max_examples=25, deadline=None)
+@given(predicates())
+def test_filter_count_optimizer_equivalence(pred):
+    make_expr, np_eval = pred
+    want = int(np_eval(RAW).sum())
+    for sess in (S_PLAIN, S_OPT):
+        plan = P.Agg(P.Filter(P.Scan("D", "p"), make_expr()),
+                     [P.AggSpec("count", "count", None)])
+        got = sess.execute(plan)
+        assert got == want, (sess.mode, got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(predicates(), st.sampled_from(COLS), st.booleans(),
+       st.integers(min_value=1, max_value=7))
+def test_topk_equivalence(pred, key, ascending, k):
+    make_expr, np_eval = pred
+    mask = np_eval(RAW)
+    vals = np.sort(RAW[key][mask])
+    want = (vals[:k] if ascending else vals[::-1][:k])
+    for sess in (S_PLAIN, S_OPT):
+        plan = P.Limit(P.Sort(P.Filter(P.Scan("D", "p"), make_expr()),
+                              key, ascending), k)
+        got = sess.execute(plan)[key]
+        assert list(got) == list(want), (sess.mode, got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["two", "four", "ten", "twenty"]),
+       st.sampled_from(["count", "max", "min", "sum"]))
+def test_groupby_equivalence(key, op):
+    col = "unique1"
+    aggs = [P.AggSpec("out", op, None if op == "count" else col)]
+    plan = P.GroupAgg(P.Scan("D", "p"), [key], aggs)
+    for sess in (S_PLAIN, S_OPT):
+        got = sess.execute(plan)
+        for kv, ov in zip(got[key], got["out"]):
+            sel = RAW[col][RAW[key] == kv]
+            want = {"count": sel.size, "max": sel.max(), "min": sel.min(),
+                    "sum": sel.sum()}[op]
+            assert ov == want
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=99), st.integers(min_value=0, max_value=99))
+def test_range_count_index_equivalence(a, b):
+    lo, hi = min(a, b), max(a, b)
+    want = int(((RAW["onePercent"] >= lo) & (RAW["onePercent"] <= hi)).sum())
+    pred = BoolOp("AND", Compare(">=", Col("onePercent"), Lit(lo)),
+                  Compare("<=", Col("onePercent"), Lit(hi)))
+    plan = P.Agg(P.Filter(P.Scan("D", "p"), pred),
+                 [P.AggSpec("count", "count", None)])
+    assert S_OPT.execute(plan) == want  # index-only path
+    assert S_PLAIN.execute(plan) == want  # scan path
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(["unique1", "ten", "onePercent"]))
+def test_join_count_equivalence(key):
+    want = 0
+    vals, counts = np.unique(RAW[key], return_counts=True)
+    want = int((counts.astype(np.int64) ** 2).sum())
+    plan = P.Agg(P.Join(P.Scan("D", "p"), P.Scan("D", "p"), key, key),
+                 [P.AggSpec("count", "count", None)])
+    for sess in (S_PLAIN, S_OPT):
+        assert sess.execute(plan) == want
