@@ -17,6 +17,24 @@ import pathlib
 OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
 
 
+def _mode_comparison(rows: list[dict]) -> dict:
+    """Per-size, per-expression gspmd (aframe-schema) vs kernel
+    (aframe-kernel) expression timings + speedup — the BENCH_*.json artifact
+    that tracks the fused-kernel win across PRs."""
+    out: dict = {}
+    for r in rows:
+        if r["variant"] not in ("aframe-schema", "aframe-kernel"):
+            continue
+        cell = out.setdefault(r["size"], {}).setdefault(r["expression"], {})
+        key = "gspmd_s" if r["variant"] == "aframe-schema" else "kernel_s"
+        cell[key] = r["expr_s"]
+    for exprs in out.values():
+        for cell in exprs.values():
+            if "gspmd_s" in cell and "kernel_s" in cell and cell["kernel_s"] > 0:
+                cell["speedup"] = round(cell["gspmd_s"] / cell["kernel_s"], 3)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--single-node", action="store_true")
@@ -25,6 +43,9 @@ def main() -> None:
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--full", action="store_true",
                     help="full dataset sizes (XS..XL); default quick=XS,S")
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated size names (e.g. XS) — overrides "
+                         "--full; used by the CI smoke run")
     args = ap.parse_args()
     run_all = not (args.single_node or args.scaling or args.model or args.roofline)
     OUT.mkdir(parents=True, exist_ok=True)
@@ -32,9 +53,18 @@ def main() -> None:
     if args.single_node or run_all:
         from benchmarks.wisconsin_bench import SIZES, run_benchmark
 
-        sizes = SIZES if args.full else {k: SIZES[k] for k in ("XS", "S")}
+        if args.sizes:
+            sizes = {k: SIZES[k] for k in args.sizes.split(",")}
+        elif args.full:
+            sizes = SIZES
+        else:
+            sizes = {k: SIZES[k] for k in ("XS", "S")}
         print(f"== single-node DataFrame benchmark (sizes={list(sizes)}) ==")
-        run_benchmark(sizes, OUT / "single_node.csv")
+        rows = run_benchmark(sizes, OUT / "single_node.csv")
+        bench = _mode_comparison(rows)
+        bench_path = OUT.parents[1] / "BENCH_wisconsin.json"
+        bench_path.write_text(json.dumps(bench, indent=2) + "\n")
+        print(f"gspmd-vs-kernel comparison -> {bench_path}")
 
     if args.scaling or run_all:
         from benchmarks.scaling_bench import run_scaling

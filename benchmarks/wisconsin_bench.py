@@ -5,8 +5,13 @@ Variants (paper labels):
   numpy-eager    — "Pandas": eager evaluation over host arrays loaded from
                    disk files; every expression materializes fully.
   aframe         — open datatype, no indexes (schema-on-read cast per access)
-  aframe-schema  — closed datatype (typed columns)
+  aframe-schema  — closed datatype (typed columns); mode=gspmd baseline
   aframe-index   — closed + primary(unique2) + secondary(onePercent, unique1)
+  aframe-kernel  — closed datatype, mode=kernel: fusable plans lower onto the
+                   Pallas relational kernels (filter_count / segment_agg /
+                   merge_join / topk). Compare against aframe-schema for the
+                   gspmd-vs-kernel speedup (same data, same plans, different
+                   physical operators).
 
 Methodology mirrors §IV-B: each expression runs WARMUP+RUNS times with
 randomized predicate literals; the first WARMUP results are dropped (JIT
@@ -177,12 +182,13 @@ def build_variants(n_rows: int, tmp: pathlib.Path, mesh=None, mode="auto"):
         np.save(disk / f"{k}.npy", np.asarray(v))
 
     variants = [NumpyEager(disk)]
-    for name, closed, indexes, primary in [
-        ("aframe", False, [], None),
-        ("aframe-schema", True, [], None),
-        ("aframe-index", True, ["onePercent", "unique1"], "unique2"),
+    for name, closed, indexes, primary, vmode in [
+        ("aframe", False, [], None, mode),
+        ("aframe-schema", True, [], None, mode),
+        ("aframe-index", True, ["onePercent", "unique1"], "unique2", mode),
+        ("aframe-kernel", True, [], None, "kernel"),
     ]:
-        sess = Session(mesh=mesh, mode=mode)
+        sess = Session(mesh=mesh, mode=vmode)
         sess.create_dataset("data", table, dataverse="bench", closed=closed,
                             indexes=indexes, primary=primary)
         sess.create_dataset("data_r", table, dataverse="bench", closed=closed,
@@ -210,8 +216,10 @@ def run_benchmark(sizes: dict[str, int], out_csv: pathlib.Path, mesh=None,
                         fn(v, rng, n)
                         times.append(time.perf_counter() - t0)
                     expr_s = float(np.mean(times[WARMUP:]))
+                    sess = getattr(v, "sess", None)
                     rows.append({
                         "size": size_name, "rows": n, "variant": v.name,
+                        "mode": sess.mode if sess is not None else "eager",
                         "expression": expr_name,
                         "expr_s": expr_s, "creation_s": creation,
                         "total_s": expr_s + creation,

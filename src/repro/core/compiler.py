@@ -6,12 +6,18 @@ params) and jits once per plan *fingerprint* (literal values are runtime
 params, so the benchmark's randomized predicates reuse the executable — the
 prepared-statement effect the paper gets from AsterixDB's plan cache).
 
-Two execution modes:
+Three execution modes:
   * ``gspmd``     — plain jnp ops; under jit XLA GSPMD inserts collectives.
     This is the paper-faithful baseline ("let the optimizer/partitioner do
     it").
   * ``shard_map`` — the beyond-paper optimized mode: relational operators
     from engine/distributed.py with hand-placed minimal collectives.
+  * ``kernel``    — fusable plan shapes lower onto the Pallas relational
+    kernels (kernels/ops.py backend dispatch: compiled Pallas on TPU,
+    interpret/XLA twins elsewhere). FusedRangeCount -> filter_count,
+    GroupAgg -> segment_agg, JoinCount -> merge_join_count, TopK ->
+    topk_merge; anything the kernels don't cover falls back to the
+    gspmd/shard_map lowering of the same node.
 """
 from __future__ import annotations
 
@@ -34,11 +40,18 @@ class ExecContext:
     catalog: Catalog
     mesh: Any = None            # jax Mesh when distributed
     data_axes: tuple = ("data",)
-    mode: str = "gspmd"         # gspmd | shard_map
+    mode: str = "gspmd"         # gspmd | shard_map | kernel
+    kernel_backend: Optional[str] = None  # kernels/ops dispatch: None|xla|pallas
 
     @property
     def distributed(self) -> bool:
-        return self.mode == "shard_map" and self.mesh is not None
+        # kernel mode over a mesh composes via shard_map: each shard runs the
+        # kernel locally, partials merge with the existing collectives.
+        return self.mode in ("shard_map", "kernel") and self.mesh is not None
+
+    @property
+    def use_kernels(self) -> bool:
+        return self.mode == "kernel"
 
 
 @dataclasses.dataclass
@@ -49,11 +62,9 @@ class CompiledQuery:
     fn: Callable                # jitted: (tables, params) -> result
     leaf_keys: list             # dataset keys feeding `tables`
     lits: list                  # literal slots (plan order)
+    raw_fn: Callable = None     # unjitted build (jaxpr inspection in tests)
 
-    def run(self, catalog: Catalog, lits=None):
-        """``lits``: literal slots from the *current* plan instance — on a
-        plan-cache hit the executable is reused but the fresh literal values
-        must be bound (same fingerprint ⇒ same slot order)."""
+    def gather_tables(self, catalog: Catalog) -> dict:
         tables = {}
         for key in self.leaf_keys:
             ds = catalog.get(*key)
@@ -62,8 +73,17 @@ class CompiledQuery:
                 if getattr(ix, "sorted_keys", None) is not None:
                     tables[f"{key[0]}.{key[1]}"][f"__ix_{ix.column}__"] = ix.sorted_keys
                     tables[f"{key[0]}.{key[1]}"][f"__ixid_{ix.column}__"] = ix.row_ids
-        params = param_values(lits if lits is not None else self.lits)
-        return self.fn(tables, params)
+        return tables
+
+    def run(self, catalog: Catalog, lits=None, params=None):
+        """``params``: pre-bound literal values in slot order (the Session's
+        plan cache computes them via its literal binding). ``lits``: literal
+        slots from the *current* plan instance — on a plan-cache hit the
+        executable is reused but the fresh literal values must be bound
+        (same fingerprint ⇒ same slot order)."""
+        if params is None:
+            params = param_values(lits if lits is not None else self.lits)
+        return self.fn(self.gather_tables(catalog), params)
 
 
 def _scan_leaves(plan: P.Plan) -> list[tuple[str, str]]:
@@ -81,7 +101,8 @@ def compile_plan(plan: P.Plan, ctx: ExecContext) -> CompiledQuery:
     lits = collect_params(P.all_exprs(plan))
     kind, build = _lower_terminal(plan, ctx)
     jitted = jax.jit(build)
-    return CompiledQuery(plan, plan.fingerprint(), kind, jitted, leaf_keys, lits)
+    return CompiledQuery(plan, plan.fingerprint(), kind, jitted, leaf_keys, lits,
+                         raw_fn=build)
 
 
 # -- streaming lowering -------------------------------------------------------
@@ -155,14 +176,20 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
 
     if isinstance(node, P.TopK):
         child = _lower_stream(node.children[0], ctx)
+        # one lowering, parameterized by the selection primitive: kernel mode
+        # swaps in the block_topk Pallas kernel, everything else is shared.
+        select = physical.kernel_topk_select(ctx.kernel_backend) \
+            if ctx.use_kernels else physical._select_topk
 
         def fn(tables, params):
             env, mask = child(tables, params)
             if ctx.distributed:
                 from repro.engine import distributed as D
                 return D.dist_topk(ctx.mesh, ctx.data_axes, env, mask,
-                                   node.key, node.k, node.ascending)
-            return physical.topk(env, mask, node.key, node.k, node.ascending)
+                                   node.key, node.k, node.ascending,
+                                   select=select)
+            return physical.topk(env, mask, node.key, node.k, node.ascending,
+                                 select=select)
         return fn
 
     if isinstance(node, P.Sort):
@@ -236,6 +263,16 @@ def _lower_groupagg(node: P.GroupAgg, ctx: ExecContext) -> Callable:
     child = _lower_stream(node.children[0], ctx)
     aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
 
+    # kernel mode: count/sum/mean all reduce to one segment-sum, so every
+    # AggSpec fuses into a single (BLOCK, C) value tile — one one-hot-matmul
+    # kernel launch per grid step (col 0 counts, cols 1.. sum the value
+    # columns). max/min are not sum-shaped, and the MXU accumulates in f32 —
+    # fusion requires a static proof of exactness (catalog bounds) or the
+    # generic native-dtype path keeps the bit-identical-to-gspmd contract.
+    if ctx.use_kernels and all(op in ("count", "sum", "mean") for _, op, _ in aggs) \
+            and _kernel_groupagg_exact(node, ctx, aggs):
+        return _lower_groupagg_kernel(node, ctx, key, lo, num_groups, child, aggs)
+
     def fn(tables, params):
         env, mask = child(tables, params)
         if ctx.distributed:
@@ -250,10 +287,118 @@ def _lower_groupagg(node: P.GroupAgg, ctx: ExecContext) -> Callable:
     return fn
 
 
+_F32_EXACT = 1 << 24  # every int in [-2^24, 2^24] is exactly representable
+
+
+def _kernel_groupagg_exact(node: P.GroupAgg, ctx: ExecContext, aggs: list) -> bool:
+    """The segment_agg kernel accumulates in float32 on the MXU. That is
+    bit-identical to the generic path only when every per-group sum is an
+    exactly-representable integer: counts need n < 2^24; sum/mean need an
+    integer value column whose catalog bounds prove n * max|value| < 2^24.
+
+    The bound must come from the table the column ACTUALLY originates from:
+    `_trace_col` follows Project renames and join name-resolution down to a
+    leaf; untraceable provenance (computed expressions, suffixed join
+    collisions) refuses fusion — refusal is always safe. n is the largest
+    leaf row count, an upper bound on any stream length (joins emit the
+    probe side's length, filters/limits only shrink)."""
+    tables = [ctx.catalog.get(l.dataverse, l.dataset).table
+              for l in P.walk(node) if isinstance(l, P.Scan)]
+    if not tables:
+        return False
+    n = max(len(t) for t in tables)
+    if n >= _F32_EXACT:
+        return False
+    for _, op, col in aggs:
+        if op == "count":
+            continue
+        m = _trace_col(node.children[0], col, ctx)
+        if m is None or m.is_string or not np.issubdtype(m.dtype, np.integer):
+            return False
+        if m.lo is None or m.hi is None:
+            return False
+        if n * max(abs(int(m.lo)), abs(int(m.hi))) >= _F32_EXACT:
+            return False
+    return True
+
+
+def _trace_col(node: P.Plan, col: str, ctx: ExecContext):
+    """Resolve the ColumnMeta a stream column name originates from, following
+    Project renames and join name-resolution; None when provenance cannot be
+    established (computed expressions, suffixed join collisions)."""
+    from repro.core.expr import Col
+    from repro.core.window import Window
+
+    if isinstance(node, Window) and col == node.out_name:
+        return None  # computed analytic column, no catalog bounds
+    if isinstance(node, (P.Scan, P.IndexRangeScan)):
+        t = ctx.catalog.get(node.dataverse, node.dataset).table
+        return t.meta.get(col)
+    if isinstance(node, P.Project):
+        for name, e in node.outputs:
+            if name == col:
+                if isinstance(e, Col):
+                    return _trace_col(node.children[0], e.name, ctx)
+                return None
+        return None
+    if isinstance(node, P.Join):
+        # join_materialize: the left side wins a bare name; right-only names
+        # pass through; a collision suffixes the right column (untraceable by
+        # its stream name, so it resolves to None here).
+        left_meta = _trace_col(node.children[0], col, ctx)
+        if left_meta is not None:
+            return left_meta
+        return _trace_col(node.children[1], col, ctx)
+    if len(node.children) == 1:  # filter/limit/sort/window pass columns through
+        return _trace_col(node.children[0], col, ctx)
+    return None
+
+
+def _lower_groupagg_kernel(node: P.GroupAgg, ctx: ExecContext, key: str,
+                           lo: int, num_groups: int, child: Callable,
+                           aggs: list) -> Callable:
+    vcols: list[str] = []  # distinct value columns, first-use order
+    for _, op, col in aggs:
+        if op in ("sum", "mean") and col not in vcols:
+            vcols.append(col)
+
+    def fn(tables, params):
+        env, mask = child(tables, params)
+        key_col = env[key]
+        # dead rows get gid -1: the kernel's live-check drops them, so an
+        # arbitrary (non-prefix) mask needs no compaction.
+        gid = jnp.where(mask, (key_col - lo).astype(jnp.int32), -1)
+        tiles = [jnp.ones(mask.shape, jnp.float32)]
+        tiles += [env[c].astype(jnp.float32) for c in vcols]
+        values = jnp.stack(tiles, axis=1)  # (n, 1 + |vcols|)
+        if ctx.distributed:
+            from repro.engine import distributed as D
+            sums = D.dist_kernel_group_agg(ctx.mesh, ctx.data_axes, gid, values,
+                                           num_groups, backend=ctx.kernel_backend)
+        else:
+            from repro.kernels import ops
+            sums = ops.segment_agg(values, gid, num_groups, mask.shape[0],
+                                   backend=ctx.kernel_backend)
+        counts = sums[:, 0].astype(jnp.int32)
+        out = {key: jnp.arange(lo, lo + num_groups, dtype=key_col.dtype)}
+        for out_name, op, col in aggs:
+            if op == "count":
+                out[out_name] = counts
+            elif op == "sum":
+                out[out_name] = sums[:, 1 + vcols.index(col)].astype(env[col].dtype)
+            else:  # mean: exact-integer f32 sum / count, as the generic path
+                out[out_name] = sums[:, 1 + vcols.index(col)] / jnp.maximum(counts, 1)
+        return out, counts > 0
+    return fn
+
+
 # -- terminal lowering -----------------------------------------------------------
 
 
 def _lower_terminal(plan: P.Plan, ctx: ExecContext) -> tuple[str, Callable]:
+    if isinstance(plan, P.FusedRangeCount):
+        return "scalar", _lower_fused_range_count(plan, ctx)
+
     if isinstance(plan, P.FilterCount):
         return "scalar", _lower_filter_count(plan, ctx)
 
@@ -295,6 +440,44 @@ def _lower_terminal(plan: P.Plan, ctx: ExecContext) -> tuple[str, Callable]:
     return "table", stream
 
 
+def _lower_fused_range_count(plan: P.FusedRangeCount, ctx: ExecContext) -> Callable:
+    """Lower onto the filter_count kernel: one (k, n) int32 tile of predicate
+    columns + a (k, 2) runtime bounds operand. The column read bypasses the
+    generic stream path so NO row mask is ever built outside the kernel —
+    when the base table carries a ``__valid__`` padding column it folds in as
+    one extra kernel row with bounds (1, 1)."""
+    leaf = plan.children[0]
+    if isinstance(leaf, P.Project):  # projection pushdown wraps the Scan
+        leaf = leaf.children[0]
+    assert isinstance(leaf, P.Scan), "FusedRangeCount lowers over a Scan leaf"
+    key = f"{leaf.dataverse}.{leaf.dataset}"
+    ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
+    has_valid = "__valid__" in ds.table.columns
+    cols, los, his = plan.cols, plan.los, plan.his
+
+    def fn(tables, params):
+        t = tables[key]
+        rows = [t[c].astype(jnp.int32) for c in cols]
+        lo_vals = [jnp.asarray(e.evaluate({}, params), jnp.int32) for e in los]
+        hi_vals = [jnp.asarray(e.evaluate({}, params), jnp.int32) for e in his]
+        if has_valid:
+            rows.append(t["__valid__"].astype(jnp.int32))
+            lo_vals.append(jnp.int32(1))
+            hi_vals.append(jnp.int32(1))
+        mat = jnp.stack(rows)
+        bounds = jnp.stack([jnp.stack(lo_vals), jnp.stack(hi_vals)], axis=1)
+        if ctx.distributed:
+            from repro.engine import distributed as D
+            cnt = D.dist_kernel_filter_count(ctx.mesh, ctx.data_axes, mat, bounds,
+                                             backend=ctx.kernel_backend)
+        else:
+            from repro.kernels import ops
+            cnt = ops.filter_count(mat, bounds, mat.shape[1],
+                                   backend=ctx.kernel_backend)
+        return {"count": cnt.astype(jnp.int32)}
+    return fn
+
+
 def _lower_filter_count(plan: P.FilterCount, ctx: ExecContext) -> Callable:
     child_node = plan.children[0]
 
@@ -334,6 +517,20 @@ def _lower_filter_count(plan: P.FilterCount, ctx: ExecContext) -> Callable:
     return fn
 
 
+def _join_key_int32_safe(side: P.Plan, col: str, ctx: ExecContext) -> bool:
+    """True when catalog bounds prove the join key column casts to int32
+    losslessly (the merge_join kernel's tile dtype)."""
+    for leaf in P.walk(side):
+        if isinstance(leaf, P.Scan):
+            m = ctx.catalog.get(leaf.dataverse, leaf.dataset).table.meta.get(col)
+            if m is None or m.is_string or not np.issubdtype(m.dtype, np.integer):
+                return False
+            i32 = np.iinfo(np.int32)
+            return m.lo is not None and m.hi is not None \
+                and m.lo >= i32.min and m.hi <= i32.max
+    return False
+
+
 def _lower_join_count(plan: P.JoinCount, ctx: ExecContext) -> Callable:
     lchild = _lower_stream(plan.children[0], ctx)
     rchild = _lower_stream(plan.children[1], ctx)
@@ -346,6 +543,34 @@ def _lower_join_count(plan: P.JoinCount, ctx: ExecContext) -> Callable:
         ds = ctx.catalog.get(rleaf.dataverse, rleaf.dataset)
         presorted = ds.index_on(right_on) is not None
     rkey_name = f"__ix_{right_on}__" if presorted else right_on
+
+    # the merge_join kernel works on int32 tiles: both key columns need
+    # catalog bounds proving a lossless cast, else the generic native-dtype
+    # path keeps the counts exact (wider-int values would wrap silently).
+    if ctx.use_kernels and _join_key_int32_safe(plan.children[0], left_on, ctx) \
+            and _join_key_int32_safe(plan.children[1], right_on, ctx):
+        def fn(tables, params):
+            lenv, lm = lchild(tables, params)
+            renv, rm = rchild(tables, params)
+            if presorted:
+                rkey = tables[f"{rleaf.dataverse}.{rleaf.dataset}"][rkey_name]
+            else:
+                rkey = renv[right_on]
+            if ctx.distributed:
+                from repro.engine import distributed as D
+                cnt = D.dist_kernel_join_count(ctx.mesh, ctx.data_axes,
+                                               lenv[left_on], lm, rkey, rm,
+                                               presorted_right=presorted,
+                                               backend=ctx.kernel_backend)
+                return {"count": cnt}
+            from repro.kernels import ops
+            ls = ops.sort_join_keys(lenv[left_on], lm)
+            rs = ops.sort_join_keys(rkey, rm, presorted=presorted)
+            nl = jnp.sum(lm, dtype=jnp.int32)
+            nr = jnp.sum(rm, dtype=jnp.int32)
+            cnt = ops.merge_join_count(ls, rs, nl, nr, backend=ctx.kernel_backend)
+            return {"count": cnt.astype(jnp.int32)}
+        return fn
 
     def fn(tables, params):
         lenv, lm = lchild(tables, params)

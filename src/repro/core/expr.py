@@ -126,11 +126,19 @@ class Col(Expr):
 
 class Lit(Expr):
     """A literal. At compile time each Lit receives a slot index; at run time
-    its value arrives via the params vector (jit-stable)."""
+    its value arrives via the params vector (jit-stable).
 
-    def __init__(self, value: Any):
+    ``source`` marks a literal the *optimizer* synthesized as a mirror of a
+    user literal (e.g. the second bound of a ``==`` range): at plan-cache
+    rebind time its value follows the source's fresh value. A Lit with no
+    source that is absent from the raw plan is a true constant (sentinel
+    bounds) and rebinds to its compile-time value.
+    """
+
+    def __init__(self, value: Any, source: "Lit | None" = None):
         self.value = value
         self.slot: int | None = None
+        self.source = source
 
     def evaluate(self, env, params):
         if self.slot is None:  # un-parameterized evaluation (tests)
@@ -335,24 +343,30 @@ class ModelUDF(Expr):
 # ---------------------------------------------------------------------------
 
 
-def collect_params(exprs: Sequence[Expr]) -> list[Lit]:
-    """Assign param slots to every literal in plan order; returns the slots."""
+def ordered_lits(exprs: Sequence[Expr]) -> list[Lit]:
+    """Every literal in plan order, *without* assigning slots (used to read a
+    fresh plan instance's literal values on a plan-cache hit)."""
     lits: list[Lit] = []
     for e in exprs:
         lits.extend(e.literals())
+    return lits
+
+
+def collect_params(exprs: Sequence[Expr]) -> list[Lit]:
+    """Assign param slots to every literal in plan order; returns the slots."""
+    lits = ordered_lits(exprs)
     for i, lit in enumerate(lits):
         lit.slot = i
     return lits
 
 
-def param_values(lits: Sequence[Lit]) -> list[jax.Array]:
-    out = []
-    for lit in lits:
-        v = lit.value
-        if isinstance(v, str):
-            from repro.engine.table import encode_strings
+def encode_param(v: Any) -> jax.Array:
+    if isinstance(v, str):
+        from repro.engine.table import encode_strings
 
-            out.append(jnp.asarray(encode_strings([v])[0]))
-        else:
-            out.append(jnp.asarray(v))
-    return out
+        return jnp.asarray(encode_strings([v])[0])
+    return jnp.asarray(v)
+
+
+def param_values(lits: Sequence[Lit]) -> list[jax.Array]:
+    return [encode_param(lit.value) for lit in lits]

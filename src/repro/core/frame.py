@@ -272,17 +272,22 @@ class AFrame:
         return self._session.execute(self._plan)
 
     def describe(self) -> dict[str, dict[str, float]]:
-        cols = [c for c in self._current_columns()]
+        """min/max/mean/count per numeric column. String columns are skipped
+        by catalog metadata (not by swallowing execution errors)."""
+        meta = {}
+        for node in P.walk(self._plan):
+            if isinstance(node, P.Scan):
+                ds = self._session.catalog.get(node.dataverse, node.dataset)
+                meta = ds.table.meta
+                break
         out = {}
-        for c in cols:
-            ds_meta = None
-            try:
-                specs = [P.AggSpec(f"{op}", op, c) for op in ("min", "max", "mean")]
-                specs.append(P.AggSpec("count", "count", None))
-                r = self._session.execute(P.Agg(self._project_plan([(c, Col(c))]), specs))
-                out[c] = r if isinstance(r, dict) else {"value": r}
-            except Exception:
+        for c in self._current_columns():
+            if c in meta and meta[c].is_string:
                 continue
+            specs = [P.AggSpec(f"{op}", op, c) for op in ("min", "max", "mean")]
+            specs.append(P.AggSpec("count", "count", None))
+            r = self._session.execute(P.Agg(self._project_plan([(c, Col(c))]), specs))
+            out[c] = r if isinstance(r, dict) else {"value": r}
         return out
 
     def persist(self, name: str, dataverse: Optional[str] = None):

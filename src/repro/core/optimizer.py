@@ -21,13 +21,20 @@ plans and data.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core import plan as P
 from repro.core.catalog import Catalog
 from repro.core.expr import BoolOp, Col, Compare, Expr, Lit
 
+# Sentinel bounds for one-sided ranges; the filter_count kernel operates on
+# int32 column tiles, so the sentinels are the int32 domain edges.
+_RANGE_MIN = int(np.iinfo(np.int32).min)
+_RANGE_MAX = int(np.iinfo(np.int32).max)
+
 
 def optimize(root: P.Plan, catalog: Catalog | None = None, *, enable_index: bool = True,
-             enable_pushdown: bool = True) -> P.Plan:
+             enable_pushdown: bool = True, enable_kernel_fusion: bool = False) -> P.Plan:
     prev_fp = None
     node = root
     for _ in range(12):  # fixpoint with a safety bound
@@ -37,6 +44,8 @@ def optimize(root: P.Plan, catalog: Catalog | None = None, *, enable_index: bool
             node = _rewrite(node, _fuse_agg)
         if enable_index and catalog is not None:
             node = _rewrite(node, lambda n: _select_index(n, catalog))
+        if enable_kernel_fusion and catalog is not None:
+            node = _rewrite(node, lambda n: _fuse_range_count(n, catalog))
         fp = node.fingerprint()
         if fp == prev_fp:
             break
@@ -123,7 +132,7 @@ def _range_bounds(conjuncts: list[Expr], column: str):
                     # excluded), so the compiled executable's two param slots
                     # must map to two distinct Lit objects or a plan-cache
                     # hit cross-binds them (found by hypothesis).
-                    lo, hi = r, Lit(r.value)
+                    lo, hi = r, Lit(r.value, source=r)
                     used = True
                 elif c.op in (">=",):
                     lo = r
@@ -171,6 +180,57 @@ def _select_index(node: P.Plan, catalog: Catalog):
     return None
 
 
+def _fuse_range_count(node: P.Plan, catalog: Catalog):
+    """FilterCount over Scan whose predicate fully decomposes into conjuncts
+    of ``Col {==,>=,<=} Lit`` on typed integer columns -> FusedRangeCount
+    (one filter_count kernel row per conjunct, bounds as runtime params).
+
+    Partial matches do NOT fuse: any residual conjunct (OR, !=, strict
+    bounds, string/float columns) leaves the plan on the generic mask path —
+    the kernel mode's graceful fallback.
+    """
+    if not isinstance(node, P.FilterCount) or node.predicate is None:
+        return None
+    scan = node.children[0]
+    if not isinstance(scan, P.Scan):
+        return None
+    try:
+        ds = catalog.get(scan.dataverse, scan.dataset)
+    except KeyError:
+        return None
+    cols: list[str] = []
+    los: list[Expr] = []
+    his: list[Expr] = []
+    for c in _split_conjuncts(node.predicate):
+        if not isinstance(c, Compare):
+            return None
+        l, r = c.children
+        if not (isinstance(l, Col) and isinstance(r, Lit)):
+            return None
+        meta = ds.table.meta.get(l.name)
+        if meta is None or meta.is_string or not np.issubdtype(meta.dtype, np.integer):
+            return None
+        # the kernel evaluates on int32 tiles: column bounds must prove the
+        # cast lossless, or wider-int values wrap and counts corrupt.
+        if meta.lo is None or meta.hi is None \
+                or meta.lo < _RANGE_MIN or meta.hi > _RANGE_MAX:
+            return None
+        if not isinstance(r.value, (int, np.integer)):
+            return None
+        if c.op == "==":
+            lo, hi = r, Lit(r.value, source=r)
+        elif c.op == ">=":
+            lo, hi = r, Lit(_RANGE_MAX)
+        elif c.op == "<=":
+            lo, hi = Lit(_RANGE_MIN), r
+        else:  # strict bounds / != : conservative, stay on the mask path
+            return None
+        cols.append(l.name)
+        los.append(lo)
+        his.append(hi)
+    return P.FusedRangeCount(scan, cols, los, his)
+
+
 # -- projection pushdown ------------------------------------------------------
 
 
@@ -200,6 +260,10 @@ def _prune_columns(node: P.Plan, catalog: Catalog, needed: set[str] | None = Non
             for e in node.exprs():
                 child_needed |= e.columns()
         kids = (_prune_columns(node.children[0], catalog, child_needed),)
+        return _with_children(node, kids)
+
+    if isinstance(node, P.FusedRangeCount):
+        kids = (_prune_columns(node.children[0], catalog, set(node.cols)),)
         return _with_children(node, kids)
 
     if isinstance(node, (P.Agg, P.GroupAgg, P.TopK, P.Sort)):

@@ -269,6 +269,46 @@ class FilterCount(Plan):
         return f"SELECT VALUE COUNT(*) FROM ({base}) t WHERE {self.predicate.to_sql()}"
 
 
+class FusedRangeCount(Plan):
+    """COUNT(*) over a conjunction of inclusive range predicates on integer
+    columns, directly over a Scan. The kernel execution mode lowers this onto
+    the ``filter_count`` Pallas kernel: one pass over a (k, n) column tile,
+    bounds arriving as a (k, 2) runtime operand — so the benchmark's
+    randomized literals hit the plan cache and no intermediate mask column
+    ever materializes in HBM.
+
+    One row per source conjunct: ``col == v`` becomes (v, v'), ``col >= v``
+    becomes (v, +sentinel), ``col <= v`` becomes (-sentinel, v). ``los`` and
+    ``his`` are Lit exprs (runtime params), never shared objects (see the
+    cache-cross-binding note in optimizer._range_bounds).
+    """
+
+    def __init__(self, child: Plan, cols: Sequence[str],
+                 los: Sequence[Expr], his: Sequence[Expr]):
+        self.children = (child,)
+        self.cols = tuple(cols)
+        self.los, self.his = tuple(los), tuple(his)
+
+    def exprs(self):
+        out: list[Expr] = []
+        for lo, hi in zip(self.los, self.his):
+            out.extend((lo, hi))
+        return out
+
+    def fingerprint(self):
+        # bounds are runtime params: any conjunction over the same column row
+        # list shares one executable (==, >=, <= all lower identically).
+        return f"fusedrangecount([{','.join(self.cols)}],{self.children[0].fingerprint()})"
+
+    def to_sql(self):
+        parts = [f"{lo.to_sql()} <= t.{c} AND t.{c} <= {hi.to_sql()}"
+                 for c, lo, hi in zip(self.cols, self.los, self.his)]
+        return (
+            f"SELECT VALUE COUNT(*) FROM ({self.children[0].to_sql()}) t "
+            f"WHERE {' AND '.join(parts)}"
+        )
+
+
 class JoinCount(Plan):
     """Fused join+count (paper expression 12: ``len(pd.merge(...))``)."""
 

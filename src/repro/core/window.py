@@ -96,7 +96,7 @@ def execute_window(env: dict, mask: jax.Array, node: Window) -> tuple[dict, jax.
 
     pos = jnp.arange(n)
     # index of each row's partition start, in sorted coordinates
-    start_idx = jnp.maximum.accumulate(jnp.where(starts_mask, pos, 0))
+    start_idx = jax.lax.cummax(jnp.where(starts_mask, pos, 0))
 
     if node.func in ("row_number", "rank"):
         rn = pos - start_idx + 1
@@ -105,13 +105,13 @@ def execute_window(env: dict, mask: jax.Array, node: Window) -> tuple[dict, jax.
             new_val = jnp.concatenate(
                 [jnp.ones((1,), jnp.bool_), ok_sorted[1:] != ok_sorted[:-1]])
             new_val = new_val | starts_mask
-            rank_anchor = jnp.maximum.accumulate(jnp.where(new_val, pos, 0))
+            rank_anchor = jax.lax.cummax(jnp.where(new_val, pos, 0))
             rn = rank_anchor - start_idx + 1
         out_sorted = rn.astype(jnp.int32)
     elif node.func == "cumsum":
         v = jnp.where(mask, env[node.value_col], 0)[perm].astype(jnp.float32)
         cs = jnp.cumsum(v)
-        seg_base = jnp.maximum.accumulate(jnp.where(starts_mask, cs - v, -jnp.inf))
+        seg_base = jax.lax.cummax(jnp.where(starts_mask, cs - v, -jnp.inf))
         out_sorted = cs - seg_base
     else:  # moving_avg over trailing `frame` rows within the partition
         k = max(int(node.frame), 1)

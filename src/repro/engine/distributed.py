@@ -138,17 +138,21 @@ def dist_group_agg(mesh: Mesh, data_axes, key_col, mask, lo: int, num_groups: in
 # -- top-k / limit -----------------------------------------------------------------
 
 
-def dist_topk(mesh: Mesh, data_axes, env: dict, mask, key: str, k: int, ascending: bool):
-    """Local top-k then k-per-shard gather + final top-k (ring merge)."""
+def dist_topk(mesh: Mesh, data_axes, env: dict, mask, key: str, k: int,
+              ascending: bool, select=physical._select_topk):
+    """Local top-k then k-per-shard gather + final top-k (ring merge).
+    ``select`` swaps the selection primitive (the kernel mode passes the
+    block_topk Pallas kernel); the merge structure is identical."""
     dp = _dp(data_axes)
     names = sorted(env)
 
     def local(m, *cols):
         e = dict(zip(names, cols))
-        le, lm = physical.topk(e, m, key, min(k, m.shape[0]), ascending)
+        le, lm = physical.topk(e, m, key, min(k, m.shape[0]), ascending,
+                               select=select)
         ge = {n: jax.lax.all_gather(le[n], data_axes, tiled=True) for n in names}
         gm = jax.lax.all_gather(lm, data_axes, tiled=True)
-        return physical.topk(ge, gm, key, k, ascending)
+        return physical.topk(ge, gm, key, k, ascending, select=select)
 
     in_specs = (P(dp),) + tuple(P(dp) if env[n].ndim == 1 else P(dp, None) for n in names)
     out_specs = ({n: P() if env[n].ndim == 1 else P(None, None) for n in names}, P())
@@ -247,6 +251,73 @@ def hash_repartition_counts(mesh: Mesh, data_axes, lkey, lmask, rkey, rmask,
 
     return _smap(mesh, data_axes, local, (P(dp), P(dp), P(dp), P(dp)),
                  (P(), P()))(lkey, lmask, rkey, rmask)
+
+
+# -- kernel-mode compositions -------------------------------------------------------
+#
+# The kernel execution mode runs the Pallas relational kernels shard-locally
+# and merges partials with the same minimal collectives as the shard_map
+# operators above: filter-count / group-agg psum their partial counts/sums,
+# join-count gathers the (sorted) build side. (Kernel top-k reuses dist_topk
+# with the block_topk selection primitive — no separate composition needed.)
+
+
+def dist_kernel_filter_count(mesh: Mesh, data_axes, cols_mat: jax.Array,
+                             bounds: jax.Array, backend=None) -> jax.Array:
+    """cols_mat: (k, n) int32 predicate tile, row-sharded on axis 1; bounds:
+    (k, 2) replicated runtime params. Each shard runs filter_count over its
+    local tile (any padding rows arrive pre-folded as a mask row with bounds
+    (1, 1)); merge is one 4-byte psum."""
+    from repro.kernels import ops
+
+    dp = _dp(data_axes)
+
+    def local(cm, b):
+        c = ops.filter_count(cm, b, cm.shape[1], backend=backend)
+        return jax.lax.psum(c, data_axes)
+
+    return _smap(mesh, data_axes, local, (P(None, dp), P(None, None)), P())(
+        cols_mat, bounds)
+
+
+def dist_kernel_group_agg(mesh: Mesh, data_axes, gids: jax.Array,
+                          values: jax.Array, num_groups: int,
+                          backend=None) -> jax.Array:
+    """gids: (n,) int32 (-1 for dead rows); values: (n, C) f32. Shard-local
+    one-hot-matmul segment sums, psum merge -> replicated (G, C)."""
+    from repro.kernels import ops
+
+    dp = _dp(data_axes)
+
+    def local(g, v):
+        out = ops.segment_agg(v, g, num_groups, v.shape[0], backend=backend)
+        return jax.lax.psum(out, data_axes)
+
+    return _smap(mesh, data_axes, local, (P(dp), P(dp, None)), P(None, None))(
+        gids, values)
+
+
+def dist_kernel_join_count(mesh: Mesh, data_axes, lkey, lmask, rkey, rmask,
+                           presorted_right: bool = False, backend=None) -> jax.Array:
+    """Broadcast-merge join count on the merge_join kernel: sort the local
+    probe shard, gather+merge the (sorted) build side, run the block merge
+    join per shard, psum. With a sorted index the build side skips its local
+    sort (``presorted_right``)."""
+    from repro.kernels import ops
+
+    dp = _dp(data_axes)
+
+    def local(lk, lm, rk, rm):
+        ls = ops.sort_join_keys(lk, lm)
+        rs_local = ops.sort_join_keys(rk, rm, presorted=presorted_right)
+        rs = jnp.sort(jax.lax.all_gather(rs_local, data_axes, tiled=True))
+        nl = jnp.sum(lm, dtype=jnp.int32)
+        nr = jax.lax.psum(jnp.sum(rm, dtype=jnp.int32), data_axes)
+        c = ops.merge_join_count(ls, rs, nl, nr, backend=backend)
+        return jax.lax.psum(c.astype(jnp.int32), data_axes)
+
+    return _smap(mesh, data_axes, local, (P(dp), P(dp), P(dp), P(dp)), P())(
+        lkey, lmask, rkey, rmask)
 
 
 # -- index -------------------------------------------------------------------------

@@ -52,25 +52,45 @@ def limit(env: Env, mask: jax.Array, n: int) -> tuple[Env, jax.Array]:
     return out, new_mask
 
 
-def topk(env: Env, mask: jax.Array, key: str, k: int, ascending: bool) -> tuple[Env, jax.Array]:
+def _select_topk(score: jax.Array, mask: jax.Array, k: int) -> jax.Array:
+    """Default selection primitive: indices of the k largest masked scores
+    (lowest index wins ties)."""
+    _, idx = jax.lax.top_k(jnp.where(mask, score, -jnp.inf), k)
+    return idx
+
+
+def kernel_topk_select(backend=None):
+    """Selection primitive backed by the block_topk Pallas kernel
+    (kernels/topk_mask.py) — same contract as :func:`_select_topk`."""
+    def select(score, mask, k):
+        from repro.kernels import ops
+
+        _, idx = ops.topk(score, mask, mask.shape[0], k, backend=backend)
+        return idx
+    return select
+
+
+def topk(env: Env, mask: jax.Array, key: str, k: int, ascending: bool,
+         select=_select_topk) -> tuple[Env, jax.Array]:
+    """Score prep (f32 cast, ascending negation), selection via ``select``,
+    then gather/compaction — the single home of the top-k contract; the
+    kernel mode only swaps the selection primitive."""
     col = env[key]
     score = col.astype(jnp.float32) if not jnp.issubdtype(col.dtype, jnp.floating) else col
     if ascending:
         score = -score
-    score = jnp.where(mask, score, -jnp.inf)
-    _, idx = jax.lax.top_k(score, k)
+    idx = select(score, mask, k)
     found = jnp.minimum(jnp.sum(mask), k)
     out = {kk: v[idx] for kk, v in env.items()}
     return out, jnp.arange(k) < found
 
 
 def sort_full(env: Env, mask: jax.Array, key: str, ascending: bool) -> tuple[Env, jax.Array]:
+    """One stable argsort on the sentineled key, either direction — no float
+    cast (lossless for int64 keys) and no second sort for descending."""
     col = env[key]
     sk = jnp.where(mask, col, _maxval(col.dtype) if ascending else _minval(col.dtype))
-    order = jnp.argsort(sk, stable=True)
-    if not ascending:
-        # invalid rows were pushed to the min side; re-sort keeps them last
-        order = jnp.argsort(-sk.astype(jnp.float32), stable=True)
+    order = jnp.argsort(sk, stable=True, descending=not ascending)
     out = {k: v[order] for k, v in env.items()}
     return out, mask[order]
 
@@ -80,8 +100,6 @@ def sort_full(env: Env, mask: jax.Array, key: str, ascending: bool) -> tuple[Env
 
 def agg_scalar(env: Env, mask: jax.Array, op: str, column: Optional[str]) -> jax.Array:
     if op == "count":
-        if column is None:
-            return jnp.sum(mask, dtype=jnp.int32)
         return jnp.sum(mask, dtype=jnp.int32)
     col = env[column]
     if op == "max":

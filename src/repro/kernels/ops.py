@@ -30,6 +30,19 @@ from repro.kernels.topk_mask import topk_merge as _topk_merge
 
 _DEFAULT_BACKEND = "xla"
 
+# Trace-time dispatch counters: the kernel execution mode's tests assert the
+# relational kernels are actually on the lowered path (one tick per trace,
+# not per run — cached executables don't re-trace).
+DISPATCH_COUNTS: dict[str, int] = {}
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
+def _tick(name: str) -> None:
+    DISPATCH_COUNTS[name] = DISPATCH_COUNTS.get(name, 0) + 1
+
 
 def set_default_backend(name: str) -> None:
     global _DEFAULT_BACKEND
@@ -49,29 +62,55 @@ def _interpret() -> bool:
 # -- relational kernels ------------------------------------------------------------
 
 def filter_count(cols, bounds, n_valid, backend: Optional[str] = None):
+    _tick("filter_count")
     if _use_pallas(backend):
         return _filter_count(cols, bounds, n_valid, interpret=_interpret())
     return ref.filter_count(cols, bounds, n_valid)
 
 
 def segment_agg(values, gids, num_groups, n_valid, backend: Optional[str] = None):
+    _tick("segment_agg")
     if _use_pallas(backend):
         return _segment_agg(values, gids, num_groups, n_valid,
                             interpret=_interpret())
     return ref.segment_agg(values, gids, num_groups, n_valid)
 
 
+def sort_join_keys(keys, mask, presorted: bool = False):
+    """Prep one side for merge_join_count's sortedness contract: int32 keys,
+    dead rows replaced by the +inf-style sentinel, ascending sort (skipped
+    when the keys come from a sorted index). Shared by the single-device and
+    shard-local kernel join paths."""
+    if presorted:  # index order: valid ascending, sentinel tail
+        return keys.astype(jnp.int32)
+    sent = jnp.iinfo(jnp.int32).max
+    return jnp.sort(jnp.where(mask, keys.astype(jnp.int32), sent))
+
+
 def merge_join_count(lkeys, rkeys, nl, nr, backend: Optional[str] = None):
+    """Equi-join cardinality over SORTED key columns (valid prefix of length
+    nl/nr, +inf-style sentinel padding after). The XLA twin exploits the same
+    sortedness contract via binary search — ref.merge_join_count's O(nl·nr)
+    compare matrix is a test oracle, not an execution path."""
+    _tick("merge_join_count")
     if _use_pallas(backend):
         return _merge_join(lkeys, rkeys, nl, nr, interpret=_interpret())
-    return ref.merge_join_count(lkeys, rkeys, nl, nr)
+    lo = jnp.searchsorted(rkeys, lkeys, side="left")
+    hi = jnp.minimum(jnp.searchsorted(rkeys, lkeys, side="right"), nr)
+    lm = jnp.arange(lkeys.shape[0]) < nl
+    return jnp.sum(jnp.where(lm, jnp.maximum(hi - lo, 0), 0), dtype=jnp.int32)
 
 
 def topk(scores, mask, n_valid, k, backend: Optional[str] = None):
+    """Masked top-k over the valid prefix: (values (k,), global indices (k,));
+    identical tie-breaking (lowest index first) on both backends."""
+    _tick("topk")
     if _use_pallas(backend):
         return _topk_merge(scores, mask, n_valid, k, interpret=_interpret())
-    v, i = ref.block_topk(scores, mask, scores.shape[0])  # pragma: no cover
-    raise NotImplementedError
+    live = mask & (jnp.arange(scores.shape[0]) < n_valid)
+    s = jnp.where(live, scores.astype(jnp.float32), -jnp.inf)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)
 
 
 # -- flash attention (training-grade custom_vjp) -------------------------------------

@@ -242,13 +242,18 @@ def _decode_attention_smap(q, k_new, v_new, cache_k_l, cache_v_l, pos, cfg, ctx)
         norm = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]  # (B,1,KV,G,1)
         return (o / norm).astype(q.dtype), ck, cv
 
-    return _sm(local, mesh=mesh,
-               in_specs=(P(dp, None, None, None), P(dp, None, None, None),
-                         P(dp, None, None, None), P(dp, M, None, None),
-                         P(dp, M, None, None), P()),
-               out_specs=(P(dp, None, None, None, None), P(dp, M, None, None),
-                          P(dp, M, None, None)),
-               check_vma=False)(q, k_new, v_new, cache_k_l, cache_v_l, pos)
+    kwargs = dict(
+        mesh=mesh,
+        in_specs=(P(dp, None, None, None), P(dp, None, None, None),
+                  P(dp, None, None, None), P(dp, M, None, None),
+                  P(dp, M, None, None), P()),
+        out_specs=(P(dp, None, None, None, None), P(dp, M, None, None),
+                   P(dp, M, None, None)))
+    try:
+        smapped = _sm(local, **kwargs, check_vma=False)
+    except TypeError:  # older jax: check_rep
+        smapped = _sm(local, **kwargs, check_rep=False)
+    return smapped(q, k_new, v_new, cache_k_l, cache_v_l, pos)
 
 
 def decode_attention(x, p, cfg: ArchConfig, cache_k_l, cache_v_l, pos, *, rope=True):

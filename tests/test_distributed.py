@@ -51,6 +51,41 @@ print("OK")
 """)
 
 
+def test_dataframe_kernel_mode_sharded_equivalence():
+    """mode="kernel" over an 8-shard mesh: each shard runs the relational
+    kernels locally, partials merge with the minimal collectives."""
+    run_script("""
+import numpy as np
+from repro.data import wisconsin
+from repro.engine.session import Session
+from repro.core.frame import AFrame
+from repro.launch.mesh import make_local_mesh
+
+t = wisconsin.generate(10_000, seed=1)
+raw = {k: np.asarray(v) for k, v in t.columns.items()}
+mesh = make_local_mesh(data=8, model=1)
+sess = Session(mesh=mesh, mode="kernel")
+sess.create_dataset("Data", t, dataverse="demo")
+df = AFrame("demo", "Data", session=sess)
+n = len(df[(df["ten"] == 3) & (df["twentyPercent"] == 3) & (df["two"] == 1)])
+assert n == int(((raw["ten"]==3)&(raw["twentyPercent"]==3)&(raw["two"]==1)).sum()), n
+g = df.groupby("oddOnePercent").agg("count")
+assert g["count"].sum() == 10_000 and len(g["count"]) == 100
+sh = df.sort_values("unique1", ascending=False).head(5)
+assert list(sh["unique1"]) == sorted(raw["unique1"])[-5:][::-1]
+n = len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 30)])
+assert n == int(((raw["onePercent"]>=10)&(raw["onePercent"]<=30)).sum())
+df2 = AFrame("demo", "Data", session=sess)
+assert len(df.merge(df2, left_on="unique1", right_on="unique1")) == 10_000
+from repro.kernels import ops
+assert ops.DISPATCH_COUNTS.get("filter_count", 0) >= 1
+assert ops.DISPATCH_COUNTS.get("segment_agg", 0) >= 1
+assert ops.DISPATCH_COUNTS.get("topk", 0) >= 1
+assert ops.DISPATCH_COUNTS.get("merge_join_count", 0) >= 1
+print("OK")
+""")
+
+
 def test_hash_repartition_join():
     run_script("""
 import numpy as np, jax.numpy as jnp

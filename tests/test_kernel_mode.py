@@ -1,0 +1,327 @@
+"""Kernel execution mode: Session(mode="kernel") must produce bit-identical
+results to mode="gspmd" for the paper's 12 Wisconsin expressions, with the
+Pallas relational kernels actually on the lowered path (dispatch counters /
+plan inspection), plan-cache hits on randomized literals, and graceful
+fallback for shapes the kernels don't cover."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core.expr import param_values
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine.session import Session
+from repro.kernels import ops
+
+N_ROWS = 8_192
+
+
+@pytest.fixture(scope="module")
+def table():
+    return wisconsin.generate(N_ROWS, seed=5)
+
+
+@pytest.fixture(scope="module")
+def raw(table):
+    return {k: np.asarray(v) for k, v in table.columns.items()}
+
+
+def _session(table, mode, **kw):
+    sess = Session(mode=mode, **kw)
+    sess.create_dataset("data", table, dataverse="bench", closed=True)
+    sess.create_dataset("data_r", table, dataverse="bench", closed=True)
+    return sess
+
+
+@pytest.fixture(scope="module")
+def sessions(table):
+    return {
+        "gspmd": _session(table, "gspmd"),
+        "kernel": _session(table, "kernel"),
+        "kernel-pallas": _session(table, "kernel", kernel_backend="pallas"),
+    }
+
+
+def _frames(sess):
+    return (AFrame("bench", "data", session=sess),
+            AFrame("bench", "data_r", session=sess))
+
+
+# one callable per paper expression; literals come from ``rng`` so repeat
+# runs exercise the plan cache with fresh predicate constants.
+EXPRESSIONS = {
+    "1_count": lambda df, dr, rng: len(df),
+    "2_project_head": lambda df, dr, rng: df[["two", "four"]].head(),
+    "3_filter_count": lambda df, dr, rng: (lambda x: len(
+        df[(df["ten"] == x) & (df["twentyPercent"] == x % 5)
+           & (df["two"] == x % 2)]))(int(rng.integers(10))),
+    "4_group_count": lambda df, dr, rng: df.groupby("oddOnePercent").agg("count"),
+    "5_map_head": lambda df, dr, rng: df["stringu1"].map(str.upper).head(),
+    "6_max": lambda df, dr, rng: df["unique1"].max(),
+    "7_min": lambda df, dr, rng: df["unique1"].min(),
+    "8_group_max": lambda df, dr, rng: df.groupby("twenty")["four"].agg("max"),
+    "9_sort_head": lambda df, dr, rng: df.sort_values(
+        "unique1", ascending=False).head(),
+    "10_select_head": lambda df, dr, rng: df[df["ten"] == int(rng.integers(10))].head(),
+    "11_range_count": lambda df, dr, rng: (lambda a, b: len(
+        df[(df["onePercent"] >= min(a, b)) & (df["onePercent"] <= max(a, b))]))(
+        int(rng.integers(100)), int(rng.integers(100))),
+    "12_join_count": lambda df, dr, rng: len(df.merge(
+        dr, left_on="unique1", right_on="unique1")),
+}
+
+
+def _assert_same(a, b, label):
+    if isinstance(a, dict):
+        assert set(a) == set(b), label
+        for k in a:
+            av, bv = np.asarray(a[k]), np.asarray(b[k])
+            assert av.dtype == bv.dtype, (label, k, av.dtype, bv.dtype)
+            np.testing.assert_array_equal(av, bv, err_msg=f"{label}:{k}")
+    else:
+        assert a == b, (label, a, b)
+
+
+@pytest.mark.parametrize("expr", sorted(EXPRESSIONS))
+@pytest.mark.parametrize("mode", ["kernel", "kernel-pallas"])
+def test_wisconsin_expressions_bit_identical(sessions, expr, mode):
+    """Three rounds with randomized literals: results must match gspmd
+    bit-for-bit and later rounds must hit the plan cache."""
+    fn = EXPRESSIONS[expr]
+    base = sessions["gspmd"]
+    sess = sessions[mode]
+    for round_ in range(3):
+        rng = np.random.default_rng(100 + round_)
+        want = fn(*_frames(base), rng)
+        rng = np.random.default_rng(100 + round_)
+        got = fn(*_frames(sess), rng)
+        _assert_same(got, want, f"{expr}[{mode}] round {round_}")
+
+
+def test_kernels_on_lowered_path(table, raw):
+    """Each relational kernel family dispatches when its plan shape runs."""
+    sess = _session(table, "kernel")
+    df, dr = _frames(sess)
+    ops.reset_dispatch_counts()
+
+    len(df[(df["ten"] == 4) & (df["twentyPercent"] == 4) & (df["two"] == 0)])
+    assert ops.DISPATCH_COUNTS.get("filter_count", 0) >= 1
+    assert isinstance(sess.last_optimized, P.FusedRangeCount)
+
+    df.groupby("oddOnePercent").agg("count")
+    assert ops.DISPATCH_COUNTS.get("segment_agg", 0) >= 1
+
+    df.sort_values("unique1", ascending=False).head()
+    assert ops.DISPATCH_COUNTS.get("topk", 0) >= 1
+
+    len(df.merge(dr, left_on="unique1", right_on="unique1"))
+    assert ops.DISPATCH_COUNTS.get("merge_join_count", 0) >= 1
+
+
+def test_plan_cache_hits_on_literal_changes(table, raw):
+    """Randomized predicate literals reuse the executable AND skip the
+    optimizer entirely (the raw-fingerprint plan cache)."""
+    sess = _session(table, "kernel")
+    df, _ = _frames(sess)
+    for x in (1, 7, 3):
+        n = len(df[(df["ten"] == x) & (df["twentyPercent"] == x % 5)
+                   & (df["two"] == x % 2)])
+        assert n == int(((raw["ten"] == x) & (raw["twentyPercent"] == x % 5)
+                         & (raw["two"] == x % 2)).sum())
+    assert sess.stats["compiles"] == 1
+    assert sess.stats["hits"] == 2
+    assert sess.stats["optimizes"] == 1  # later rounds never saw the optimizer
+
+
+def test_point_and_range_share_fused_executable(table, raw):
+    """== and >=/<= conjuncts on the same column list rewrite to one
+    FusedRangeCount shape: bounds are runtime params, so both predicates
+    share a single compiled kernel program."""
+    sess = _session(table, "kernel")
+    df, _ = _frames(sess)
+    n_eq = len(df[df["onePercent"] == 3])
+    assert n_eq == int((raw["onePercent"] == 3).sum())
+    n_rng = len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 12)])
+    assert n_rng == int(((raw["onePercent"] >= 10) & (raw["onePercent"] <= 12)).sum())
+    # the range query has 2 conjuncts vs 1: different shape, new executable;
+    # but == vs another == on the same column hits.
+    n_eq2 = len(df[df["onePercent"] == 77])
+    assert n_eq2 == int((raw["onePercent"] == 77).sum())
+    assert sess.stats["compiles"] == 2  # eq-shape + range-shape
+
+
+def test_graceful_fallback_non_range_predicates(table, raw):
+    """OR / != / strict bounds / string equality stay on the generic mask
+    path (FilterCount), still correct."""
+    sess = _session(table, "kernel")
+    df, _ = _frames(sess)
+
+    n = len(df[(df["ten"] == 3) | (df["two"] == 0)])
+    assert n == int(((raw["ten"] == 3) | (raw["two"] == 0)).sum())
+    assert isinstance(sess.last_optimized, P.FilterCount)
+
+    n = len(df[df["ten"] != 3])
+    assert n == int((raw["ten"] != 3).sum())
+    assert isinstance(sess.last_optimized, P.FilterCount)
+
+    n = len(df[df["onePercent"] < 10])
+    assert n == int((raw["onePercent"] < 10).sum())
+    assert isinstance(sess.last_optimized, P.FilterCount)
+
+
+def test_index_still_wins_over_kernel_fusion(table, raw):
+    """An indexed range predicate keeps the index-only count path — kernel
+    fusion only picks up what the index rules leave behind."""
+    sess = Session(mode="kernel")
+    sess.create_dataset("data", table, dataverse="ix", closed=True,
+                        indexes=["onePercent"])
+    df = AFrame("ix", "data", session=sess)
+    n = len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 30)])
+    assert n == int(((raw["onePercent"] >= 10) & (raw["onePercent"] <= 30)).sum())
+    assert isinstance(sess.last_optimized, P.FilterCount)
+    assert isinstance(sess.last_optimized.children[0], P.IndexRangeScan)
+
+
+def test_fused_count_jaxpr_has_no_mask_column(table):
+    """The acceptance property: the fused COUNT path materializes no
+    intermediate boolean mask column — every predicate comparison lives
+    inside the pallas_call."""
+    sess = _session(table, "kernel", kernel_backend="pallas")
+    df, _ = _frames(sess)
+    len(df[(df["ten"] == 2) & (df["two"] == 0)])
+
+    fused = [(fp, cq) for fp, cq in sess._cache.items()
+             if fp.startswith("fusedrangecount")]
+    assert fused, "no fused executable compiled"
+
+    def walk_eqns(jaxpr):
+        for e in jaxpr.eqns:
+            yield e
+            if e.primitive.name == "pallas_call":
+                continue  # inside the kernel masks are VMEM-resident
+            for v in e.params.values():
+                if hasattr(v, "jaxpr"):
+                    yield from walk_eqns(v.jaxpr)
+
+    for fp, cq in fused:
+        tables = cq.gather_tables(sess.catalog)
+        jaxpr = jax.make_jaxpr(cq.raw_fn)(tables, param_values(cq.lits))
+        eqns = list(walk_eqns(jaxpr.jaxpr))
+        prims = {e.primitive.name for e in eqns}
+        assert "pallas_call" in prims
+        mask_vecs = [v for e in eqns for v in e.outvars
+                     if getattr(v.aval, "dtype", None) == jnp.bool_
+                     and getattr(v.aval, "ndim", 0) >= 1]
+        assert not mask_vecs, f"mask columns materialized: {mask_vecs}"
+
+
+def test_group_sum_overflow_falls_back_exactly(table, raw):
+    """f32 one-hot-matmul sums are only fused when catalog bounds prove the
+    group sums stay under 2^24; unique1 at 8192 rows can sum to ~33M, so the
+    kernel mode must take the generic native-int path and match gspmd
+    exactly (regression: silent f32 rounding of large integer sums)."""
+    results = {}
+    ops.reset_dispatch_counts()
+    for mode in ("gspmd", "kernel"):
+        sess = _session(table, mode)
+        df, _ = _frames(sess)
+        results[mode] = df.groupby("two")["unique1"].agg("sum")
+    assert ops.DISPATCH_COUNTS.get("segment_agg", 0) == 0  # gate refused
+    np.testing.assert_array_equal(results["gspmd"]["sum_unique1"],
+                                  results["kernel"]["sum_unique1"])
+    want = [int(raw["unique1"][raw["two"] == v].sum()) for v in range(2)]
+    np.testing.assert_array_equal(results["kernel"]["sum_unique1"], want)
+
+
+def test_int32_unsafe_columns_fall_back(raw):
+    """Columns whose catalog bounds exceed int32 (an int64 deployment) must
+    not reach the int32-tile kernels — fused count and kernel join both
+    refuse and take the generic path."""
+    from repro.engine.table import ColumnMeta, Table
+
+    n = 2_000
+    vals = np.arange(n, dtype=np.int64)
+    t = Table({"k": vals, "ten": (vals % 10).astype(np.int32)},
+              {"k": ColumnMeta(np.dtype(np.int64), 0, 2**40, n),
+               "ten": ColumnMeta(np.dtype(np.int32), 0, 9, 10)})
+    sess = Session(mode="kernel")
+    sess.create_dataset("big", t, dataverse="w", closed=True)
+    df = AFrame("w", "big", session=sess)
+    df2 = AFrame("w", "big", session=sess)
+
+    ops.reset_dispatch_counts()
+    assert len(df[df["k"] >= 5]) == n - 5
+    assert isinstance(sess.last_optimized, P.FilterCount)  # not FusedRangeCount
+    assert ops.DISPATCH_COUNTS.get("filter_count", 0) == 0
+
+    assert len(df.merge(df2, left_on="k", right_on="k")) == n
+    assert ops.DISPATCH_COUNTS.get("merge_join_count", 0) == 0  # gate refused
+
+    # the int32-bounded column still fuses
+    assert len(df[df["ten"] == 3]) == int((vals % 10 == 3).sum())
+    assert isinstance(sess.last_optimized, P.FusedRangeCount)
+
+
+def test_group_sum_provenance_traced_through_rename(raw):
+    """A Project rename must not let a big-bounded column borrow a
+    small-bounded column's exactness proof: the gate traces the aggregated
+    name to its ORIGIN table/column (regression: first-Scan name lookup)."""
+    from repro.core.expr import Col
+    from repro.engine.table import ColumnMeta, Table
+
+    n = 2_000
+    g = (np.arange(n) % 4).astype(np.int32)
+    small = (np.arange(n) % 3).astype(np.int32)
+    big = np.arange(n, dtype=np.int32)
+    t = Table({"g": g, "x": small, "huge": big},
+              {"g": ColumnMeta(np.dtype(np.int32), 0, 3, 4),
+               "x": ColumnMeta(np.dtype(np.int32), 0, 2, 3),
+               # claims an int64-deployment bound: sums would exceed 2^24
+               "huge": ColumnMeta(np.dtype(np.int32), 0, 2**30, n)})
+    res = {}
+    for mode in ("gspmd", "kernel"):
+        sess = Session(mode=mode)
+        sess.create_dataset("t", t, dataverse="pv", closed=True)
+        ops.reset_dispatch_counts()
+        # project renames 'huge' -> 'x': name says small, values say huge
+        plan = P.GroupAgg(
+            P.Project(P.Scan("t", "pv"), [("g", Col("g")), ("x", Col("huge"))]),
+            ["g"], [P.AggSpec("s", "sum", "x")])
+        res[mode] = sess.execute(plan)
+        if mode == "kernel":  # provenance check refused the f32 kernel
+            assert ops.DISPATCH_COUNTS.get("segment_agg", 0) == 0
+    np.testing.assert_array_equal(res["gspmd"]["s"], res["kernel"]["s"])
+    want = [int(big[g == v].sum()) for v in range(4)]
+    np.testing.assert_array_equal(res["kernel"]["s"], want)
+
+
+def test_ddl_invalidates_plan_cache(table):
+    """Re-registering a dataset name must drop compiled plans: executables
+    bake shapes/bounds/optimizer decisions from the old catalog entry."""
+    sess = Session(mode="kernel")
+    sess.create_dataset("d", wisconsin.generate(2_000, seed=1), dataverse="w")
+    df = AFrame("w", "d", session=sess)
+    assert len(df) == 2_000
+    sess.create_dataset("d", wisconsin.generate(5_000, seed=1), dataverse="w")
+    df = AFrame("w", "d", session=sess)
+    assert len(df) == 5_000
+    assert sess.stats["compiles"] == 2  # second run recompiled, no stale hit
+
+
+def test_multi_agg_single_kernel_launch(table, raw):
+    """agg({a: sum, b: mean, c: count}) fuses into ONE (BLOCK, C) tile —
+    a single segment_agg trace — and matches the gspmd result bit-for-bit."""
+    sessions = {m: _session(table, m) for m in ("gspmd", "kernel")}
+    ops.reset_dispatch_counts()
+    results = {}
+    for m, sess in sessions.items():
+        df, _ = _frames(sess)
+        results[m] = df.groupby("ten").agg(
+            {"four": "sum", "twenty": "mean", "two": "count"})
+    assert ops.DISPATCH_COUNTS.get("segment_agg", 0) == 1
+    for k in results["gspmd"]:
+        a, b = np.asarray(results["gspmd"][k]), np.asarray(results["kernel"][k])
+        assert a.dtype == b.dtype, (k, a.dtype, b.dtype)
+        np.testing.assert_array_equal(a, b, err_msg=k)

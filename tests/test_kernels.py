@@ -1,4 +1,7 @@
-"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret=True)."""
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret=True),
+plus engine-level checks that both execution modes sit on the same kernel
+semantics (mode="kernel" lowers onto these kernels; mode="gspmd" onto the
+generic jnp operators — results must agree with the numpy oracle)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -100,6 +103,53 @@ def test_flash_vjp_matches_oracle_grads():
     want = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(got, want):
         np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_ops_merge_join_backends_agree(backend):
+    l = np.sort(RNG.integers(0, 300, 2048)).astype(np.int32)
+    r = np.sort(RNG.integers(0, 300, 2048)).astype(np.int32)
+    got = ops.merge_join_count(jnp.asarray(l), jnp.asarray(r), 2000, 2010,
+                               backend=backend)
+    want = ref.merge_join_count(jnp.asarray(l), jnp.asarray(r), 2000, 2010)
+    assert int(got) == int(want)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_ops_topk_backends_agree(backend):
+    sc = jnp.asarray(RNG.normal(size=4096), jnp.float32)
+    mask = jnp.asarray(RNG.random(4096) > 0.3)
+    v, i = ops.topk(sc, mask, 4000, 5, backend=backend)
+    smask = np.where(np.asarray(mask) & (np.arange(4096) < 4000),
+                     np.asarray(sc), -np.inf)
+    want = np.sort(smask)[::-1][:5]
+    np.testing.assert_allclose(np.asarray(v), want, rtol=1e-6)
+    np.testing.assert_allclose(smask[np.asarray(i)], want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["gspmd", "kernel"])
+def test_session_mode_matches_numpy(mode):
+    """Engine-level sweep: the same queries through either execution mode
+    agree with the numpy oracle (the kernel mode rides the ops above)."""
+    from repro.core.frame import AFrame
+    from repro.data import wisconsin
+    from repro.engine.session import Session
+
+    t = wisconsin.generate(3_000, seed=9)
+    raw = {k: np.asarray(v) for k, v in t.columns.items()}
+    sess = Session(mode=mode)
+    sess.create_dataset("data", t, dataverse="m", closed=True)
+    df = AFrame("m", "data", session=sess)
+    df_r = AFrame("m", "data", session=sess)
+
+    n = len(df[(df["ten"] == 6) & (df["two"] == 0)])
+    assert n == int(((raw["ten"] == 6) & (raw["two"] == 0)).sum())
+    g = df.groupby("four").agg("count")
+    np.testing.assert_array_equal(
+        g["count"], [int((raw["four"] == v).sum()) for v in range(4)])
+    h = df.sort_values("unique1", ascending=False).head(5)
+    np.testing.assert_array_equal(h["unique1"], np.sort(raw["unique1"])[::-1][:5])
+    assert len(df.merge(df_r, left_on="unique1", right_on="unique1")) == 3_000
 
 
 @pytest.mark.parametrize("B,H,KV,S,D,bk", [(2, 4, 2, 256, 32, 64),

@@ -6,6 +6,9 @@ oracle, with and without indexes.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional "
+                    "hypothesis dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import plan as P
