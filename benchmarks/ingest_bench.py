@@ -1,0 +1,126 @@
+"""Streaming-ingestion benchmark: sustained rows/sec and query freshness.
+
+Two variants ingest the same stream into the same base table:
+
+  * ``compact-every-flush`` — the pre-LSM behaviour: every flush de-shards,
+    concatenates, re-sorts and re-indexes the whole base (O(base) per batch).
+    Expressed as ``CompactionPolicy(size_ratio=0)``.
+  * ``deferred``           — the LSM path: flushes become device-resident
+    runs (O(batch)), compaction fires only on the size-ratio policy.
+
+Reported per size: sustained ingest rows/sec (wall time of push+flush+any
+compaction), the deferred/baseline speedup, and query-freshness latency
+(time to answer ``COUNT(*)`` + an indexed range count right after each
+flush — base ∪ runs, including the recompile a fresh component set forces).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine import lsm
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+
+# size: (base_rows, n_batches, batch_rows)
+SIZES = {
+    "XS": (2_000, 6, 512),
+    "S": (10_000, 10, 1_024),
+    "M": (50_000, 16, 2_048),
+    "L": (150_000, 24, 2_048),
+}
+
+POLICIES = {
+    "compact-every-flush": lambda: lsm.CompactionPolicy(size_ratio=0.0),
+    "deferred": lambda: lsm.CompactionPolicy(size_ratio=1.0, max_runs=8),
+}
+
+
+def _stream(base_rows: int, n_batches: int, batch_rows: int):
+    """Pre-generated arrival batches (unique2 keys keep increasing — the
+    timestamped-tweet pattern)."""
+    batches = []
+    for i in range(n_batches):
+        t = wisconsin.generate(batch_rows, seed=1_000 + i)
+        rows = {k: np.asarray(v) for k, v in t.columns.items()}
+        rows["unique2"] = rows["unique2"] + base_rows + i * batch_rows
+        batches.append(rows)
+    return batches
+
+
+def _run_variant(size: str, variant: str, mode: str = "gspmd") -> dict:
+    base_rows, n_batches, batch_rows = SIZES[size]
+    base = wisconsin.generate(base_rows, seed=7)
+    sess = Session(mode=mode)
+    sess.create_dataset("Stream", base, dataverse="bench",
+                        indexes=["onePercent"], primary="unique2")
+    feed = Feed(sess, "Stream", "bench", flush_rows=batch_rows,
+                policy=POLICIES[variant]())
+    batches = _stream(base_rows, n_batches, batch_rows)
+    df = AFrame("bench", "Stream", session=sess)
+    len(df)  # warm the count executable for the base-only shape
+
+    ingest_s = 0.0
+    freshness = []
+    for rows in batches:
+        t0 = time.perf_counter()
+        feed.push(rows)  # flush_rows == batch_rows: flushes synchronously
+        ingest_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        n = len(df)
+        len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 30)])
+        freshness.append(time.perf_counter() - t0)
+        assert n == base_rows + feed.stats["ingested"]
+    total_rows = n_batches * batch_rows
+    return {
+        "size": size,
+        "variant": variant,
+        "rows": total_rows,
+        "batches": n_batches,
+        "ingest_s": round(ingest_s, 4),
+        "rows_per_s": round(total_rows / ingest_s, 1),
+        "freshness_median_s": round(float(np.median(freshness)), 4),
+        "freshness_p95_s": round(float(np.percentile(freshness, 95)), 4),
+        "flushes": feed.stats["flushes"],
+        "compactions": feed.stats["compactions"],
+        "final_runs": feed.stats["runs"],
+    }
+
+
+def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[dict]:
+    names = list(sizes) if sizes else ["XS", "S"]
+    rows = []
+    for size in names:
+        per_size = {}
+        for variant in POLICIES:
+            r = _run_variant(size, variant)
+            per_size[variant] = r
+            rows.append(r)
+            print(f"  {size:>2} {variant:<20} {r['rows_per_s']:>12,.0f} rows/s  "
+                  f"freshness p50 {r['freshness_median_s'] * 1e3:7.1f} ms  "
+                  f"(compactions={r['compactions']})")
+        speedup = (per_size["deferred"]["rows_per_s"]
+                   / per_size["compact-every-flush"]["rows_per_s"])
+        print(f"  {size:>2} deferred-compaction ingest speedup: {speedup:.1f}x")
+        rows.append({"size": size, "variant": "speedup",
+                     "ingest_speedup": round(speedup, 2)})
+    if out_path is not None:
+        out_path.write_text(json.dumps(rows, indent=2) + "\n")
+        print(f"ingest benchmark -> {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=str, default="XS,S")
+    args = ap.parse_args()
+    out = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+    out.mkdir(parents=True, exist_ok=True)
+    run_ingest_bench(args.sizes.split(","), out / "ingest.json")

@@ -4,6 +4,8 @@
   --scaling     : Tables VII-VIII (speedup / scaleup via subprocess shards)
   --model       : Fig. 5/6 analogue (model-UDF / serve / train rates)
   --roofline    : §Roofline table from the dry-run artifacts
+  --ingest      : streaming ingestion (deferred compaction vs
+                  compact-every-flush rows/sec + query freshness)
   (no flags)    : quick versions of all of the above
 
 Outputs land in results/bench/.
@@ -41,13 +43,15 @@ def main() -> None:
     ap.add_argument("--scaling", action="store_true")
     ap.add_argument("--model", action="store_true")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--ingest", action="store_true")
     ap.add_argument("--full", action="store_true",
                     help="full dataset sizes (XS..XL); default quick=XS,S")
     ap.add_argument("--sizes", type=str, default=None,
                     help="comma-separated size names (e.g. XS) — overrides "
                          "--full; used by the CI smoke run")
     args = ap.parse_args()
-    run_all = not (args.single_node or args.scaling or args.model or args.roofline)
+    run_all = not (args.single_node or args.scaling or args.model
+                   or args.roofline or args.ingest)
     OUT.mkdir(parents=True, exist_ok=True)
 
     if args.single_node or run_all:
@@ -65,6 +69,18 @@ def main() -> None:
         bench_path = OUT.parents[1] / "BENCH_wisconsin.json"
         bench_path.write_text(json.dumps(bench, indent=2) + "\n")
         print(f"gspmd-vs-kernel comparison -> {bench_path}")
+
+    if args.ingest or run_all:
+        from benchmarks.ingest_bench import SIZES as INGEST_SIZES, run_ingest_bench
+
+        if args.sizes:
+            sizes = [s for s in args.sizes.split(",") if s in INGEST_SIZES]
+        elif args.full:
+            sizes = list(INGEST_SIZES)
+        else:
+            sizes = ["XS", "S"]
+        print(f"== streaming ingestion benchmark (sizes={sizes}) ==")
+        run_ingest_bench(sizes, OUT / "ingest.json")
 
     if args.scaling or run_all:
         from benchmarks.scaling_bench import run_scaling

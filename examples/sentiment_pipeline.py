@@ -51,12 +51,19 @@ sess.create_dataset("LiveTweets", Table({
     "hour": (np.arange(n0) % 24).astype(np.int32),
 }), dataverse="demo")
 feed = Feed(sess, "LiveTweets", "demo", flush_rows=512)
+# a continuously-maintained dashboard aggregate: refreshed incrementally
+# from each flush's delta batch, never recomputed from scratch
+dash = AFrame("demo", "LiveTweets", session=sess)
+sess.create_view("tweets_by_hour", dash.groupby("hour").agg_plan("count"))
 for _ in range(2):  # two arriving batches
     m_new = 512
     feed.push({"id": np.arange(m_new, dtype=np.int32) + 10_000,
                "text_tokens": rng.integers(0, cfg.vocab, (m_new, 16)).astype(np.int32),
                "hour": rng.integers(0, 24, m_new).astype(np.int32)})
 print(f"== live feed: {feed.stats} ==")
+by_hour_live = sess.read_view("tweets_by_hour")
+print(f"   dashboard view: {int(by_hour_live['count'].sum())} tweets "
+      f"across {len(by_hour_live['hour'])} hours (no query ran)")
 
 # -- Fig. 5: apply the model to the text column ----------------------------------
 df = AFrame("demo", "LiveTweets", session=sess)

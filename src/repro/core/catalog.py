@@ -26,6 +26,11 @@ class IndexInfo:
     # each row-sharded like the base table.
     sorted_keys: Optional[object] = None
     row_ids: Optional[object] = None
+    # per-ZONE_BLOCK min/max of sorted_keys, built in the same fused program
+    # as the sort. Stored per component today; wiring them into the filter
+    # kernel for block skipping is a ROADMAP item, not yet a query path.
+    zone_min: Optional[object] = None
+    zone_max: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -35,6 +40,17 @@ class Dataset:
     table: Table
     closed: bool = True  # closed datatype == schema provided
     indexes: dict[str, IndexInfo] = dataclasses.field(default_factory=dict)
+    # LSM components (engine/lsm.py): each run is itself a Dataset holding a
+    # device-resident flush (padded + sharded, own indexes/zone maps). Runs
+    # are addressed as "<name>@run<i>" and never appear in catalog.names();
+    # queries over a fed dataset execute as base ∪ runs (UnionRuns plan node)
+    # until compaction folds them back into ``table``.
+    runs: list["Dataset"] = dataclasses.field(default_factory=list)
+    live_rows: Optional[int] = None  # valid-row count (None -> len(table))
+
+    @property
+    def num_live_rows(self) -> int:
+        return self.live_rows if self.live_rows is not None else len(self.table)
 
     def index_on(self, column: str) -> Optional[IndexInfo]:
         for ix in self.indexes.values():
@@ -59,6 +75,14 @@ class Catalog:
         return ds
 
     def get(self, dataverse: str, name: str) -> Dataset:
+        if "@" in name:  # LSM component address: "<dataset>@run<i>"
+            base_name, _, comp = name.partition("@")
+            ds = self.get(dataverse, base_name)
+            if comp.startswith("run"):
+                i = int(comp[3:])
+                if i < len(ds.runs):
+                    return ds.runs[i]
+            raise KeyError(f"unknown LSM component {dataverse}.{name}")
         key = (dataverse, name)
         if key not in self._datasets:
             raise KeyError(f"unknown dataset {dataverse}.{name}")

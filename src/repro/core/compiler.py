@@ -146,6 +146,21 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
             return env, mask
         return fn
 
+    if isinstance(node, P.UnionRuns):
+        kids = [_lower_stream(c, ctx) for c in node.children]
+
+        def fn(tables, params):
+            envs, masks = [], []
+            for k in kids:
+                e, m = k(tables, params)
+                envs.append(e)
+                masks.append(m)
+            names = list(envs[0])
+            env = {n: jnp.concatenate([e[n] for e in envs], axis=0)
+                   for n in names}
+            return env, jnp.concatenate(masks, axis=0)
+        return fn
+
     if isinstance(node, P.Filter):
         child = _lower_stream(node.children[0], ctx)
 
@@ -217,19 +232,42 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
         lchild = _lower_stream(node.children[0], ctx)
         rchild = _lower_stream(node.children[1], ctx)
         # materializing joins require unique build keys (static shapes:
-        # each probe row gathers ≤1 match). Catch violations via stats.
-        for leaf in P.walk(node.children[1]):
-            if isinstance(leaf, P.Scan):
+        # each probe row gathers ≤1 match). Catch violations via stats; a
+        # fed build side contributes base + runs, so every component must be
+        # internally unique AND the component key ranges pairwise disjoint.
+        scans = [l for l in P.walk(node.children[1]) if isinstance(l, P.Scan)]
+        if scans:
+            first = scans[0].dataset.split("@")[0]
+            comps = [l for l in scans if l.dataverse == scans[0].dataverse
+                     and l.dataset.split("@")[0] == first]
+            ranges = []
+            for leaf in comps:
                 ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
                 meta = ds.table.meta.get(node.right_on)
-                if meta is not None and meta.distinct is not None \
-                        and meta.distinct < len(ds.table):
+                if meta is None:
+                    continue
+                if meta.distinct is not None and meta.distinct < ds.num_live_rows:
                     raise NotImplementedError(
                         f"materializing join on non-unique key "
                         f"{node.right_on!r} (distinct={meta.distinct} < "
-                        f"rows={len(ds.table)}); COUNT over such joins is "
+                        f"rows={ds.num_live_rows}); COUNT over such joins is "
                         "supported (join-count path)")
-                break
+                if meta.lo is not None:
+                    ranges.append((meta.lo, meta.hi))
+            if len(comps) > 1:
+                if len(ranges) < len(comps):
+                    raise NotImplementedError(
+                        f"materializing join against a fed dataset needs "
+                        f"key bounds on {node.right_on!r} to prove the LSM "
+                        "components disjoint")
+                for i, (lo_a, hi_a) in enumerate(ranges):
+                    for lo_b, hi_b in ranges[i + 1:]:
+                        if lo_a <= hi_b and lo_b <= hi_a:
+                            raise NotImplementedError(
+                                f"materializing join key {node.right_on!r} "
+                                "may repeat across LSM components "
+                                f"(overlapping bounds); compact first or "
+                                "use COUNT (join-count path)")
 
         def fn(tables, params):
             lenv, lm = lchild(tables, params)
@@ -243,14 +281,30 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
 
 def _group_domain(node: P.GroupAgg, ctx: ExecContext):
     """Resolve (lo, num_groups) for the bounded-domain group-by from leaf
-    dataset column statistics (the DBMS catalog stats analogue)."""
+    dataset column statistics (the DBMS catalog stats analogue). Bounds merge
+    across the LSM components (base + runs) of the FIRST dataset that carries
+    them: a run whose delta extends the key domain widens the group table
+    (extra all-zero groups are masked out at materialization, so widening
+    never changes results). Leaves of OTHER datasets — a join's build side
+    whose same-named column loses name resolution anyway — must not widen
+    the domain (an unrelated huge-bounded column would explode G)."""
     key = node.keys[0]
+    lo = hi = family = None
     for leaf in P.walk(node):
         if isinstance(leaf, P.Scan):
             ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
             meta = ds.table.meta.get(key)
-            if meta is not None and meta.lo is not None and meta.hi is not None:
-                return int(meta.lo), int(meta.hi - meta.lo + 1)
+            if meta is None or meta.lo is None or meta.hi is None:
+                continue
+            fam = (leaf.dataverse, leaf.dataset.split("@")[0])
+            if family is None:
+                family = fam
+            elif fam != family:
+                continue
+            lo = meta.lo if lo is None else min(lo, meta.lo)
+            hi = meta.hi if hi is None else max(hi, meta.hi)
+    if lo is not None:
+        return int(lo), int(hi - lo + 1)
     raise ValueError(
         f"group key {key!r} has no domain statistics; bounded-domain group-by "
         "requires catalog lo/hi (Wisconsin columns carry them)")
@@ -260,18 +314,29 @@ def _lower_groupagg(node: P.GroupAgg, ctx: ExecContext) -> Callable:
     assert len(node.keys) == 1, "single-key group-by (paper expressions 4/8)"
     key = node.keys[0]
     lo, num_groups = _group_domain(node, ctx)
-    child = _lower_stream(node.children[0], ctx)
+    child_node = node.children[0]
     aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
 
     # kernel mode: count/sum/mean all reduce to one segment-sum, so every
     # AggSpec fuses into a single (BLOCK, C) value tile — one one-hot-matmul
     # kernel launch per grid step (col 0 counts, cols 1.. sum the value
-    # columns). max/min are not sum-shaped, and the MXU accumulates in f32 —
-    # fusion requires a static proof of exactness (catalog bounds) or the
-    # generic native-dtype path keeps the bit-identical-to-gspmd contract.
-    if ctx.use_kernels and all(op in ("count", "sum", "mean") for _, op, _ in aggs) \
+    # columns); max/min add one select-and-reduce launch each. The kernels
+    # compute in f32 — fusion requires a static proof of exactness (catalog
+    # bounds) or the generic native-dtype path keeps the
+    # bit-identical-to-gspmd contract. Over an LSM union each component gets
+    # its own kernel launches; partials merge with +/max/min (the same shape
+    # a psum merge has across shards).
+    if ctx.use_kernels \
+            and all(op in ("count", "sum", "mean", "max", "min")
+                    for _, op, _ in aggs) \
             and _kernel_groupagg_exact(node, ctx, aggs):
-        return _lower_groupagg_kernel(node, ctx, key, lo, num_groups, child, aggs)
+        if isinstance(child_node, P.UnionRuns):
+            comps = [_lower_stream(c, ctx) for c in child_node.children]
+        else:
+            comps = [_lower_stream(child_node, ctx)]
+        return _lower_groupagg_kernel(node, ctx, key, lo, num_groups, comps, aggs)
+
+    child = _lower_stream(child_node, ctx)
 
     def fn(tables, params):
         env, mask = child(tables, params)
@@ -291,22 +356,25 @@ _F32_EXACT = 1 << 24  # every int in [-2^24, 2^24] is exactly representable
 
 
 def _kernel_groupagg_exact(node: P.GroupAgg, ctx: ExecContext, aggs: list) -> bool:
-    """The segment_agg kernel accumulates in float32 on the MXU. That is
-    bit-identical to the generic path only when every per-group sum is an
+    """The segment_agg kernel computes in float32. That is bit-identical to
+    the generic path only when every per-group result is an
     exactly-representable integer: counts need n < 2^24; sum/mean need an
-    integer value column whose catalog bounds prove n * max|value| < 2^24.
+    integer value column whose catalog bounds prove n * max|value| < 2^24;
+    max/min only need the values themselves representable (|value| < 2^24 —
+    no accumulation).
 
     The bound must come from the table the column ACTUALLY originates from:
-    `_trace_col` follows Project renames and join name-resolution down to a
-    leaf; untraceable provenance (computed expressions, suffixed join
-    collisions) refuses fusion — refusal is always safe. n is the largest
-    leaf row count, an upper bound on any stream length (joins emit the
-    probe side's length, filters/limits only shrink)."""
+    `_trace_col` follows Project renames, join name-resolution, and LSM
+    unions down to leaves; untraceable provenance (computed expressions,
+    suffixed join collisions) refuses fusion — refusal is always safe. n is
+    the SUM of leaf row counts, an upper bound on any stream length (a union
+    concatenates its components, joins emit the probe side's length,
+    filters/limits only shrink)."""
     tables = [ctx.catalog.get(l.dataverse, l.dataset).table
               for l in P.walk(node) if isinstance(l, P.Scan)]
     if not tables:
         return False
-    n = max(len(t) for t in tables)
+    n = sum(len(t) for t in tables)
     if n >= _F32_EXACT:
         return False
     for _, op, col in aggs:
@@ -317,7 +385,9 @@ def _kernel_groupagg_exact(node: P.GroupAgg, ctx: ExecContext, aggs: list) -> bo
             return False
         if m.lo is None or m.hi is None:
             return False
-        if n * max(abs(int(m.lo)), abs(int(m.hi))) >= _F32_EXACT:
+        maxabs = max(abs(int(m.lo)), abs(int(m.hi)))
+        bound = maxabs if op in ("max", "min") else n * maxabs
+        if bound >= _F32_EXACT:
             return False
     return True
 
@@ -341,6 +411,17 @@ def _trace_col(node: P.Plan, col: str, ctx: ExecContext):
                     return _trace_col(node.children[0], e.name, ctx)
                 return None
         return None
+    if isinstance(node, P.UnionRuns):
+        # every component must prove the column; the union's bound is the
+        # envelope of the per-component bounds (runs may extend the domain).
+        metas = [_trace_col(c, col, ctx) for c in node.children]
+        if any(m is None or m.lo is None or m.hi is None for m in metas):
+            return None
+        from repro.engine.table import ColumnMeta
+        return ColumnMeta(metas[0].dtype,
+                          min(m.lo for m in metas), max(m.hi for m in metas),
+                          sum(m.distinct or 0 for m in metas) or None,
+                          any(m.is_string for m in metas), False)
     if isinstance(node, P.Join):
         # join_materialize: the left side wins a bare name; right-only names
         # pass through; a collision suffixes the right column (untraceable by
@@ -355,39 +436,69 @@ def _trace_col(node: P.Plan, col: str, ctx: ExecContext):
 
 
 def _lower_groupagg_kernel(node: P.GroupAgg, ctx: ExecContext, key: str,
-                           lo: int, num_groups: int, child: Callable,
+                           lo: int, num_groups: int, comps: list,
                            aggs: list) -> Callable:
-    vcols: list[str] = []  # distinct value columns, first-use order
+    """``comps``: one lowered stream per LSM component (a single entry for a
+    plain dataset). Each component runs its own kernel launches — one fused
+    one-hot-matmul for the sum family, one select-and-reduce per extreme
+    family — and the (G, C) partials merge with +/max/min, exactly the merge
+    a compaction-time recompute would produce."""
+    vcols: list[str] = []   # distinct sum-family value columns, first-use order
+    xcols: dict[str, list[str]] = {"max": [], "min": []}
     for _, op, col in aggs:
         if op in ("sum", "mean") and col not in vcols:
             vcols.append(col)
+        elif op in ("max", "min") and col not in xcols[op]:
+            xcols[op].append(col)
 
-    def fn(tables, params):
-        env, mask = child(tables, params)
-        key_col = env[key]
-        # dead rows get gid -1: the kernel's live-check drops them, so an
-        # arbitrary (non-prefix) mask needs no compaction.
-        gid = jnp.where(mask, (key_col - lo).astype(jnp.int32), -1)
-        tiles = [jnp.ones(mask.shape, jnp.float32)]
-        tiles += [env[c].astype(jnp.float32) for c in vcols]
-        values = jnp.stack(tiles, axis=1)  # (n, 1 + |vcols|)
+    def launch(gid, cols_f32, n, op):
+        values = jnp.stack(cols_f32, axis=1)  # (n, C)
         if ctx.distributed:
             from repro.engine import distributed as D
-            sums = D.dist_kernel_group_agg(ctx.mesh, ctx.data_axes, gid, values,
-                                           num_groups, backend=ctx.kernel_backend)
-        else:
-            from repro.kernels import ops
-            sums = ops.segment_agg(values, gid, num_groups, mask.shape[0],
-                                   backend=ctx.kernel_backend)
+            return D.dist_kernel_group_agg(ctx.mesh, ctx.data_axes, gid, values,
+                                           num_groups, op=op,
+                                           backend=ctx.kernel_backend)
+        from repro.kernels import ops
+        return ops.segment_agg(values, gid, num_groups, n, op=op,
+                               backend=ctx.kernel_backend)
+
+    def fn(tables, params):
+        sums = maxs = mins = None
+        key_dtype = val_dtypes = None
+        for comp in comps:
+            env, mask = comp(tables, params)
+            key_col = env[key]
+            key_dtype = key_col.dtype
+            val_dtypes = {c: env[c].dtype for _, _, c in aggs if c}
+            # dead rows get gid -1: the kernel's live-check drops them, so an
+            # arbitrary (non-prefix) mask needs no compaction.
+            gid = jnp.where(mask, (key_col - lo).astype(jnp.int32), -1)
+            n = mask.shape[0]
+            tiles = [jnp.ones(mask.shape, jnp.float32)]
+            tiles += [env[c].astype(jnp.float32) for c in vcols]
+            part = launch(gid, tiles, n, "sum")
+            sums = part if sums is None else sums + part
+            if xcols["max"]:
+                part = launch(gid, [env[c].astype(jnp.float32)
+                                    for c in xcols["max"]], n, "max")
+                maxs = part if maxs is None else jnp.maximum(maxs, part)
+            if xcols["min"]:
+                part = launch(gid, [env[c].astype(jnp.float32)
+                                    for c in xcols["min"]], n, "min")
+                mins = part if mins is None else jnp.minimum(mins, part)
         counts = sums[:, 0].astype(jnp.int32)
-        out = {key: jnp.arange(lo, lo + num_groups, dtype=key_col.dtype)}
+        out = {key: jnp.arange(lo, lo + num_groups, dtype=key_dtype)}
         for out_name, op, col in aggs:
             if op == "count":
                 out[out_name] = counts
             elif op == "sum":
-                out[out_name] = sums[:, 1 + vcols.index(col)].astype(env[col].dtype)
-            else:  # mean: exact-integer f32 sum / count, as the generic path
+                out[out_name] = sums[:, 1 + vcols.index(col)].astype(val_dtypes[col])
+            elif op == "mean":  # exact-integer f32 sum / count, as generic
                 out[out_name] = sums[:, 1 + vcols.index(col)] / jnp.maximum(counts, 1)
+            else:  # max/min: empty groups hold ±inf — pin before the int cast
+                src = maxs if op == "max" else mins
+                v = src[:, xcols[op].index(col)]
+                out[out_name] = jnp.where(counts > 0, v, 0.0).astype(val_dtypes[col])
         return out, counts > 0
     return fn
 
@@ -396,6 +507,27 @@ def _lower_groupagg_kernel(node: P.GroupAgg, ctx: ExecContext, key: str,
 
 
 def _lower_terminal(plan: P.Plan, ctx: ExecContext) -> tuple[str, Callable]:
+    if isinstance(plan, P.UnionScalar):
+        # per-LSM-component scalar programs (each with its own access path:
+        # index-only count, fused range-count kernel, generic mask) merged
+        # with +/max/min — the cross-component analogue of a psum.
+        subs = []
+        for c in plan.children:
+            kind, build = _lower_terminal(c, ctx)
+            assert kind == "scalar", f"UnionScalar over {kind} child"
+            subs.append(build)
+        merges = plan.merges
+        combine = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
+
+        def fn(tables, params):
+            outs = [s(tables, params) for s in subs]
+            res = dict(outs[0])
+            for o in outs[1:]:
+                for name, op in merges:
+                    res[name] = combine[op](res[name], o[name])
+            return res
+        return "scalar", fn
+
     if isinstance(plan, P.FusedRangeCount):
         return "scalar", _lower_fused_range_count(plan, ctx)
 
@@ -519,16 +651,23 @@ def _lower_filter_count(plan: P.FilterCount, ctx: ExecContext) -> Callable:
 
 def _join_key_int32_safe(side: P.Plan, col: str, ctx: ExecContext) -> bool:
     """True when catalog bounds prove the join key column casts to int32
-    losslessly (the merge_join kernel's tile dtype)."""
+    losslessly (the merge_join kernel's tile dtype). Every leaf that carries
+    the column must pass — an LSM run can extend the base's domain."""
+    i32 = np.iinfo(np.int32)
+    metas = []
     for leaf in P.walk(side):
         if isinstance(leaf, P.Scan):
             m = ctx.catalog.get(leaf.dataverse, leaf.dataset).table.meta.get(col)
-            if m is None or m.is_string or not np.issubdtype(m.dtype, np.integer):
-                return False
-            i32 = np.iinfo(np.int32)
-            return m.lo is not None and m.hi is not None \
-                and m.lo >= i32.min and m.hi <= i32.max
-    return False
+            if m is not None:
+                metas.append(m)
+    if not metas:
+        return False
+    for m in metas:
+        if m.is_string or not np.issubdtype(m.dtype, np.integer):
+            return False
+        if m.lo is None or m.hi is None or m.lo < i32.min or m.hi > i32.max:
+            return False
+    return True
 
 
 def _lower_join_count(plan: P.JoinCount, ctx: ExecContext) -> Callable:

@@ -335,8 +335,9 @@ class GroupBy:
         g._column = column
         return g
 
-    def agg(self, spec) -> dict[str, np.ndarray]:
-        """agg('count') / agg('max') on a selected column / agg({col: op})."""
+    def agg_plan(self, spec) -> P.Plan:
+        """The GroupAgg plan for ``spec`` without executing it — feed this
+        to ``Session.create_view`` for a continuously-maintained aggregate."""
         if isinstance(spec, str):
             if spec == "count":
                 aggs = [P.AggSpec("count", "count", None)]
@@ -347,8 +348,11 @@ class GroupBy:
             aggs = [P.AggSpec(f"{op}_{c}", op, c) for c, op in spec.items()]
         else:
             raise TypeError(spec)
-        plan = P.GroupAgg(self._frame._plan, [self._key], aggs)
-        return self._frame._session.execute(plan)
+        return P.GroupAgg(self._frame._plan, [self._key], aggs)
+
+    def agg(self, spec) -> dict[str, np.ndarray]:
+        """agg('count') / agg('max') on a selected column / agg({col: op})."""
+        return self._frame._session.execute(self.agg_plan(spec))
 
     def count(self):
         return self.agg("count")

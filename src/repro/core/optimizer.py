@@ -37,11 +37,16 @@ def optimize(root: P.Plan, catalog: Catalog | None = None, *, enable_index: bool
              enable_pushdown: bool = True, enable_kernel_fusion: bool = False) -> P.Plan:
     prev_fp = None
     node = root
+    if catalog is not None:
+        # NOT an optimization: a Scan of a fed dataset MUST see base ∪ runs
+        # (LSM read semantics), so the expansion runs regardless of flags.
+        node = _expand_feeds(node, catalog)
     for _ in range(12):  # fixpoint with a safety bound
         if enable_pushdown:
             node = _rewrite(node, _fuse_filters)
             node = _rewrite(node, _pushdown_limit)
             node = _rewrite(node, _fuse_agg)
+            node = _rewrite(node, _union_pushdown)
         if enable_index and catalog is not None:
             node = _rewrite(node, lambda n: _select_index(n, catalog))
         if enable_kernel_fusion and catalog is not None:
@@ -53,6 +58,29 @@ def optimize(root: P.Plan, catalog: Catalog | None = None, *, enable_index: bool
     if enable_pushdown and catalog is not None:
         node = _prune_columns(node, catalog)
     return node
+
+
+def _expand_feeds(node: P.Plan, catalog: Catalog) -> P.Plan:
+    """Single top-down pass replacing every Scan of a dataset that has LSM
+    runs with UnionRuns(Scan(base), Scan(run_0), ...). Component Scans keep
+    the plain dataset name for the base (it resolves to the base table only;
+    runs live beside it) and "<name>@run<i>" for each run, so fingerprints
+    change whenever the run set does."""
+    if isinstance(node, P.Scan):
+        if "@" in node.dataset:
+            return node
+        try:
+            ds = catalog.get(node.dataverse, node.dataset)
+        except KeyError:
+            return node
+        if not ds.runs:
+            return node
+        comps: list[P.Plan] = [node]
+        comps += [P.Scan(f"{node.dataset}@run{i}", node.dataverse)
+                  for i in range(len(ds.runs))]
+        return P.UnionRuns(comps)
+    kids = tuple(_expand_feeds(c, catalog) for c in node.children)
+    return _with_children(node, kids) if kids != node.children else node
 
 
 def _rewrite(node: P.Plan, rule) -> P.Plan:
@@ -107,6 +135,34 @@ def _fuse_agg(node: P.Plan):
                                child.left_on, child.right_on)
         if isinstance(child, P.Scan):
             return P.FilterCount(child, None)
+    return None
+
+
+def _union_pushdown(node: P.Plan):
+    """Distribute row-wise operators and scalar aggregates through an LSM
+    union so each component keeps its own access path (per-run index probes,
+    per-run fused kernels). Sharing the predicate/output Expr objects across
+    components is safe: literal slots are assigned by object identity, so
+    every occurrence reads the same runtime param."""
+    child = node.children[0] if node.children else None
+    if not isinstance(child, P.UnionRuns):
+        return None
+    if isinstance(node, P.Filter):
+        return P.UnionRuns([P.Filter(c, node.predicate) for c in child.children])
+    if isinstance(node, P.Project):
+        return P.UnionRuns([P.Project(c, node.outputs) for c in child.children])
+    if isinstance(node, P.FilterCount):
+        return P.UnionScalar(
+            [P.FilterCount(c, node.predicate) for c in child.children],
+            [("count", "sum")])
+    if isinstance(node, P.Agg) and all(
+            s.op in ("count", "sum", "max", "min") for s in node.aggs):
+        merges = [(s.out_name, "sum" if s.op in ("count", "sum") else s.op)
+                  for s in node.aggs]
+        return P.UnionScalar([P.Agg(c, node.aggs) for c in child.children], merges)
+    # Agg with mean, GroupAgg, Sort/TopK/Limit/Join: stay above the union —
+    # the compiler's concat lowering (or per-component GroupAgg partials in
+    # kernel mode) handles them.
     return None
 
 
@@ -271,6 +327,11 @@ def _prune_columns(node: P.Plan, catalog: Catalog, needed: set[str] | None = Non
         if isinstance(node, (P.TopK, P.Sort)):
             child_needed = None if needed is None else (set(needed) | node.required_columns())
         kids = (_prune_columns(node.children[0], catalog, child_needed),)
+        return _with_children(node, kids)
+
+    if isinstance(node, P.UnionRuns):
+        # components share one schema: the same requirement applies to each
+        kids = tuple(_prune_columns(c, catalog, needed) for c in node.children)
         return _with_children(node, kids)
 
     if isinstance(node, (P.Join, P.JoinCount)):

@@ -281,17 +281,20 @@ def dist_kernel_filter_count(mesh: Mesh, data_axes, cols_mat: jax.Array,
 
 
 def dist_kernel_group_agg(mesh: Mesh, data_axes, gids: jax.Array,
-                          values: jax.Array, num_groups: int,
+                          values: jax.Array, num_groups: int, op: str = "sum",
                           backend=None) -> jax.Array:
     """gids: (n,) int32 (-1 for dead rows); values: (n, C) f32. Shard-local
-    one-hot-matmul segment sums, psum merge -> replicated (G, C)."""
+    one-hot segment reductions, minimal-collective merge (psum for sums,
+    pmax/pmin for extremes) -> replicated (G, C)."""
     from repro.kernels import ops
 
     dp = _dp(data_axes)
+    merge = {"sum": jax.lax.psum, "max": jax.lax.pmax, "min": jax.lax.pmin}[op]
 
     def local(g, v):
-        out = ops.segment_agg(v, g, num_groups, v.shape[0], backend=backend)
-        return jax.lax.psum(out, data_axes)
+        out = ops.segment_agg(v, g, num_groups, v.shape[0], op=op,
+                              backend=backend)
+        return merge(out, data_axes)
 
     return _smap(mesh, data_axes, local, (P(dp), P(dp, None)), P(None, None))(
         gids, values)

@@ -1,35 +1,47 @@
 """Live data ingestion — the paper's Twitter data-feed analogue (§III-A).
 
 AsterixDB feeds append to LSM components and maintain indexes online; the
-TPU-resident analogue is run-based: arriving rows buffer on the host, flush
-into device-resident *runs* (chunks), and periodically *compact* into the
-base table (re-shard + re-sort + index rebuild). Queries see base ∪ runs —
-the same data before and after compaction, exactly like querying an LSM tree
-across its components.
+TPU-resident analogue (engine/lsm.py) is run-based: arriving rows buffer on
+the host, flush into device-resident *runs* (block-padded, mesh-sharded,
+with per-run sorted secondary indexes + zone maps built at flush time), and
+compaction is *deferred* until the size-ratio policy fires — then a single
+re-shard merges every component into the base. Queries see base ∪ runs (the
+``UnionRuns`` plan node) — the same data before and after compaction,
+exactly like querying an LSM tree across its components. Registered
+materialized views refresh incrementally from each flushed delta.
 """
 from __future__ import annotations
 
-import time
 from typing import Optional
 
 import numpy as np
 
-from repro.engine.table import Table, concat_tables
+from repro.engine import lsm
+from repro.engine.table import Table
 
 
 class Feed:
     def __init__(self, session, dataset: str, dataverse: str = "Default",
-                 flush_rows: int = 4096):
+                 flush_rows: int = 4096,
+                 policy: Optional[lsm.CompactionPolicy] = None):
         self.session = session
         self.dataset = dataset
         self.dataverse = dataverse
         self.flush_rows = flush_rows
+        self.policy = policy if policy is not None else lsm.CompactionPolicy()
         self._buffer: list[dict[str, np.ndarray]] = []
         self._buffered = 0
-        self.stats = {"ingested": 0, "flushes": 0, "compactions": 0}
+        self.stats = {"ingested": 0, "flushes": 0, "compactions": 0,
+                      "runs": 0, "run_rows": 0}
+
+    # -- ingest ------------------------------------------------------------
 
     def push(self, rows: dict[str, np.ndarray]) -> None:
-        """Append a batch of arriving records (host-side buffer)."""
+        """Append a batch of arriving records (host-side buffer). The batch
+        is validated against the dataset schema up front — a malformed batch
+        raises here, not deep inside a device merge."""
+        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        rows = _validate_batch(rows, ds.table)
         n = len(next(iter(rows.values())))
         self._buffer.append(rows)
         self._buffered += n
@@ -38,33 +50,85 @@ class Feed:
             self.flush()
 
     def flush(self) -> None:
-        """Move the host buffer into the stored dataset as a new run."""
+        """Move the host buffer into a new device-resident run — O(batch):
+        pad + shard + per-run index build, never touching the base. Views
+        registered on the dataset refresh from the delta; the compaction
+        policy may then fold the components back into the base."""
         if not self._buffer:
             return
         cols = {k: np.concatenate([b[k] for b in self._buffer], axis=0)
                 for k in self._buffer[0]}
-        self._merge(Table(cols))
         self._buffer.clear()
         self._buffered = 0
-        self.stats["flushes"] += 1
-
-    def _merge(self, run: Table) -> None:
         ds = self.session.catalog.get(self.dataverse, self.dataset)
-        base = ds.table
-        # de-shard -> concat -> re-create (compaction). For the CPU-scale
-        # benchmark this is the simple correct strategy; a pod deployment
-        # would keep runs device-resident and merge indexes incrementally.
-        base_np = {k: np.asarray(v) for k, v in base.columns.items()
-                   if k != "__valid__"}
-        valid = np.asarray(base.valid)
-        base_np = {k: v[valid] for k, v in base_np.items()}
-        merged = {k: np.concatenate([base_np[k], np.asarray(run.columns[k])], axis=0)
-                  for k in base_np}
-        meta = {k: m for k, m in base.meta.items() if k != "__valid__"}
-        indexes = [ix.column for ix in ds.indexes.values() if ix.kind == "secondary"]
-        primary = next((ix.column for ix in ds.indexes.values()
-                        if ix.kind == "primary"), None)
-        self.session.create_dataset(self.dataset, Table(merged, meta),
-                                    dataverse=self.dataverse, closed=ds.closed,
-                                    indexes=indexes, primary=primary)
+        run = lsm.make_run(self.session, ds, Table(cols))
+        lsm.register_run(self.session, ds, run)
+        self.session.refresh_views(self.dataverse, self.dataset, cols)
+        self.stats["flushes"] += 1
+        self.stats["runs"] = len(ds.runs)
+        self.stats["run_rows"] = sum(r.num_live_rows for r in ds.runs)
+        if lsm.should_compact(ds, self.policy):
+            self.compact()
+
+    def compact(self) -> None:
+        """Merge base ∪ runs into a fresh base (single re-shard + re-sort +
+        index rebuild). Query results are unchanged — the LSM invariant."""
+        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        if not ds.runs:
+            return
+        lsm.compact(self.session, ds)
         self.stats["compactions"] += 1
+        self.stats["runs"] = 0
+        self.stats["run_rows"] = 0
+
+
+def _validate_batch(rows: dict[str, np.ndarray], base: Table) -> dict[str, np.ndarray]:
+    """Schema-check one pushed batch against the stored table: exact column
+    set, rectangular, dtypes safely castable, string widths matching.
+    Returns the batch cast to the base dtypes, in base column order."""
+    schema = [c for c in base.column_names() if c != "__valid__"]
+    missing = [c for c in schema if c not in rows]
+    extra = [c for c in rows if c not in schema]
+    if missing or extra:
+        parts = []
+        if missing:
+            parts.append(f"missing columns {missing}")
+        if extra:
+            parts.append(f"unexpected columns {extra}")
+        raise ValueError(f"feed batch does not match dataset schema: "
+                         f"{'; '.join(parts)} (expected {schema})")
+    arrays = {c: np.asarray(rows[c]) for c in schema}
+    lengths = {c: a.shape[0] for c, a in arrays.items()}
+    if len(set(lengths.values())) > 1:
+        raise ValueError(f"feed batch has ragged columns: {lengths}")
+    out = {}
+    for c in schema:
+        a = arrays[c]
+        tgt = base.columns[c]
+        if a.ndim != tgt.ndim:
+            raise ValueError(
+                f"feed batch column {c!r}: expected {tgt.ndim}-d "
+                f"(shape {tuple(tgt.shape[1:])} per row), got {a.ndim}-d")
+        if a.ndim == 2 and a.shape[1] != tgt.shape[1]:
+            raise ValueError(
+                f"feed batch column {c!r}: fixed width {tgt.shape[1]} "
+                f"expected, got {a.shape[1]}")
+        tdt = np.dtype(tgt.dtype)
+        if not np.can_cast(a.dtype, tdt, casting="same_kind"):
+            raise ValueError(
+                f"feed batch column {c!r}: dtype {a.dtype} is not safely "
+                f"castable to dataset dtype {tdt}")
+        cast = a.astype(tdt, copy=False)
+        if cast.dtype != a.dtype:
+            # same_kind permits narrowing (int64->int32): admit it only when
+            # every value round-trips — a wrapped key would silently corrupt
+            # joins/filters downstream, the exact failure this guard exists
+            # to surface at push time.
+            roundtrip = cast.astype(a.dtype, copy=False)
+            if not np.array_equal(roundtrip, a,
+                                  equal_nan=np.issubdtype(a.dtype, np.inexact)):
+                raise ValueError(
+                    f"feed batch column {c!r}: values do not fit dataset "
+                    f"dtype {tdt} (lossy narrowing from {a.dtype})")
+        out[c] = cast
+    return out

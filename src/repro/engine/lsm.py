@@ -1,0 +1,360 @@
+"""LSM storage for streaming ingestion — AsterixDB's feed path on the
+JAX/Pallas engine (paper §III-A).
+
+AsterixDB feeds append to LSM components with online index maintenance; the
+device-resident analogue here:
+
+  * a **flush** turns the host buffer into a *run*: a block-padded (and
+    mesh-sharded) columnar Table with its own sorted secondary indexes and
+    zone maps, registered beside the base table. Flush cost is O(batch),
+    never O(base).
+  * queries over a fed dataset execute as **base ∪ runs** (the ``UnionRuns``
+    plan node): per-component index probes / kernel launches, one final
+    merge — results are identical to querying the compacted dataset.
+  * **compaction** is deferred until a size-ratio policy fires, then merges
+    every component into the base with a single re-shard + re-sort + index
+    rebuild (the only O(base) step, amortized over many flushes).
+  * **materialized views** (``Session.create_view``) are group-by aggregates
+    maintained *incrementally*: each flush runs only the delta batch through
+    the ``segment_agg`` path and merges partial aggregates — the paper's
+    live-dashboard scenario. The f32 kernel path is gated by the same
+    exactness reasoning the kernel execution mode uses; batches that cannot
+    be proven exact fall back to native-dtype host reduction.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as P
+from repro.core.catalog import Dataset, open_widen
+from repro.engine.table import ColumnMeta, Table, pad_to_block
+
+RUN_BLOCK = 1024      # runs are padded to this row multiple
+_F32_EXACT = 1 << 24  # every int in [-2^24, 2^24] is exactly representable
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Deferred-compaction trigger (AsterixDB's size-ratio merge policy
+    analogue): compact when accumulated run rows reach ``size_ratio`` × base
+    rows, or when more than ``max_runs`` components pile up. ``size_ratio=0``
+    degenerates to compact-every-flush (the benchmark baseline)."""
+
+    size_ratio: float = 1.0
+    max_runs: int = 8
+
+
+def should_compact(ds: Dataset, policy: CompactionPolicy) -> bool:
+    if not ds.runs:
+        return False
+    if len(ds.runs) > policy.max_runs:
+        return True
+    run_rows = sum(r.num_live_rows for r in ds.runs)
+    return run_rows >= policy.size_ratio * max(ds.num_live_rows, 1)
+
+
+# -- runs -------------------------------------------------------------------
+
+
+def make_run(session, base: Dataset, table: Table) -> Dataset:
+    """Build one device-resident run from a flush batch: stats → (optional)
+    open-widen → sort by the base's primary → block-pad (+shard) → per-run
+    sorted secondary indexes with zone maps. O(batch) throughout."""
+    from repro.engine.session import _collect_stats
+
+    live = table.num_rows
+    table = _collect_stats(table)
+    if not base.closed:
+        table = open_widen(table)
+    primary = base.primary_index
+    if primary is not None:
+        order = np.argsort(np.asarray(table.columns[primary.column]),
+                           kind="stable")
+        cols = {k: np.asarray(v)[order] for k, v in table.columns.items()}
+        meta = dict(table.meta)
+        m = meta[primary.column]
+        meta[primary.column] = ColumnMeta(m.dtype, m.lo, m.hi, m.distinct,
+                                          m.is_string, True)
+        table = Table(cols, meta, table.num_rows)
+    table = pad_to_block(table, RUN_BLOCK)
+    if session.mesh is not None:
+        table = table.shard(session.mesh, session.data_axes)
+    run = Dataset(name=f"{base.name}@run{len(base.runs)}",
+                  dataverse=base.dataverse, table=table, closed=base.closed,
+                  live_rows=live)
+    if primary is not None:
+        run.indexes["primary"] = session._build_index(table, primary.column,
+                                                      "primary")
+    for ix in base.indexes.values():
+        if ix.kind == "secondary":
+            run.indexes[f"ix_{ix.column}"] = session._build_index(
+                table, ix.column, "secondary")
+    return run
+
+
+def register_run(session, base: Dataset, run: Dataset) -> None:
+    """Attach the run and drop every compiled plan: the LSM component set is
+    baked into optimized plans (UnionRuns fans out per component)."""
+    base.runs.append(run)
+    session._invalidate_plans()
+
+
+def _valid_columns(table: Table) -> dict[str, np.ndarray]:
+    valid = np.asarray(table.valid)
+    return {k: np.asarray(v)[valid] for k, v in table.columns.items()
+            if k != "__valid__"}
+
+
+def _merge_meta(metas: list[ColumnMeta], total_rows: int) -> ColumnMeta:
+    base = metas[0]
+    lo = hi = distinct = None
+    bounded = all(m.lo is not None and m.hi is not None for m in metas)
+    if bounded:
+        lo = min(m.lo for m in metas)
+        hi = max(m.hi for m in metas)
+    if all(m.distinct is not None for m in metas):
+        # summing per-component distincts is only a TRUE distinct count when
+        # the components cannot share values (pairwise-disjoint ranges) —
+        # otherwise it saturates at the row count and would falsely certify
+        # a duplicated key as unique to the materializing-join guard. With
+        # possible overlap only max(component distinct) is provable.
+        spans = sorted((m.lo, m.hi) for m in metas) if bounded else []
+        disjoint = bool(spans) and all(
+            spans[i][1] < spans[i + 1][0] for i in range(len(spans) - 1))
+        if len(metas) == 1 or disjoint:
+            distinct = min(sum(m.distinct for m in metas), total_rows)
+        else:
+            distinct = max(m.distinct for m in metas)
+    return ColumnMeta(base.dtype, lo, hi, distinct, base.is_string, False)
+
+
+def compact(session, ds: Dataset) -> Dataset:
+    """Fold base ∪ runs into a fresh base: one host merge, one re-shard, one
+    re-sort, one index rebuild — instead of doing all of that per flush.
+    Component stats merge so the catalog bounds stay truthful for the new
+    key/value domains the runs introduced."""
+    parts = [_valid_columns(ds.table)] + [_valid_columns(r.table) for r in ds.runs]
+    names = list(parts[0])
+    merged = {k: np.concatenate([p[k] for p in parts], axis=0) for k in names}
+    total = len(next(iter(merged.values()))) if names else 0
+    metas = [ds.table.meta] + [r.table.meta for r in ds.runs]
+    meta = {k: _merge_meta([mm[k] for mm in metas], total) for k in names}
+    secondary = [ix.column for ix in ds.indexes.values() if ix.kind == "secondary"]
+    primary = ds.primary_index.column if ds.primary_index is not None else None
+    return session.create_dataset(ds.name, Table(merged, meta),
+                                  dataverse=ds.dataverse, closed=ds.closed,
+                                  indexes=secondary, primary=primary)
+
+
+# -- incrementally-maintained materialized views ----------------------------
+
+_VIEW_OPS = ("count", "sum", "mean", "max", "min")
+
+
+class MaterializedView:
+    """A continuously-maintained group-by aggregate over a fed dataset (the
+    paper's live Twitter dashboard). State is dense per-group partials over a
+    dynamically-widening key domain; each flush applies only the delta batch.
+    ``result()`` matches a from-scratch group-by query bit-for-bit for
+    integer columns (sums tracked in int64/float64, means divided in f32
+    exactly like the query path)."""
+
+    def __init__(self, name: str, dataverse: str, dataset: str, key: str,
+                 aggs, predicate=None):
+        for s in aggs:
+            if s.op not in _VIEW_OPS:
+                raise ValueError(f"view aggregate {s.op!r} not in {_VIEW_OPS}")
+        self.name = name
+        self.dataverse, self.dataset = dataverse, dataset
+        self.key = key
+        self.aggs = list(aggs)
+        self.predicate = None
+        if predicate is not None:
+            self.predicate = copy.deepcopy(predicate)
+            for lit in self.predicate.literals():
+                lit.slot = None  # evaluate un-parameterized on delta batches
+        self._sum_cols = []
+        self._max_cols, self._min_cols = [], []
+        for s in self.aggs:
+            if s.op in ("sum", "mean") and s.column not in self._sum_cols:
+                self._sum_cols.append(s.column)
+            elif s.op == "max" and s.column not in self._max_cols:
+                self._max_cols.append(s.column)
+            elif s.op == "min" and s.column not in self._min_cols:
+                self._min_cols.append(s.column)
+        self.lo: Optional[int] = None
+        self._counts: Optional[np.ndarray] = None
+        self._sums: dict[str, np.ndarray] = {}
+        self._maxs: dict[str, np.ndarray] = {}
+        self._mins: dict[str, np.ndarray] = {}
+        self._key_dtype = None
+        self._dtypes: dict[str, np.dtype] = {}
+        self.stats = {"refreshes": 0, "rows_applied": 0,
+                      "kernel_batches": 0, "exact_fallback_batches": 0}
+
+    @classmethod
+    def from_plan(cls, name: str, plan: P.Plan) -> "MaterializedView":
+        """Accepts GroupAgg(keys=[k], aggs) over Scan or Filter(Scan)."""
+        if not isinstance(plan, P.GroupAgg) or len(plan.keys) != 1:
+            raise ValueError(
+                "create_view needs a single-key group-by aggregate "
+                "(df.groupby(key).agg(...)-shaped plan)")
+        child = plan.children[0]
+        predicate = None
+        if isinstance(child, P.Filter):
+            predicate = child.predicate
+            child = child.children[0]
+        if not isinstance(child, P.Scan) or "@" in child.dataset:
+            raise ValueError(
+                "create_view supports GroupAgg over a (optionally filtered) "
+                "dataset scan")
+        return cls(name, child.dataverse, child.dataset, plan.keys[0],
+                   list(plan.aggs), predicate)
+
+    # -- state ------------------------------------------------------------
+
+    def _ensure_domain(self, klo: int, khi: int) -> None:
+        if self._counts is None:
+            self.lo = klo
+            g = khi - klo + 1
+            self._counts = np.zeros(g, np.int64)
+            self._sums = {c: np.zeros(g, np.float64) for c in self._sum_cols}
+            self._maxs = {c: np.full(g, -np.inf) for c in self._max_cols}
+            self._mins = {c: np.full(g, np.inf) for c in self._min_cols}
+            return
+        g = self._counts.shape[0]
+        new_lo = min(self.lo, klo)
+        new_hi = max(self.lo + g - 1, khi)
+        if new_lo == self.lo and new_hi == self.lo + g - 1:
+            return
+        left, right = self.lo - new_lo, new_hi - (self.lo + g - 1)
+
+        def grow(a, fill):
+            return np.pad(a, (left, right), constant_values=fill)
+
+        self._counts = grow(self._counts, 0)
+        self._sums = {c: grow(a, 0.0) for c, a in self._sums.items()}
+        self._maxs = {c: grow(a, -np.inf) for c, a in self._maxs.items()}
+        self._mins = {c: grow(a, np.inf) for c, a in self._mins.items()}
+        self.lo = new_lo
+
+    def _delta_exact_for_kernel(self, n: int, cols: dict[str, np.ndarray],
+                                live: np.ndarray) -> bool:
+        """Same exactness reasoning as the kernel execution mode's group-agg
+        gate, but against the *actual* delta batch: f32 partials are
+        bit-exact when every per-group count/sum/extreme stays an integer
+        below 2^24."""
+        if n >= _F32_EXACT:
+            return False
+        for c in self._sum_cols + self._max_cols + self._min_cols:
+            a = cols[c]
+            if not np.issubdtype(a.dtype, np.integer):
+                return False
+            vals = a[live]
+            maxabs = int(np.abs(vals).max()) if vals.size else 0
+            bound = n * maxabs if c in self._sum_cols else maxabs
+            if bound >= _F32_EXACT:
+                return False
+        return True
+
+    def apply_delta(self, cols: dict[str, np.ndarray],
+                    valid: Optional[np.ndarray] = None) -> None:
+        n = len(next(iter(cols.values())))
+        self.stats["refreshes"] += 1
+        if n == 0:
+            return
+        live = np.ones(n, bool) if valid is None else np.asarray(valid, bool).copy()
+        if self.predicate is not None:
+            env = {k: jnp.asarray(v) for k, v in cols.items()}
+            live &= np.asarray(self.predicate.evaluate(env, []), bool)
+        if not live.any():
+            return
+        keys = np.asarray(cols[self.key])
+        self._key_dtype = keys.dtype
+        for c in self._sum_cols + self._max_cols + self._min_cols:
+            self._dtypes[c] = np.asarray(cols[c]).dtype
+        kl = keys[live]
+        self._ensure_domain(int(kl.min()), int(kl.max()))
+        g = self._counts.shape[0]
+        gid = np.where(live, keys.astype(np.int64) - self.lo, -1).astype(np.int32)
+        self.stats["rows_applied"] += int(live.sum())
+        if self._delta_exact_for_kernel(n, cols, live):
+            self._apply_kernel(cols, gid, g, n)
+        else:
+            self._apply_exact(cols, gid, live, g)
+
+    def _apply_kernel(self, cols, gid, g, n) -> None:
+        """Delta partials via the segment_agg kernel path (one fused sum
+        launch + one launch per extreme family), merged into int64/float64
+        state — the same launch shapes a flush-sized GroupAgg would run."""
+        from repro.kernels import ops as kops
+
+        self.stats["kernel_batches"] += 1
+        gid_j = jnp.asarray(gid)
+        tiles = [jnp.ones(n, jnp.float32)]
+        tiles += [jnp.asarray(cols[c]).astype(jnp.float32) for c in self._sum_cols]
+        part = np.asarray(kops.segment_agg(jnp.stack(tiles, axis=1), gid_j, g, n))
+        self._counts += part[:, 0].astype(np.int64)
+        for i, c in enumerate(self._sum_cols):
+            self._sums[c] += part[:, 1 + i].astype(np.float64)
+        if self._max_cols:
+            vals = jnp.stack([jnp.asarray(cols[c]).astype(jnp.float32)
+                              for c in self._max_cols], axis=1)
+            part = np.asarray(kops.segment_agg(vals, gid_j, g, n, op="max"))
+            for i, c in enumerate(self._max_cols):
+                np.maximum(self._maxs[c], part[:, i].astype(np.float64),
+                           out=self._maxs[c])
+        if self._min_cols:
+            vals = jnp.stack([jnp.asarray(cols[c]).astype(jnp.float32)
+                              for c in self._min_cols], axis=1)
+            part = np.asarray(kops.segment_agg(vals, gid_j, g, n, op="min"))
+            for i, c in enumerate(self._min_cols):
+                np.minimum(self._mins[c], part[:, i].astype(np.float64),
+                           out=self._mins[c])
+
+    def _apply_exact(self, cols, gid, live, g) -> None:
+        """Native-dtype host fallback when f32 exactness cannot be proven
+        (float columns, huge batches): bincount sums in float64 (exact to
+        2^53) + ufunc.at extremes."""
+        self.stats["exact_fallback_batches"] += 1
+        ix = gid[live]
+        self._counts += np.bincount(ix, minlength=g).astype(np.int64)
+        for c in self._sum_cols:
+            vals = np.asarray(cols[c])[live].astype(np.float64)
+            self._sums[c] += np.bincount(ix, weights=vals, minlength=g)
+        for c in self._max_cols:
+            np.maximum.at(self._maxs[c], ix, np.asarray(cols[c])[live])
+        for c in self._min_cols:
+            np.minimum.at(self._mins[c], ix, np.asarray(cols[c])[live])
+
+    def result(self) -> dict[str, np.ndarray]:
+        """The materialized group table (groups with at least one row), in
+        the same dtypes the equivalent group-by query returns."""
+        if self._counts is None:
+            return {self.key: np.array([], dtype=np.int64),
+                    **{s.out_name: np.array([]) for s in self.aggs}}
+        live = self._counts > 0
+        g = self._counts.shape[0]
+        out = {self.key: (self.lo + np.arange(g))[live].astype(self._key_dtype)}
+        counts = self._counts[live]
+        for s in self.aggs:
+            if s.op == "count":
+                out[s.out_name] = counts.astype(np.int32)
+            elif s.op == "sum":
+                out[s.out_name] = self._sums[s.column][live].astype(
+                    self._dtypes[s.column])
+            elif s.op == "mean":  # f32 sum / f32 count, as the query path
+                out[s.out_name] = (self._sums[s.column][live].astype(np.float32)
+                                   / counts.astype(np.float32))
+            elif s.op == "max":
+                out[s.out_name] = self._maxs[s.column][live].astype(
+                    self._dtypes[s.column])
+            else:
+                out[s.out_name] = self._mins[s.column][live].astype(
+                    self._dtypes[s.column])
+        return out

@@ -69,6 +69,9 @@ class Session:
         self._plan_cache: dict[str, tuple] = {}
         self.timings: dict[str, float] = {}
         self.stats = {"compiles": 0, "hits": 0, "optimizes": 0}
+        # incrementally-maintained materialized views (engine/lsm.py),
+        # refreshed from each feed flush's delta batch.
+        self.views: dict[str, "object"] = {}
 
     # -- DDL ----------------------------------------------------------------
 
@@ -111,29 +114,47 @@ class Session:
         self._plan_cache.clear()
 
     def _build_index(self, table: Table, column: str, kind: str) -> IndexInfo:
-        from repro.engine.index import build_index_local
-
-        keys = table.columns[column]
-        valid = table.valid
-        if self.mesh is not None and self.mesh.devices.size > 1:
-            dp = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
-
-            def build(k, v):
-                ix = build_index_local(k, v, column, kind)
-                return ix.sorted_keys, ix.row_ids
-
-            sk, rid = jax.jit(_shard_map(
-                build, mesh=self.mesh,
-                in_specs=(PS(dp), PS(dp)),
-                out_specs=(PS(dp), PS(dp))))(keys, valid)
-        else:
-            def build1(k, v):
-                ix = build_index_local(k, v, column, kind)
-                return ix.sorted_keys, ix.row_ids
-
-            sk, rid = jax.jit(build1)(keys, valid)
+        sk, rid, zmin, zmax = _index_builder(self.mesh, self.data_axes)(
+            table.columns[column], table.valid)
         return IndexInfo(name=f"{kind}:{column}", column=column, kind=kind,
-                         sorted_keys=sk, row_ids=rid)
+                         sorted_keys=sk, row_ids=rid,
+                         zone_min=zmin, zone_max=zmax)
+
+    # -- materialized views (continuous queries over fed datasets) ----------
+
+    def create_view(self, name: str, frame_or_plan) -> "object":
+        """Register a continuously-maintained group-by aggregate (the
+        paper's live-dashboard scenario): ``frame_or_plan`` is an AFrame (or
+        its plan) of shape ``groupby(key).agg(...)`` over a — optionally
+        filtered — dataset scan. The view is seeded from the dataset's
+        current contents (base ∪ runs) and from then on refreshed
+        *incrementally* from each feed flush's delta batch."""
+        from repro.engine.lsm import MaterializedView
+
+        plan = getattr(frame_or_plan, "_plan", frame_or_plan)
+        view = MaterializedView.from_plan(name, plan)
+        ds = self.catalog.get(view.dataverse, view.dataset)
+        for comp in [ds] + list(ds.runs):
+            cols = {k: np.asarray(v) for k, v in comp.table.columns.items()
+                    if k != "__valid__"}
+            view.apply_delta(cols, np.asarray(comp.table.valid))
+        self.views[name] = view
+        return view
+
+    def read_view(self, name: str) -> dict:
+        """The materialized result — no query execution, dashboard-latency."""
+        return self.views[name].result()
+
+    def drop_view(self, name: str) -> None:
+        self.views.pop(name, None)
+
+    def refresh_views(self, dataverse: str, dataset: str,
+                      delta_cols: dict) -> None:
+        """Apply one flushed delta batch to every view over the dataset
+        (called by Feed.flush)."""
+        for view in self.views.values():
+            if (view.dataverse, view.dataset) == (dataverse, dataset):
+                view.apply_delta(delta_cols)
 
     # -- query execution -------------------------------------------------------
 
@@ -205,6 +226,34 @@ class Session:
         self.catalog.register(ds)
         self._invalidate_plans()
         return ds
+
+
+# One jitted index builder per (mesh, data_axes): the sort/zone-map program
+# is column-independent, so every dataset/run index build on the same mesh
+# reuses one executable (retraced only per array shape). A per-call closure
+# would re-jit on EVERY flush and dominate streaming-ingest cost.
+_INDEX_BUILDERS: dict = {}
+
+
+def _index_builder(mesh, data_axes):
+    key = (mesh, tuple(data_axes))
+    fn = _INDEX_BUILDERS.get(key)
+    if fn is None:
+        from repro.engine.index import build_index_local
+
+        def build(k, v):
+            ix = build_index_local(k, v, "", "build")
+            return ix.sorted_keys, ix.row_ids, ix.zone_min, ix.zone_max
+
+        if mesh is not None and mesh.devices.size > 1:
+            dp = data_axes if len(data_axes) > 1 else data_axes[0]
+            fn = jax.jit(_shard_map(
+                build, mesh=mesh, in_specs=(PS(dp), PS(dp)),
+                out_specs=(PS(dp), PS(dp), PS(dp), PS(dp))))
+        else:
+            fn = jax.jit(build)
+        _INDEX_BUILDERS[key] = fn
+    return fn
 
 
 def _literal_binding(raw_lits, opt_lits) -> list[tuple[str, object]]:

@@ -117,6 +117,26 @@ class Table:
         return jnp.ones((self.num_rows,), dtype=jnp.bool_)
 
 
+def pad_to_block(table: Table, block: int) -> Table:
+    """Pad rows up to a multiple of ``block`` with a ``__valid__`` mask (the
+    device-resident LSM runs are block-padded so kernel grids and shard
+    splits stay aligned). No-op lengths still gain the mask column."""
+    n = table.num_rows
+    padded = ((n + block - 1) // block) * block if n else block
+    cols = dict(table.columns)
+    if "__valid__" not in cols:
+        cols["__valid__"] = jnp.ones((n,), dtype=jnp.bool_)
+    out = {}
+    for k, v in cols.items():
+        if padded != n:
+            pad_width = [(0, padded - n)] + [(0, 0)] * (v.ndim - 1)
+            v = jnp.pad(v, pad_width)  # pad rows are zeros, __valid__ False
+        out[k] = v
+    meta = dict(table.meta)
+    meta["__valid__"] = ColumnMeta(dtype=np.dtype(np.bool_))
+    return Table(out, meta, padded)
+
+
 def concat_tables(a: Table, b: Table) -> Table:
     names = a.column_names()
     cols = {n: jnp.concatenate([a.columns[n], b.columns[n]], axis=0) for n in names}

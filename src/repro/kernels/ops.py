@@ -68,12 +68,13 @@ def filter_count(cols, bounds, n_valid, backend: Optional[str] = None):
     return ref.filter_count(cols, bounds, n_valid)
 
 
-def segment_agg(values, gids, num_groups, n_valid, backend: Optional[str] = None):
+def segment_agg(values, gids, num_groups, n_valid, op: str = "sum",
+                backend: Optional[str] = None):
     _tick("segment_agg")
     if _use_pallas(backend):
-        return _segment_agg(values, gids, num_groups, n_valid,
+        return _segment_agg(values, gids, num_groups, n_valid, op=op,
                             interpret=_interpret())
-    return ref.segment_agg(values, gids, num_groups, n_valid)
+    return ref.segment_agg(values, gids, num_groups, n_valid, op)
 
 
 def sort_join_keys(keys, mask, presorted: bool = False):

@@ -21,13 +21,24 @@ def filter_count(cols: jax.Array, bounds: jax.Array, n_valid) -> jax.Array:
 
 
 def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int,
-                n_valid) -> jax.Array:
-    """values: (n, c) f32; gids: (n,) int32. Per-group column sums (G, c)."""
+                n_valid, op: str = "sum") -> jax.Array:
+    """values: (n, c) f32; gids: (n,) int32. Per-group column ``op``-reductions
+    (G, c); empty groups hold the identity (0 / -inf / +inf)."""
     n = values.shape[0]
     m = (jnp.arange(n) < n_valid) & (gids >= 0) & (gids < num_groups)
     safe = jnp.where(m, gids, num_groups)
-    v = jnp.where(m[:, None], values, 0.0)
-    return jax.ops.segment_sum(v, safe, num_segments=num_groups + 1)[:num_groups]
+    if op == "sum":
+        v = jnp.where(m[:, None], values, 0.0)
+        return jax.ops.segment_sum(v, safe, num_segments=num_groups + 1)[:num_groups]
+    ident = -jnp.inf if op == "max" else jnp.inf
+    seg = jax.ops.segment_max if op == "max" else jax.ops.segment_min
+    v = jnp.where(m[:, None], values.astype(jnp.float32), ident)
+    out = seg(v, safe, num_segments=num_groups + 1)[:num_groups]
+    # segment_max/min leave untouched segments at the dtype min/max; pin the
+    # identity so the contract matches the Pallas kernel exactly.
+    counts = jax.ops.segment_sum(m.astype(jnp.int32), safe,
+                                 num_segments=num_groups + 1)[:num_groups]
+    return jnp.where((counts > 0)[:, None], out, ident)
 
 
 def merge_join_count(lkeys: jax.Array, rkeys: jax.Array, nl, nr) -> jax.Array:

@@ -7,6 +7,12 @@ matrix multiplied against the (BLOCK, C) value tile on the MXU, accumulating
 it resident in VMEM). Bounded-domain keys (Wisconsin mod-columns, MoE expert
 ids) make G small, so the one-hot GEMM beats scatter-adds on TPU, which has
 no efficient random-access memory path.
+
+``op`` selects the reduction: "sum" (the MXU matmul above) or "max"/"min"
+(VPU select-and-reduce over the same one-hot tile — not sum-shaped, so no
+matmul, but the same blocked revisit pattern keeps the (G, C) accumulator in
+VMEM). max/min feed group extremes for the kernel execution mode and the
+incrementally-maintained views of the streaming ingestion subsystem.
 """
 from __future__ import annotations
 
@@ -18,13 +24,15 @@ from jax.experimental import pallas as pl
 
 BLOCK = 2048
 
+_INIT = {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}
 
-def _kernel(nvalid_ref, gid_ref, val_ref, out_ref):
+
+def _kernel(op, nvalid_ref, gid_ref, val_ref, out_ref):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] = jnp.full_like(out_ref, _INIT[op])
 
     gids = gid_ref[0, :]  # (BLOCK,)
     vals = val_ref[...]   # (BLOCK, C)
@@ -34,15 +42,28 @@ def _kernel(nvalid_ref, gid_ref, val_ref, out_ref):
     live = (base + jax.lax.broadcasted_iota(jnp.int32, (b,), 0)) < nvalid_ref[0, 0]
     live = live & (gids >= 0) & (gids < G)
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (G, b), 0) == gids[None, :])
-    onehot = onehot.astype(jnp.float32) * live[None, :].astype(jnp.float32)
-    out_ref[...] += jax.lax.dot(onehot, vals.astype(jnp.float32),
-                                preferred_element_type=jnp.float32)
+    if op == "sum":
+        oh = onehot.astype(jnp.float32) * live[None, :].astype(jnp.float32)
+        out_ref[...] += jax.lax.dot(oh, vals.astype(jnp.float32),
+                                    preferred_element_type=jnp.float32)
+    else:
+        sel = (onehot & live[None, :])[:, :, None]  # (G, b, 1)
+        cand = jnp.where(sel, vals[None, :, :].astype(jnp.float32), _INIT[op])
+        if op == "max":
+            out_ref[...] = jnp.maximum(out_ref[...], jnp.max(cand, axis=1))
+        else:
+            out_ref[...] = jnp.minimum(out_ref[...], jnp.min(cand, axis=1))
 
 
-@functools.partial(jax.jit, static_argnames=("num_groups", "block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("num_groups", "op", "block", "interpret"))
 def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int, n_valid,
-                *, block: int = BLOCK, interpret: bool = True) -> jax.Array:
-    """values: (n, c) f32; gids: (n,) int32 -> (num_groups, c) sums."""
+                *, op: str = "sum", block: int = BLOCK,
+                interpret: bool = True) -> jax.Array:
+    """values: (n, c) f32; gids: (n,) int32 -> (num_groups, c) per-group
+    ``op``-reductions. Groups with no live member hold the identity
+    (0 / -inf / +inf) — callers mask by count."""
+    assert op in _INIT, op
     n, c = values.shape
     pad = (-n) % block
     if pad:
@@ -50,7 +71,7 @@ def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int, n_valid,
         gids = jnp.pad(gids, (0, pad))
     nb = values.shape[0] // block
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, op),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (0, 0)),

@@ -1,0 +1,466 @@
+"""Streaming ingestion subsystem (engine/lsm.py): device-resident runs,
+deferred compaction, base ∪ runs query equivalence in all three execution
+modes, schema validation, and incrementally-maintained materialized views."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import plan as P
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine import lsm
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+from repro.kernels import ops
+
+BASE_ROWS = 3_000
+PUSH_ROWS = 700
+
+DEFERRED = lsm.CompactionPolicy(size_ratio=10.0, max_runs=64)  # never auto
+
+
+def _session(mode):
+    if mode == "shard_map":
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        return Session(mesh=mesh, mode="shard_map")
+    return Session(mode=mode)
+
+
+def _fed_session(mode, n_pushes=2):
+    sess = _session(mode)
+    t = wisconsin.generate(BASE_ROWS, seed=3)
+    sess.create_dataset("Live", t, dataverse="d", indexes=["onePercent"],
+                        primary="unique2")
+    sess.create_dataset("Dim", wisconsin.generate(500, seed=7), dataverse="d")
+    feed = Feed(sess, "Live", "d", flush_rows=PUSH_ROWS, policy=DEFERRED)
+    for i in range(n_pushes):
+        extra = wisconsin.generate(PUSH_ROWS, seed=20 + i)
+        rows = {k: np.asarray(v) for k, v in extra.columns.items()}
+        rows["unique2"] = rows["unique2"] + BASE_ROWS + i * PUSH_ROWS
+        feed.push(rows)
+    return sess, feed
+
+
+def _query_suite(sess):
+    """Snapshot of every query family over the fed dataset."""
+    df = AFrame("d", "Live", session=sess)
+    dim = AFrame("d", "Dim", session=sess)
+    out = {
+        "len": len(df),
+        "filter_count": len(df[(df["ten"] == 3) & (df["two"] == 1)]),
+        "indexed_range": len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 30)]),
+        "group_count": df.groupby("ten").agg("count"),
+        "group_mix": df.groupby("twenty").agg(
+            {"four": "sum", "ten": "mean", "two": "max", "onePercent": "min"}),
+        "scalar_max": df["unique2"].max(),
+        "scalar_min": df["unique1"].min(),
+        "scalar_sum": df["four"].sum(),
+        "sort_head": df.sort_values("unique1", ascending=False).head(7),
+        "head": df.head(5),
+        "join_count": len(df.merge(dim, left_on="unique1", right_on="unique1")),
+        "project_head": df[["two", "four", "stringu1"]].head(4),
+    }
+    return out
+
+
+def _assert_same(a, b, label):
+    if isinstance(a, dict):
+        assert set(a) == set(b), label
+        for k in a:
+            av, bv = np.asarray(a[k]), np.asarray(b[k])
+            assert av.dtype == bv.dtype, (label, k, av.dtype, bv.dtype)
+            np.testing.assert_array_equal(av, bv, err_msg=f"{label}:{k}")
+    else:
+        assert a == b, (label, a, b)
+
+
+@pytest.mark.parametrize("mode", ["gspmd", "shard_map", "kernel"])
+def test_queries_identical_before_and_after_compaction(mode):
+    """The LSM read invariant: base ∪ runs must answer every query family
+    bit-identically to the compacted dataset — in all three session modes."""
+    sess, feed = _fed_session(mode)
+    assert feed.stats["flushes"] == 2 and feed.stats["compactions"] == 0
+    before = _query_suite(sess)
+    feed.compact()
+    assert feed.stats["compactions"] == 1
+    after = _query_suite(sess)
+    for k in before:
+        _assert_same(before[k], after[k], f"{mode}:{k}")
+
+
+def test_union_plan_on_lowered_path():
+    """Pre-compaction plans actually fan out per LSM component."""
+    sess, feed = _fed_session("gspmd")
+    df = AFrame("d", "Live", session=sess)
+    len(df)
+    opt = sess.last_optimized
+    assert isinstance(opt, P.UnionScalar)
+    assert len(opt.children) == 3  # base + 2 runs
+    df.sort_values("unique1").head(3)
+    assert any(isinstance(n, P.UnionRuns) for n in P.walk(sess.last_optimized))
+    # per-component index probes: the indexed range count runs one
+    # IndexRangeScan per component
+    len(df[(df["onePercent"] >= 5) & (df["onePercent"] <= 9)])
+    ixscans = [n for n in P.walk(sess.last_optimized)
+               if isinstance(n, P.IndexRangeScan)]
+    assert len(ixscans) == 3
+    assert {n.dataset for n in ixscans} == {"Live", "Live@run0", "Live@run1"}
+
+
+def test_kernel_mode_launches_per_component():
+    sess, feed = _fed_session("kernel")
+    df = AFrame("d", "Live", session=sess)
+    ops.reset_dispatch_counts()
+    len(df[(df["ten"] == 2) & (df["two"] == 0)])  # fused range count
+    assert ops.DISPATCH_COUNTS.get("filter_count", 0) == 3  # one per component
+    ops.reset_dispatch_counts()
+    df.groupby("ten").agg("count")
+    assert ops.DISPATCH_COUNTS.get("segment_agg", 0) == 3
+
+
+def test_group_max_min_on_kernel_path():
+    """ROADMAP item: group max/min now lower onto segment_agg (select-and-
+    reduce op) when catalog bounds prove f32 exactness — bit-identical to
+    gspmd."""
+    t = wisconsin.generate(4_000, seed=5)
+    results = {}
+    for mode in ("gspmd", "kernel"):
+        sess = Session(mode=mode)
+        sess.create_dataset("W", t, dataverse="k")
+        df = AFrame("k", "W", session=sess)
+        ops.reset_dispatch_counts()
+        results[mode] = df.groupby("twenty").agg({"four": "max", "ten": "min"})
+        if mode == "kernel":
+            assert ops.DISPATCH_COUNTS.get("segment_agg", 0) >= 1
+    _assert_same(results["kernel"], results["gspmd"], "group_max_min")
+
+
+def test_segment_agg_max_min_pallas_matches_ref():
+    rng = np.random.default_rng(0)
+    n, g, c = 5_000, 13, 3
+    gids = rng.integers(-1, g, n).astype(np.int32)
+    vals = rng.integers(-1000, 1000, (n, c)).astype(np.float32)
+    for op in ("max", "min", "sum"):
+        got = np.asarray(ops.segment_agg(vals, gids, g, n - 7, op=op,
+                                         backend="pallas"))
+        want = np.asarray(ops.segment_agg(vals, gids, g, n - 7, op=op,
+                                          backend="xla"))
+        np.testing.assert_array_equal(got, want, err_msg=op)
+
+
+def test_run_components_and_metadata_preserved():
+    """Runs carry their own sorted indexes + zone maps; compaction preserves
+    closed / primary / secondary metadata on the rebuilt base."""
+    sess, feed = _fed_session("gspmd")
+    ds = sess.catalog.get("d", "Live")
+    assert len(ds.runs) == 2
+    run = sess.catalog.get("d", "Live@run0")
+    assert run is ds.runs[0]
+    assert run.closed and run.live_rows == PUSH_ROWS
+    assert run.table.num_rows % lsm.RUN_BLOCK == 0  # block-padded
+    assert "__valid__" in run.table.columns
+    # per-run secondary index + zone maps, built at flush time
+    ix = run.index_on("onePercent")
+    assert ix is not None and ix.kind == "secondary"
+    assert ix.sorted_keys is not None and ix.zone_min is not None
+    sk = np.asarray(ix.sorted_keys)
+    assert np.all(np.diff(sk) >= 0)
+    assert run.primary_index is not None  # run sorted by base primary
+    assert run.table.meta["unique2"].sorted_ascending
+    feed.compact()
+    ds = sess.catalog.get("d", "Live")
+    assert not ds.runs
+    assert ds.closed
+    assert ds.primary_index is not None and ds.primary_index.column == "unique2"
+    assert ds.table.meta["unique2"].sorted_ascending
+    ix = ds.index_on("onePercent")
+    assert ix is not None and ix.kind == "secondary" and ix.zone_min is not None
+    # merged stats stay truthful: unique2 domain covers the pushed keys
+    assert ds.table.meta["unique2"].hi == BASE_ROWS + 2 * PUSH_ROWS - 1
+    with pytest.raises(KeyError):
+        sess.catalog.get("d", "Live@run0")
+
+
+def test_group_domain_widens_with_runs():
+    """A run that extends the group-key domain must not lose groups —
+    neither before nor after compaction."""
+    base = {"k": np.arange(8, dtype=np.int32) % 4,
+            "v": np.arange(8, dtype=np.int32)}
+    sess = Session()
+    from repro.engine.table import Table
+    sess.create_dataset("G", Table(base), dataverse="d")
+    feed = Feed(sess, "G", "d", flush_rows=4, policy=DEFERRED)
+    feed.push({"k": np.array([7, 7, 9, 9], np.int32),
+               "v": np.array([1, 2, 3, 4], np.int32)})
+    df = AFrame("d", "G", session=sess)
+    before = df.groupby("k").agg("count")
+    assert set(np.asarray(before["k"])) == {0, 1, 2, 3, 7, 9}
+    feed.compact()
+    after = AFrame("d", "G", session=sess).groupby("k").agg("count")
+    _assert_same(before, after, "widened_groups")
+
+
+def test_empty_flush_is_noop_and_stats_counters():
+    sess, feed = _fed_session("gspmd", n_pushes=1)
+    stats0 = dict(feed.stats)
+    feed.flush()  # empty buffer: no-op
+    assert feed.stats == stats0
+    assert feed.stats["ingested"] == PUSH_ROWS
+    assert feed.stats["flushes"] == 1
+    assert feed.stats["runs"] == 1 and feed.stats["run_rows"] == PUSH_ROWS
+    # buffering below the threshold leaves data invisible until flush
+    extra = wisconsin.generate(10, seed=99)
+    rows = {k: np.asarray(v) for k, v in extra.columns.items()}
+    rows["unique2"] = rows["unique2"] + 10_000
+    feed.push(rows)
+    assert feed.stats["flushes"] == 1
+    assert len(AFrame("d", "Live", session=sess)) == BASE_ROWS + PUSH_ROWS
+    feed.flush()
+    assert feed.stats["flushes"] == 2
+    assert len(AFrame("d", "Live", session=sess)) == BASE_ROWS + PUSH_ROWS + 10
+    feed.compact()
+    assert feed.stats["compactions"] == 1
+    assert feed.stats["runs"] == 0 and feed.stats["run_rows"] == 0
+
+
+def test_compaction_policy_triggers():
+    t = wisconsin.generate(1_000, seed=1)
+    # size_ratio=0: the benchmark baseline — compact on every flush
+    sess = Session()
+    sess.create_dataset("A", t, dataverse="d")
+    feed = Feed(sess, "A", "d", flush_rows=100,
+                policy=lsm.CompactionPolicy(size_ratio=0.0))
+    rows = {k: np.asarray(v)[:100] for k, v in t.columns.items()}
+    feed.push(rows)
+    assert feed.stats["flushes"] == 1 and feed.stats["compactions"] == 1
+    assert not sess.catalog.get("d", "A").runs
+    # max_runs cap
+    sess2 = Session()
+    sess2.create_dataset("B", t, dataverse="d")
+    feed2 = Feed(sess2, "B", "d", flush_rows=10,
+                 policy=lsm.CompactionPolicy(size_ratio=100.0, max_runs=2))
+    for _ in range(3):
+        feed2.push({k: np.asarray(v)[:10] for k, v in t.columns.items()})
+    assert feed2.stats["flushes"] == 3
+    assert feed2.stats["compactions"] == 1  # third run tripped the cap
+
+
+def test_push_schema_validation():
+    sess, feed = _fed_session("gspmd", n_pushes=0)
+    t = wisconsin.generate(20, seed=0)
+    good = {k: np.asarray(v) for k, v in t.columns.items()}
+
+    bad = dict(good)
+    del bad["ten"]
+    with pytest.raises(ValueError, match="missing columns.*'ten'"):
+        feed.push(bad)
+
+    bad = dict(good)
+    bad["bogus"] = np.zeros(20, np.int32)
+    with pytest.raises(ValueError, match="unexpected columns.*'bogus'"):
+        feed.push(bad)
+
+    bad = dict(good)
+    bad["ten"] = bad["ten"][:5]
+    with pytest.raises(ValueError, match="ragged"):
+        feed.push(bad)
+
+    bad = dict(good)
+    bad["ten"] = bad["ten"].astype(np.float64)
+    with pytest.raises(ValueError, match="not safely castable"):
+        feed.push(bad)
+
+    bad = dict(good)
+    bad["stringu1"] = bad["stringu1"][:, :8]
+    with pytest.raises(ValueError, match="fixed width"):
+        feed.push(bad)
+
+    bad = dict(good)
+    bad["stringu1"] = np.zeros(20, np.int32)
+    with pytest.raises(ValueError, match="expected 2-d"):
+        feed.push(bad)
+
+    bad = dict(good)
+    bad["unique2"] = np.full(20, 2**31 + 5, dtype=np.int64)  # wraps in int32
+    with pytest.raises(ValueError, match="lossy narrowing"):
+        feed.push(bad)
+
+    assert feed.stats["ingested"] == 0  # nothing slipped through
+    # in-range int64 -> int32 narrowing round-trips and must be accepted
+    ok = dict(good)
+    ok["ten"] = ok["ten"].astype(np.int64)
+    ok["unique2"] = good["unique2"] + 50_000
+    feed.push(ok)
+    assert feed.stats["ingested"] == 20
+
+
+def test_compaction_keeps_join_guard_for_duplicated_keys():
+    """Compaction-time stat merging must not certify a key duplicated across
+    components as unique: the materializing join has to keep refusing, while
+    join COUNT stays exact (regression: distinct=sum saturating at rows)."""
+    from repro.engine.table import Table
+
+    k = np.arange(100, dtype=np.int32)
+    sess = Session()
+    sess.create_dataset("R", Table({"k": k, "v": k * 2}), dataverse="d")
+    sess.create_dataset("L", Table({"k": k.copy(), "w": k * 3}), dataverse="d")
+    feed = Feed(sess, "R", "d", flush_rows=100, policy=DEFERRED)
+    feed.push({"k": k.copy(), "v": k * 5})  # the same keys again
+    feed.compact()
+    dl = AFrame("d", "L", session=sess)
+    dr = AFrame("d", "R", session=sess)
+    with pytest.raises(NotImplementedError, match="non-unique key"):
+        dl.merge(dr, left_on="k", right_on="k").head(200)
+    assert len(dl.merge(dr, left_on="k", right_on="k")) == 200  # count path
+
+
+def test_group_domain_ignores_other_datasets_same_named_column():
+    """A join build side carrying an unrelated huge-bounded column with the
+    group key's NAME must not widen the bounded group domain (regression:
+    cross-dataset lo/hi merging exploding G)."""
+    from repro.engine.table import ColumnMeta, Table
+
+    n = 400
+    probe = Table({"key": (np.arange(n) % 50).astype(np.int32),
+                   "u": np.arange(n, dtype=np.int32)},
+                  {"key": ColumnMeta(np.dtype(np.int32), 0, 49, 50),
+                   "u": ColumnMeta(np.dtype(np.int32), 0, n - 1, n)})
+    build = Table({"u": np.arange(n, dtype=np.int32),
+                   "key": np.arange(n, dtype=np.int32) * 1_000_000},
+                  {"u": ColumnMeta(np.dtype(np.int32), 0, n - 1, n),
+                   "key": ColumnMeta(np.dtype(np.int32), 0, (n - 1) * 1_000_000, n)})
+    sess = Session()
+    sess.create_dataset("P", probe, dataverse="d")
+    sess.create_dataset("B", build, dataverse="d")
+    g = AFrame("d", "P", session=sess).merge(
+        AFrame("d", "B", session=sess), left_on="u", right_on="u") \
+        .groupby("key").agg("count")
+    assert len(np.asarray(g["key"])) == 50  # probe-side domain, not 4e8 groups
+
+
+def test_view_incremental_equals_recompute():
+    sess, feed = _fed_session("gspmd", n_pushes=0)
+    df = AFrame("d", "Live", session=sess)
+    plan = P.GroupAgg(P.Scan("Live", "d"), ["ten"], [
+        P.AggSpec("count", "count", None),
+        P.AggSpec("sum_four", "sum", "four"),
+        P.AggSpec("mean_twenty", "mean", "twenty"),
+        P.AggSpec("max_onePercent", "max", "onePercent"),
+        P.AggSpec("min_unique1", "min", "unique1"),
+    ])
+    view = sess.create_view("by_ten", plan)
+    for i in range(3):
+        extra = wisconsin.generate(PUSH_ROWS, seed=40 + i)
+        rows = {k: np.asarray(v) for k, v in extra.columns.items()}
+        rows["unique2"] = rows["unique2"] + BASE_ROWS + i * PUSH_ROWS
+        feed.push(rows)
+    got = sess.read_view("by_ten")
+    want = sess.execute(plan)
+    _assert_same(got, want, "view_vs_recompute")
+    assert view.stats["refreshes"] == 4  # seed + 3 flush deltas
+    assert view.stats["rows_applied"] == BASE_ROWS + 3 * PUSH_ROWS
+    assert view.stats["kernel_batches"] >= 1  # exactness held: kernel path
+    # compaction must not disturb the view (it is delta-maintained)
+    feed.compact()
+    _assert_same(sess.read_view("by_ten"), sess.execute(plan), "view_post_compact")
+
+
+def test_view_with_filter_predicate():
+    sess, feed = _fed_session("gspmd", n_pushes=0)
+    df = AFrame("d", "Live", session=sess)
+    plan = df[df["two"] == 1].groupby("ten").agg_plan(
+        {"four": "sum"})  # GroupAgg over Filter(Scan), via the public API
+    sess.create_view("odd_by_ten", plan)
+    extra = wisconsin.generate(PUSH_ROWS, seed=50)
+    rows = {k: np.asarray(v) for k, v in extra.columns.items()}
+    rows["unique2"] = rows["unique2"] + BASE_ROWS
+    feed.push(rows)
+    got = sess.read_view("odd_by_ten")
+    want = sess.execute(plan)
+    _assert_same(got, want, "filtered_view")
+
+
+def test_view_rejects_unsupported_plans():
+    sess, _ = _fed_session("gspmd", n_pushes=0)
+    df = AFrame("d", "Live", session=sess)
+    with pytest.raises(ValueError, match="group-by"):
+        sess.create_view("v", df._plan)  # bare scan
+    with pytest.raises(ValueError, match="group-by"):
+        sess.create_view("v", P.GroupAgg(P.Scan("Live", "d"), ["ten", "two"],
+                                         [P.AggSpec("count", "count", None)]))
+
+
+def test_view_randomized_push_sequences_match_recompute():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.engine.table import Table
+
+    batch = st.lists(st.tuples(st.integers(0, 12), st.integers(-50, 50)),
+                     min_size=1, max_size=30)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(batch, min_size=1, max_size=5), st.integers(0, 2**31 - 1))
+    def run(batches, seed):
+        rng = np.random.default_rng(seed)
+        n0 = int(rng.integers(1, 40))
+        base = {"k": rng.integers(0, 13, n0).astype(np.int32),
+                "v": rng.integers(-50, 51, n0).astype(np.int32)}
+        sess = Session()
+        sess.create_dataset("H", Table(base), dataverse="d")
+        plan = P.GroupAgg(P.Scan("H", "d"), ["k"], [
+            P.AggSpec("count", "count", None),
+            P.AggSpec("sum_v", "sum", "v"),
+            P.AggSpec("mean_v", "mean", "v"),
+            P.AggSpec("max_v", "max", "v"),
+            P.AggSpec("min_v", "min", "v")])
+        sess.create_view("hv", plan)
+        feed = Feed(sess, "H", "d", flush_rows=1,
+                    policy=lsm.CompactionPolicy(size_ratio=2.0, max_runs=3))
+        all_k = [base["k"]]
+        all_v = [base["v"]]
+        for b in batches:
+            ks = np.array([x[0] for x in b], np.int32)
+            vs = np.array([x[1] for x in b], np.int32)
+            feed.push({"k": ks, "v": vs})
+            all_k.append(ks)
+            all_v.append(vs)
+        k = np.concatenate(all_k)
+        v = np.concatenate(all_v)
+        got = sess.read_view("hv")
+        keys = np.unique(k)
+        np.testing.assert_array_equal(got["k"], keys)
+        for i, kk in enumerate(keys):
+            sel = v[k == kk]
+            assert got["count"][i] == sel.size
+            assert got["sum_v"][i] == sel.sum()
+            assert got["max_v"][i] == sel.max()
+            assert got["min_v"][i] == sel.min()
+            np.testing.assert_equal(
+                got["mean_v"][i],
+                np.float32(np.float32(sel.sum()) / np.float32(sel.size)))
+        # the engine's own recompute agrees, whatever the compaction state
+        _assert_same(got, sess.execute(plan), "hypothesis_view")
+        assert len(AFrame("d", "H", session=sess)) == k.size
+
+    run()
+
+
+def test_open_dataset_feed_roundtrip():
+    """Open (schema-on-read) datasets widen runs the same way the base was
+    widened — queries stay consistent across flush and compaction."""
+    t = wisconsin.generate(500, seed=2)
+    sess = Session()
+    sess.create_dataset("O", t, dataverse="d", closed=False)
+    feed = Feed(sess, "O", "d", flush_rows=100, policy=DEFERRED)
+    extra = wisconsin.generate(100, seed=9)
+    rows = {k: np.asarray(v) for k, v in extra.columns.items()}
+    rows["unique2"] = rows["unique2"] + 500
+    feed.push(rows)
+    df = AFrame("d", "O", session=sess)
+    before = df["four"].sum()
+    assert len(df) == 600
+    feed.compact()
+    after = AFrame("d", "O", session=sess)["four"].sum()
+    assert before == after
