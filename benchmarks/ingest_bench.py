@@ -12,6 +12,12 @@ Reported per size: sustained ingest rows/sec (wall time of push+flush+any
 compaction), the deferred/baseline speedup, and query-freshness latency
 (time to answer ``COUNT(*)`` + an indexed range count right after each
 flush — base ∪ runs, including the recompile a fresh component set forces).
+
+The deferred variant additionally runs a **query-freshness-under-selectivity
+sweep**: with N runs resident, a range predicate on the monotone ``unique2``
+key that hits exactly 1 of the N runs is answered with zone-map pruning on
+vs. off — tracking the pruning win (latency + physical rows touched + runs
+skipped) in ``results/bench/ingest.json`` across PRs.
 """
 from __future__ import annotations
 
@@ -77,7 +83,7 @@ def _run_variant(size: str, variant: str, mode: str = "gspmd") -> dict:
         freshness.append(time.perf_counter() - t0)
         assert n == base_rows + feed.stats["ingested"]
     total_rows = n_batches * batch_rows
-    return {
+    out = {
         "size": size,
         "variant": variant,
         "rows": total_rows,
@@ -90,6 +96,52 @@ def _run_variant(size: str, variant: str, mode: str = "gspmd") -> dict:
         "compactions": feed.stats["compactions"],
         "final_runs": feed.stats["runs"],
     }
+    if variant == "deferred" and feed.stats["runs"] >= 2:
+        out["prune_sweep"] = _selectivity_sweep(
+            sess, df, base_rows, n_batches, batch_rows, feed.stats["runs"])
+    return out
+
+
+def _selectivity_sweep(sess: Session, df: AFrame, base_rows: int,
+                       n_batches: int, batch_rows: int, n_runs: int,
+                       repeats: int = 5) -> dict:
+    """Selective range count hitting exactly 1 of the resident runs, with
+    zone-map pruning on vs. off (the planner's bind-time decision): reports
+    the latency and the rows-touched / runs-pruned the physical plan shows.
+    Toggling ``enable_prune`` is cache-safe — the two settings produce
+    different prune signatures, so they bind different executables."""
+    lo = base_rows + (n_batches - 1) * batch_rows  # the newest run's key span
+    hi = lo + batch_rows - 1
+    sweep: dict = {"runs_resident": n_runs}
+    for prune in (True, False):
+        sess.enable_prune = prune
+        label = "pruned" if prune else "unpruned"
+        n = len(df[(df["unique2"] >= lo) & (df["unique2"] <= hi)])  # warm/compile
+        assert n == batch_rows, (n, batch_rows)
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            len(df[(df["unique2"] >= lo) & (df["unique2"] <= hi)])
+            times.append(time.perf_counter() - t0)
+        report = sess.last_prune_report
+        sweep[label] = {
+            "query_median_s": round(float(np.median(times)), 5),
+            "rows_touched": int(report["rows_touched"]),
+            "components": int(report["components"]),
+            "runs_pruned": int(report["pruned"]),
+            "rows_pruned": int(report["rows_pruned"]),
+        }
+    sess.enable_prune = True
+    p, u = sweep["pruned"], sweep["unpruned"]
+    sweep["query_speedup"] = round(
+        u["query_median_s"] / max(p["query_median_s"], 1e-9), 2)
+    print(f"     prune sweep (1 of {n_runs} runs hit): "
+          f"{p['runs_pruned']}/{p['components']} components pruned, "
+          f"rows touched {u['rows_touched']:,} -> {p['rows_touched']:,}, "
+          f"query {u['query_median_s']*1e3:.1f} -> "
+          f"{p['query_median_s']*1e3:.1f} ms "
+          f"({sweep['query_speedup']}x)")
+    return sweep
 
 
 def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[dict]:

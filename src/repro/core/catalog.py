@@ -27,8 +27,10 @@ class IndexInfo:
     sorted_keys: Optional[object] = None
     row_ids: Optional[object] = None
     # per-ZONE_BLOCK min/max of sorted_keys, built in the same fused program
-    # as the sort. Stored per component today; wiring them into the filter
-    # kernel for block skipping is a ROADMAP item, not yet a query path.
+    # as the sort. The run-level envelope (= the column's lo/hi stats) drives
+    # query-time zone-map RUN pruning in the physical planner; feeding the
+    # per-block values into the filter kernel for intra-run block skipping is
+    # still a ROADMAP item.
     zone_min: Optional[object] = None
     zone_max: Optional[object] = None
 
@@ -39,6 +41,9 @@ class Dataset:
     dataverse: str
     table: Table
     closed: bool = True  # closed datatype == schema provided
+    # First-class, always-present index inventory (never getattr-defaulted):
+    # planner and compiler read it through core/stats.py TableStats — the one
+    # source of truth for access-path availability.
     indexes: dict[str, IndexInfo] = dataclasses.field(default_factory=dict)
     # LSM components (engine/lsm.py): each run is itself a Dataset holding a
     # device-resident flush (padded + sharded, own indexes/zone maps). Runs
@@ -69,9 +74,19 @@ class Dataset:
 class Catalog:
     def __init__(self):
         self._datasets: dict[tuple[str, str], Dataset] = {}
+        # Monotone statistics epoch: bumped on every event that changes what
+        # the catalog statistics describe (DDL, feed flush, compaction).
+        # Compiled plans are keyed by the epoch (Session's plan cache), so a
+        # stale executable can never read a dropped LSM component.
+        self.stats_epoch: int = 0
+
+    def bump_stats_epoch(self) -> int:
+        self.stats_epoch += 1
+        return self.stats_epoch
 
     def register(self, ds: Dataset) -> Dataset:
         self._datasets[(ds.dataverse, ds.name)] = ds
+        self.bump_stats_epoch()
         return ds
 
     def get(self, dataverse: str, name: str) -> Dataset:
@@ -89,7 +104,8 @@ class Catalog:
         return self._datasets[key]
 
     def drop(self, dataverse: str, name: str) -> None:
-        self._datasets.pop((dataverse, name), None)
+        if self._datasets.pop((dataverse, name), None) is not None:
+            self.bump_stats_epoch()
 
     def names(self) -> list[str]:
         return [f"{dv}.{n}" for dv, n in self._datasets]

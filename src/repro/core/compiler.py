@@ -1,23 +1,27 @@
-"""Plan compiler: optimized logical plan → one jitted SPMD program.
+"""Physical-plan compiler: costed physical plan → one jitted SPMD program.
 
 The AsterixDB analogue of "ship the SQL++ string, get an optimized Hyracks
-job": the plan lowers to a closed JAX function over (dataset columns, literal
-params) and jits once per plan *fingerprint* (literal values are runtime
-params, so the benchmark's randomized predicates reuse the executable — the
-prepared-statement effect the paper gets from AsterixDB's plan cache).
+job": the physical plan (core/physical.py, chosen by the cost-based planner
+in core/physical_planner.py) lowers to a closed JAX function over (dataset
+columns, literal params) and jits once per *physical* fingerprint — literal
+values are runtime params, so randomized predicates reuse the executable
+(the prepared-statement effect the paper gets from AsterixDB's plan cache).
 
-Three execution modes:
-  * ``gspmd``     — plain jnp ops; under jit XLA GSPMD inserts collectives.
-    This is the paper-faithful baseline ("let the optimizer/partitioner do
-    it").
-  * ``shard_map`` — the beyond-paper optimized mode: relational operators
-    from engine/distributed.py with hand-placed minimal collectives.
-  * ``kernel``    — fusable plan shapes lower onto the Pallas relational
-    kernels (kernels/ops.py backend dispatch: compiled Pallas on TPU,
-    interpret/XLA twins elsewhere). FusedRangeCount -> filter_count,
-    GroupAgg -> segment_agg, JoinCount -> merge_join_count, TopK ->
-    topk_merge; anything the kernels don't cover falls back to the
-    gspmd/shard_map lowering of the same node.
+The three execution modes are **lowering strategies**, not branches inside
+operator lowerings:
+
+  * ``gspmd``     — :class:`LoweringStrategy`: plain jnp ops; under jit XLA
+    GSPMD inserts collectives (the paper-faithful baseline).
+  * ``shard_map`` — :class:`ShardMapStrategy`: relational operators from
+    engine/distributed.py with hand-placed minimal collectives.
+  * ``kernel``    — same two strategies; what makes kernel mode different is
+    the *planner* emitting kernel physical operators (KernelRangeCount,
+    KernelSegmentAgg, kernel JoinCount, block-topk selection), which every
+    strategy knows how to launch (locally or composed via shard_map).
+
+Each ``_lower_*`` function handles exactly one physical operator and calls
+only ``ctx.strategy`` primitives — there is no ``ctx.mode`` branching inside
+lowerings.
 """
 from __future__ import annotations
 
@@ -26,13 +30,147 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import plan as P
+from repro.core import physical as PH
 from repro.core.catalog import Catalog
 from repro.core.expr import collect_params, param_values
 from repro.engine import physical
-from repro.engine.table import Table
+
+
+# -- lowering strategies ------------------------------------------------------
+
+
+class LoweringStrategy:
+    """Single-program lowering: plain jnp over (possibly sharded) arrays —
+    under jit, XLA GSPMD inserts any needed collectives."""
+
+    def __init__(self, kernel_backend: Optional[str] = None):
+        self.kernel_backend = kernel_backend
+
+    def count(self, mask):
+        return jnp.sum(mask, dtype=jnp.int32)
+
+    def agg(self, env, mask, op, column):
+        return physical.agg_scalar(env, mask, op, column)
+
+    def limit(self, env, mask, n):
+        return physical.limit(env, mask, n)
+
+    def topk(self, env, mask, key, k, ascending, select):
+        return physical.topk(env, mask, key, k, ascending, select=select)
+
+    def group_agg(self, env, mask, key, lo, num_groups, aggs):
+        return physical.group_agg(env, mask, key, lo, num_groups, aggs)
+
+    def kernel_group_agg(self, gid, values, num_groups, n, op):
+        from repro.kernels import ops
+        return ops.segment_agg(values, gid, num_groups, n, op=op,
+                               backend=self.kernel_backend)
+
+    def kernel_filter_count(self, mat, bounds):
+        from repro.kernels import ops
+        return ops.filter_count(mat, bounds, mat.shape[1],
+                                backend=self.kernel_backend)
+
+    def index_count(self, ix_keys, valid, lo, hi):
+        from repro.engine.index import index_count_local
+        nv = jnp.sum(valid, dtype=jnp.int32)
+        return index_count_local(ix_keys, nv, lo, hi)
+
+    def join_count(self, lkey, lmask, rkey, rmask, presorted):
+        if presorted:
+            # index order: valid keys ascending, padding at +inf tail
+            n_r = jnp.sum(rmask, dtype=jnp.int32)
+            lo = jnp.searchsorted(rkey, lkey, side="left")
+            hi = jnp.searchsorted(rkey, lkey, side="right")
+            hi = jnp.minimum(hi, n_r)
+            cnt = jnp.where(lmask, jnp.maximum(hi - lo, 0), 0)
+            return jnp.sum(cnt, dtype=jnp.int32)
+        return physical.join_count(lkey, lmask, rkey, rmask)
+
+    def kernel_join_count(self, lkey, lmask, rkey, rmask, presorted):
+        from repro.kernels import ops
+        ls = ops.sort_join_keys(lkey, lmask)
+        rs = ops.sort_join_keys(rkey, rmask, presorted=presorted)
+        nl = jnp.sum(lmask, dtype=jnp.int32)
+        nr = jnp.sum(rmask, dtype=jnp.int32)
+        cnt = ops.merge_join_count(ls, rs, nl, nr,
+                                   backend=self.kernel_backend)
+        return cnt.astype(jnp.int32)
+
+
+class ShardMapStrategy(LoweringStrategy):
+    """Hand-placed minimal collectives: each relational primitive runs
+    per-shard inside shard_map with an explicit psum/pmax/gather merge
+    (engine/distributed.py)."""
+
+    def __init__(self, mesh, data_axes, kernel_backend: Optional[str] = None):
+        super().__init__(kernel_backend)
+        self.mesh, self.data_axes = mesh, data_axes
+
+    def count(self, mask):
+        from repro.engine import distributed as D
+        return D.dist_count(self.mesh, self.data_axes, mask)
+
+    def agg(self, env, mask, op, column):
+        from repro.engine import distributed as D
+        if op == "count":
+            return D.dist_count(self.mesh, self.data_axes, mask)
+        return D.dist_agg(self.mesh, self.data_axes, op, env[column], mask)
+
+    def limit(self, env, mask, n):
+        from repro.engine import distributed as D
+        return D.dist_limit(self.mesh, self.data_axes, env, mask, n)
+
+    def topk(self, env, mask, key, k, ascending, select):
+        from repro.engine import distributed as D
+        return D.dist_topk(self.mesh, self.data_axes, env, mask, key, k,
+                           ascending, select=select)
+
+    def group_agg(self, env, mask, key, lo, num_groups, aggs):
+        from repro.engine import distributed as D
+        value_cols = {c: env[c] for _, _, c in aggs if c}
+        out, gmask = D.dist_group_agg(self.mesh, self.data_axes, env[key],
+                                      mask, lo, num_groups, aggs, value_cols)
+        out[key] = out.pop("__key__")
+        return out, gmask
+
+    def kernel_group_agg(self, gid, values, num_groups, n, op):
+        from repro.engine import distributed as D
+        return D.dist_kernel_group_agg(self.mesh, self.data_axes, gid, values,
+                                       num_groups, op=op,
+                                       backend=self.kernel_backend)
+
+    def kernel_filter_count(self, mat, bounds):
+        from repro.engine import distributed as D
+        return D.dist_kernel_filter_count(self.mesh, self.data_axes, mat,
+                                          bounds, backend=self.kernel_backend)
+
+    def index_count(self, ix_keys, valid, lo, hi):
+        from repro.engine import distributed as D
+        return D.dist_index_count(self.mesh, self.data_axes, ix_keys, valid,
+                                  lo, hi)
+
+    def join_count(self, lkey, lmask, rkey, rmask, presorted):
+        from repro.engine import distributed as D
+        return D.dist_join_count(self.mesh, self.data_axes, lkey, lmask,
+                                 rkey, rmask, presorted_right=presorted)
+
+    def kernel_join_count(self, lkey, lmask, rkey, rmask, presorted):
+        from repro.engine import distributed as D
+        return D.dist_kernel_join_count(self.mesh, self.data_axes, lkey,
+                                        lmask, rkey, rmask,
+                                        presorted_right=presorted,
+                                        backend=self.kernel_backend)
+
+
+def make_strategy(ctx: "ExecContext") -> LoweringStrategy:
+    """The ONLY place execution mode is consulted at lowering time: pick the
+    collective-placement strategy. Operator choice already happened in the
+    planner."""
+    if ctx.mode in ("shard_map", "kernel") and ctx.mesh is not None:
+        return ShardMapStrategy(ctx.mesh, ctx.data_axes, ctx.kernel_backend)
+    return LoweringStrategy(ctx.kernel_backend)
 
 
 @dataclasses.dataclass
@@ -42,26 +180,22 @@ class ExecContext:
     data_axes: tuple = ("data",)
     mode: str = "gspmd"         # gspmd | shard_map | kernel
     kernel_backend: Optional[str] = None  # kernels/ops dispatch: None|xla|pallas
+    strategy: Optional[LoweringStrategy] = None
 
-    @property
-    def distributed(self) -> bool:
-        # kernel mode over a mesh composes via shard_map: each shard runs the
-        # kernel locally, partials merge with the existing collectives.
-        return self.mode in ("shard_map", "kernel") and self.mesh is not None
-
-    @property
-    def use_kernels(self) -> bool:
-        return self.mode == "kernel"
+    def __post_init__(self):
+        if self.strategy is None:
+            self.strategy = make_strategy(self)
 
 
 @dataclasses.dataclass
 class CompiledQuery:
-    plan: P.Plan
-    fingerprint: str
+    plan: Any                   # the optimized *logical* plan (provenance)
+    physical: PH.PhysOp         # the costed physical plan that was lowered
+    fingerprint: str            # physical fingerprint (executable dedup key)
     kind: str                   # scalar | table | grouped
     fn: Callable                # jitted: (tables, params) -> result
-    leaf_keys: list             # dataset keys feeding `tables`
-    lits: list                  # literal slots (plan order)
+    leaf_keys: list             # dataset keys feeding `tables` (pruned runs excluded)
+    lits: list                  # literal slots (physical plan order)
     raw_fn: Callable = None     # unjitted build (jaxpr inspection in tests)
 
     def gather_tables(self, catalog: Catalog) -> dict:
@@ -69,8 +203,8 @@ class CompiledQuery:
         for key in self.leaf_keys:
             ds = catalog.get(*key)
             tables[f"{key[0]}.{key[1]}"] = dict(ds.table.columns)
-            for ixname, ix in getattr(ds, "indexes", {}).items():
-                if getattr(ix, "sorted_keys", None) is not None:
+            for ix in ds.indexes.values():
+                if ix.sorted_keys is not None:
                     tables[f"{key[0]}.{key[1]}"][f"__ix_{ix.column}__"] = ix.sorted_keys
                     tables[f"{key[0]}.{key[1]}"][f"__ixid_{ix.column}__"] = ix.row_ids
         return tables
@@ -86,57 +220,67 @@ class CompiledQuery:
         return self.fn(self.gather_tables(catalog), params)
 
 
-def _scan_leaves(plan: P.Plan) -> list[tuple[str, str]]:
-    keys = []
-    for node in P.walk(plan):
-        if isinstance(node, (P.Scan, P.IndexRangeScan)):
-            k = (node.dataverse, node.dataset)
-            if k not in keys:
-                keys.append(k)
-    return keys
-
-
-def compile_plan(plan: P.Plan, ctx: ExecContext) -> CompiledQuery:
-    leaf_keys = _scan_leaves(plan)
-    lits = collect_params(P.all_exprs(plan))
-    kind, build = _lower_terminal(plan, ctx)
+def compile_physical(logical, phys: PH.PhysOp, ctx: ExecContext) -> CompiledQuery:
+    """Lower one physical plan into a jitted executable."""
+    leaf_keys = PH.scan_leaves(phys)
+    lits = collect_params(PH.all_exprs(phys))
+    kind, build = _lower_terminal(phys, ctx)
     jitted = jax.jit(build)
-    return CompiledQuery(plan, plan.fingerprint(), kind, jitted, leaf_keys, lits,
-                         raw_fn=build)
+    return CompiledQuery(logical, phys, phys.fingerprint(), kind, jitted,
+                         leaf_keys, lits, raw_fn=build)
+
+
+def compile_plan(opt_plan, ctx: ExecContext, *, enable_index: bool = True,
+                 enable_prune: bool = True) -> CompiledQuery:
+    """Convenience one-shot path (``Session.persist``, tests): cost-plan the
+    optimized logical plan — pruning decided from its own literal values —
+    then lower. The knobs mirror the Session's planner settings."""
+    from repro.core.expr import ordered_lits
+    from repro.core.physical_planner import (NO_PRUNE, build_pruner,
+                                             plan_physical)
+    from repro.core import plan as P
+
+    raw_lits = ordered_lits(P.all_exprs(opt_plan))
+    decisions = NO_PRUNE
+    if enable_prune:
+        pruner = build_pruner(opt_plan, ctx.catalog, raw_lits)
+        decisions = pruner.decide([l.value for l in raw_lits])
+    phys = plan_physical(opt_plan, ctx.catalog, mode=ctx.mode,
+                         decisions=decisions, enable_index=enable_index)
+    return compile_physical(opt_plan, phys, ctx)
 
 
 # -- streaming lowering -------------------------------------------------------
 
 
-def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
+def _env_of(cols: dict, open_cast: bool):
+    env = {k: v for k, v in cols.items()
+           if k != "__valid__" and not k.startswith("__ix")}
+    if open_cast:  # schema-on-read: pay a widen/cast per access
+        env = {k: (v.astype(jnp.float32) if jnp.issubdtype(v.dtype, jnp.integer)
+                   and v.ndim == 1 else v) for k, v in env.items()}
+    mask = cols.get("__valid__",
+                    jnp.ones((next(iter(env.values())).shape[0],), jnp.bool_))
+    return env, mask
+
+
+def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
     """Returns fn(tables, params) -> (env, mask). Filters never compact
     (selection-vector execution; DESIGN.md §2)."""
-    if isinstance(node, P.Scan):
+    if isinstance(node, PH.TableScan):
         key = f"{node.dataverse}.{node.dataset}"
-        ds = ctx.catalog.get(node.dataverse, node.dataset)
-        open_cast = not ds.closed
+        open_cast = node.open_cast
 
         def fn(tables, params):
-            cols = tables[key]
-            env = {k: v for k, v in cols.items()
-                   if k != "__valid__" and not k.startswith("__ix")}
-            if open_cast:  # schema-on-read: pay a widen/cast per access
-                env = {k: (v.astype(jnp.float32) if jnp.issubdtype(v.dtype, jnp.integer)
-                           and v.ndim == 1 else v) for k, v in env.items()}
-            mask = cols.get("__valid__",
-                            jnp.ones((next(iter(env.values())).shape[0],), jnp.bool_))
-            return env, mask
+            return _env_of(tables[key], open_cast)
         return fn
 
-    if isinstance(node, P.IndexRangeScan):
+    if isinstance(node, PH.IndexProbe):
         key = f"{node.dataverse}.{node.dataset}"
+        open_cast = node.open_cast
 
         def fn(tables, params):
-            cols = tables[key]
-            env = {k: v for k, v in cols.items()
-                   if k != "__valid__" and not k.startswith("__ix")}
-            mask = cols.get("__valid__",
-                            jnp.ones((next(iter(env.values())).shape[0],), jnp.bool_))
+            env, mask = _env_of(tables[key], open_cast)
             keys_col = env[node.index_col]
             lo = node.lo.evaluate(env, params) if node.lo is not None else None
             hi = node.hi.evaluate(env, params) if node.hi is not None else None
@@ -146,8 +290,10 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
             return env, mask
         return fn
 
-    if isinstance(node, P.UnionRuns):
+    if isinstance(node, PH.PrunedUnionRuns):
         kids = [_lower_stream(c, ctx) for c in node.children]
+        if len(kids) == 1:
+            return kids[0]
 
         def fn(tables, params):
             envs, masks = [], []
@@ -161,7 +307,7 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
             return env, jnp.concatenate(masks, axis=0)
         return fn
 
-    if isinstance(node, P.Filter):
+    if isinstance(node, PH.FullScanFilter):
         child = _lower_stream(node.children[0], ctx)
 
         def fn(tables, params):
@@ -169,7 +315,7 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
             return env, mask & node.predicate.evaluate(env, params)
         return fn
 
-    if isinstance(node, P.Project):
+    if isinstance(node, PH.ProjectCols):
         child = _lower_stream(node.children[0], ctx)
         outputs = node.outputs
 
@@ -178,36 +324,28 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
             return {name: e.evaluate(env, params) for name, e in outputs}, mask
         return fn
 
-    if isinstance(node, P.Limit):
+    if isinstance(node, PH.LimitRows):
         child = _lower_stream(node.children[0], ctx)
 
         def fn(tables, params):
             env, mask = child(tables, params)
-            if ctx.distributed:
-                from repro.engine import distributed as D
-                return D.dist_limit(ctx.mesh, ctx.data_axes, env, mask, node.n)
-            return physical.limit(env, mask, node.n)
+            return ctx.strategy.limit(env, mask, node.n)
         return fn
 
-    if isinstance(node, P.TopK):
+    if isinstance(node, PH.TopKSelect):
         child = _lower_stream(node.children[0], ctx)
-        # one lowering, parameterized by the selection primitive: kernel mode
+        # one lowering, parameterized by the selection primitive: the planner
         # swaps in the block_topk Pallas kernel, everything else is shared.
         select = physical.kernel_topk_select(ctx.kernel_backend) \
-            if ctx.use_kernels else physical._select_topk
+            if node.kernel else physical._select_topk
 
         def fn(tables, params):
             env, mask = child(tables, params)
-            if ctx.distributed:
-                from repro.engine import distributed as D
-                return D.dist_topk(ctx.mesh, ctx.data_axes, env, mask,
-                                   node.key, node.k, node.ascending,
-                                   select=select)
-            return physical.topk(env, mask, node.key, node.k, node.ascending,
-                                 select=select)
+            return ctx.strategy.topk(env, mask, node.key, node.k,
+                                     node.ascending, select)
         return fn
 
-    if isinstance(node, P.Sort):
+    if isinstance(node, PH.SortRows):
         child = _lower_stream(node.children[0], ctx)
 
         def fn(tables, params):
@@ -215,59 +353,20 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
             return physical.sort_full(env, mask, node.key, node.ascending)
         return fn
 
-    if isinstance(node, P.GroupAgg):
-        return _lower_groupagg(node, ctx)
+    if isinstance(node, PH.WindowEval):
+        from repro.core.window import execute_window
 
-    from repro.core.window import Window, execute_window
-
-    if isinstance(node, Window):
         child = _lower_stream(node.children[0], ctx)
 
         def fn(tables, params):
             env, mask = child(tables, params)
-            return execute_window(env, mask, node)
+            return execute_window(env, mask, node.window)
         return fn
 
-    if isinstance(node, P.Join):
+    if isinstance(node, PH.JoinGather):
+        # build-key uniqueness/disjointness was proven by the planner
         lchild = _lower_stream(node.children[0], ctx)
         rchild = _lower_stream(node.children[1], ctx)
-        # materializing joins require unique build keys (static shapes:
-        # each probe row gathers ≤1 match). Catch violations via stats; a
-        # fed build side contributes base + runs, so every component must be
-        # internally unique AND the component key ranges pairwise disjoint.
-        scans = [l for l in P.walk(node.children[1]) if isinstance(l, P.Scan)]
-        if scans:
-            first = scans[0].dataset.split("@")[0]
-            comps = [l for l in scans if l.dataverse == scans[0].dataverse
-                     and l.dataset.split("@")[0] == first]
-            ranges = []
-            for leaf in comps:
-                ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
-                meta = ds.table.meta.get(node.right_on)
-                if meta is None:
-                    continue
-                if meta.distinct is not None and meta.distinct < ds.num_live_rows:
-                    raise NotImplementedError(
-                        f"materializing join on non-unique key "
-                        f"{node.right_on!r} (distinct={meta.distinct} < "
-                        f"rows={ds.num_live_rows}); COUNT over such joins is "
-                        "supported (join-count path)")
-                if meta.lo is not None:
-                    ranges.append((meta.lo, meta.hi))
-            if len(comps) > 1:
-                if len(ranges) < len(comps):
-                    raise NotImplementedError(
-                        f"materializing join against a fed dataset needs "
-                        f"key bounds on {node.right_on!r} to prove the LSM "
-                        "components disjoint")
-                for i, (lo_a, hi_a) in enumerate(ranges):
-                    for lo_b, hi_b in ranges[i + 1:]:
-                        if lo_a <= hi_b and lo_b <= hi_a:
-                            raise NotImplementedError(
-                                f"materializing join key {node.right_on!r} "
-                                "may repeat across LSM components "
-                                f"(overlapping bounds); compact first or "
-                                "use COUNT (join-count path)")
 
         def fn(tables, params):
             lenv, lm = lchild(tables, params)
@@ -276,173 +375,37 @@ def _lower_stream(node: P.Plan, ctx: ExecContext) -> Callable:
                                              node.left_on, node.right_on)
         return fn
 
+    if isinstance(node, (PH.GroupAggGeneric, PH.KernelSegmentAgg)):
+        return _lower_groupagg(node, ctx)
+
     raise NotImplementedError(f"stream lowering for {type(node).__name__}")
 
 
-def _group_domain(node: P.GroupAgg, ctx: ExecContext):
-    """Resolve (lo, num_groups) for the bounded-domain group-by from leaf
-    dataset column statistics (the DBMS catalog stats analogue). Bounds merge
-    across the LSM components (base + runs) of the FIRST dataset that carries
-    them: a run whose delta extends the key domain widens the group table
-    (extra all-zero groups are masked out at materialization, so widening
-    never changes results). Leaves of OTHER datasets — a join's build side
-    whose same-named column loses name resolution anyway — must not widen
-    the domain (an unrelated huge-bounded column would explode G)."""
-    key = node.keys[0]
-    lo = hi = family = None
-    for leaf in P.walk(node):
-        if isinstance(leaf, P.Scan):
-            ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
-            meta = ds.table.meta.get(key)
-            if meta is None or meta.lo is None or meta.hi is None:
-                continue
-            fam = (leaf.dataverse, leaf.dataset.split("@")[0])
-            if family is None:
-                family = fam
-            elif fam != family:
-                continue
-            lo = meta.lo if lo is None else min(lo, meta.lo)
-            hi = meta.hi if hi is None else max(hi, meta.hi)
-    if lo is not None:
-        return int(lo), int(hi - lo + 1)
-    raise ValueError(
-        f"group key {key!r} has no domain statistics; bounded-domain group-by "
-        "requires catalog lo/hi (Wisconsin columns carry them)")
-
-
-def _lower_groupagg(node: P.GroupAgg, ctx: ExecContext) -> Callable:
-    assert len(node.keys) == 1, "single-key group-by (paper expressions 4/8)"
-    key = node.keys[0]
-    lo, num_groups = _group_domain(node, ctx)
-    child_node = node.children[0]
+def _lower_groupagg(node, ctx: ExecContext) -> Callable:
     aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
+    if isinstance(node, PH.KernelSegmentAgg):
+        comps = [_lower_stream(c, ctx) for c in node.children]
+        return _lower_kernel_segment_agg(node, ctx, comps, aggs)
 
-    # kernel mode: count/sum/mean all reduce to one segment-sum, so every
-    # AggSpec fuses into a single (BLOCK, C) value tile — one one-hot-matmul
-    # kernel launch per grid step (col 0 counts, cols 1.. sum the value
-    # columns); max/min add one select-and-reduce launch each. The kernels
-    # compute in f32 — fusion requires a static proof of exactness (catalog
-    # bounds) or the generic native-dtype path keeps the
-    # bit-identical-to-gspmd contract. Over an LSM union each component gets
-    # its own kernel launches; partials merge with +/max/min (the same shape
-    # a psum merge has across shards).
-    if ctx.use_kernels \
-            and all(op in ("count", "sum", "mean", "max", "min")
-                    for _, op, _ in aggs) \
-            and _kernel_groupagg_exact(node, ctx, aggs):
-        if isinstance(child_node, P.UnionRuns):
-            comps = [_lower_stream(c, ctx) for c in child_node.children]
-        else:
-            comps = [_lower_stream(child_node, ctx)]
-        return _lower_groupagg_kernel(node, ctx, key, lo, num_groups, comps, aggs)
-
-    child = _lower_stream(child_node, ctx)
+    child = _lower_stream(node.children[0], ctx)
+    key, lo, num_groups = node.key, node.lo, node.num_groups
 
     def fn(tables, params):
         env, mask = child(tables, params)
-        if ctx.distributed:
-            from repro.engine import distributed as D
-            value_cols = {c: env[c] for _, _, c in aggs if c}
-            out, gmask = D.dist_group_agg(ctx.mesh, ctx.data_axes, env[key], mask,
-                                          lo, num_groups, aggs, value_cols)
-            out[key] = out.pop("__key__")
-            return out, gmask
-        out, gmask = physical.group_agg(env, mask, key, lo, num_groups, aggs)
-        return out, gmask
+        return ctx.strategy.group_agg(env, mask, key, lo, num_groups, aggs)
     return fn
 
 
-_F32_EXACT = 1 << 24  # every int in [-2^24, 2^24] is exactly representable
-
-
-def _kernel_groupagg_exact(node: P.GroupAgg, ctx: ExecContext, aggs: list) -> bool:
-    """The segment_agg kernel computes in float32. That is bit-identical to
-    the generic path only when every per-group result is an
-    exactly-representable integer: counts need n < 2^24; sum/mean need an
-    integer value column whose catalog bounds prove n * max|value| < 2^24;
-    max/min only need the values themselves representable (|value| < 2^24 —
-    no accumulation).
-
-    The bound must come from the table the column ACTUALLY originates from:
-    `_trace_col` follows Project renames, join name-resolution, and LSM
-    unions down to leaves; untraceable provenance (computed expressions,
-    suffixed join collisions) refuses fusion — refusal is always safe. n is
-    the SUM of leaf row counts, an upper bound on any stream length (a union
-    concatenates its components, joins emit the probe side's length,
-    filters/limits only shrink)."""
-    tables = [ctx.catalog.get(l.dataverse, l.dataset).table
-              for l in P.walk(node) if isinstance(l, P.Scan)]
-    if not tables:
-        return False
-    n = sum(len(t) for t in tables)
-    if n >= _F32_EXACT:
-        return False
-    for _, op, col in aggs:
-        if op == "count":
-            continue
-        m = _trace_col(node.children[0], col, ctx)
-        if m is None or m.is_string or not np.issubdtype(m.dtype, np.integer):
-            return False
-        if m.lo is None or m.hi is None:
-            return False
-        maxabs = max(abs(int(m.lo)), abs(int(m.hi)))
-        bound = maxabs if op in ("max", "min") else n * maxabs
-        if bound >= _F32_EXACT:
-            return False
-    return True
-
-
-def _trace_col(node: P.Plan, col: str, ctx: ExecContext):
-    """Resolve the ColumnMeta a stream column name originates from, following
-    Project renames and join name-resolution; None when provenance cannot be
-    established (computed expressions, suffixed join collisions)."""
-    from repro.core.expr import Col
-    from repro.core.window import Window
-
-    if isinstance(node, Window) and col == node.out_name:
-        return None  # computed analytic column, no catalog bounds
-    if isinstance(node, (P.Scan, P.IndexRangeScan)):
-        t = ctx.catalog.get(node.dataverse, node.dataset).table
-        return t.meta.get(col)
-    if isinstance(node, P.Project):
-        for name, e in node.outputs:
-            if name == col:
-                if isinstance(e, Col):
-                    return _trace_col(node.children[0], e.name, ctx)
-                return None
-        return None
-    if isinstance(node, P.UnionRuns):
-        # every component must prove the column; the union's bound is the
-        # envelope of the per-component bounds (runs may extend the domain).
-        metas = [_trace_col(c, col, ctx) for c in node.children]
-        if any(m is None or m.lo is None or m.hi is None for m in metas):
-            return None
-        from repro.engine.table import ColumnMeta
-        return ColumnMeta(metas[0].dtype,
-                          min(m.lo for m in metas), max(m.hi for m in metas),
-                          sum(m.distinct or 0 for m in metas) or None,
-                          any(m.is_string for m in metas), False)
-    if isinstance(node, P.Join):
-        # join_materialize: the left side wins a bare name; right-only names
-        # pass through; a collision suffixes the right column (untraceable by
-        # its stream name, so it resolves to None here).
-        left_meta = _trace_col(node.children[0], col, ctx)
-        if left_meta is not None:
-            return left_meta
-        return _trace_col(node.children[1], col, ctx)
-    if len(node.children) == 1:  # filter/limit/sort/window pass columns through
-        return _trace_col(node.children[0], col, ctx)
-    return None
-
-
-def _lower_groupagg_kernel(node: P.GroupAgg, ctx: ExecContext, key: str,
-                           lo: int, num_groups: int, comps: list,
-                           aggs: list) -> Callable:
-    """``comps``: one lowered stream per LSM component (a single entry for a
-    plain dataset). Each component runs its own kernel launches — one fused
+def _lower_kernel_segment_agg(node: PH.KernelSegmentAgg, ctx: ExecContext,
+                              comps: list, aggs: list) -> Callable:
+    """One lowered stream per LSM component (a single entry for a plain
+    dataset). Each component runs its own kernel launches — one fused
     one-hot-matmul for the sum family, one select-and-reduce per extreme
     family — and the (G, C) partials merge with +/max/min, exactly the merge
-    a compaction-time recompute would produce."""
+    a compaction-time recompute would produce. The planner proved f32
+    exactness; count/sum/mean fuse into a single (BLOCK, C) value tile
+    (col 0 counts, cols 1.. sum the value columns)."""
+    key, lo, num_groups = node.key, node.lo, node.num_groups
     vcols: list[str] = []   # distinct sum-family value columns, first-use order
     xcols: dict[str, list[str]] = {"max": [], "min": []}
     for _, op, col in aggs:
@@ -453,14 +416,7 @@ def _lower_groupagg_kernel(node: P.GroupAgg, ctx: ExecContext, key: str,
 
     def launch(gid, cols_f32, n, op):
         values = jnp.stack(cols_f32, axis=1)  # (n, C)
-        if ctx.distributed:
-            from repro.engine import distributed as D
-            return D.dist_kernel_group_agg(ctx.mesh, ctx.data_axes, gid, values,
-                                           num_groups, op=op,
-                                           backend=ctx.kernel_backend)
-        from repro.kernels import ops
-        return ops.segment_agg(values, gid, num_groups, n, op=op,
-                               backend=ctx.kernel_backend)
+        return ctx.strategy.kernel_group_agg(gid, values, num_groups, n, op)
 
     def fn(tables, params):
         sums = maxs = mins = None
@@ -503,20 +459,22 @@ def _lower_groupagg_kernel(node: P.GroupAgg, ctx: ExecContext, key: str,
     return fn
 
 
-# -- terminal lowering -----------------------------------------------------------
+# -- terminal lowering --------------------------------------------------------
 
 
-def _lower_terminal(plan: P.Plan, ctx: ExecContext) -> tuple[str, Callable]:
-    if isinstance(plan, P.UnionScalar):
+def _lower_terminal(node: PH.PhysOp, ctx: ExecContext) -> tuple[str, Callable]:
+    if isinstance(node, PH.MergeScalars):
         # per-LSM-component scalar programs (each with its own access path:
         # index-only count, fused range-count kernel, generic mask) merged
-        # with +/max/min — the cross-component analogue of a psum.
+        # with +/max/min — the cross-component analogue of a psum. Pruned
+        # runs were dropped by the planner: they never compile, gather, or
+        # launch.
         subs = []
-        for c in plan.children:
+        for c in node.children:
             kind, build = _lower_terminal(c, ctx)
-            assert kind == "scalar", f"UnionScalar over {kind} child"
+            assert kind == "scalar", f"MergeScalars over {kind} child"
             subs.append(build)
-        merges = plan.merges
+        merges = node.merges
         combine = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
 
         def fn(tables, params):
@@ -528,64 +486,51 @@ def _lower_terminal(plan: P.Plan, ctx: ExecContext) -> tuple[str, Callable]:
             return res
         return "scalar", fn
 
-    if isinstance(plan, P.FusedRangeCount):
-        return "scalar", _lower_fused_range_count(plan, ctx)
+    if isinstance(node, PH.KernelRangeCount):
+        return "scalar", _lower_kernel_range_count(node, ctx)
 
-    if isinstance(plan, P.FilterCount):
-        return "scalar", _lower_filter_count(plan, ctx)
+    if isinstance(node, PH.IndexOnlyCount):
+        return "scalar", _lower_index_only_count(node, ctx)
 
-    if isinstance(plan, P.JoinCount):
-        return "scalar", _lower_join_count(plan, ctx)
-
-    if isinstance(plan, P.Agg):
-        # COUNT over a Join must use the duplicate-correct join-count path
-        # even when the optimizer was disabled (semantics ≠ optimization).
-        if len(plan.aggs) == 1 and plan.aggs[0].op == "count" \
-                and isinstance(plan.children[0], P.Join):
-            j = plan.children[0]
-            return "scalar", _lower_join_count(
-                P.JoinCount(j.children[0], j.children[1], j.left_on, j.right_on),
-                ctx)
-        child = _lower_stream(plan.children[0], ctx)
-        aggs = [(s.out_name, s.op, s.column) for s in plan.aggs]
+    if isinstance(node, PH.MaskCount):
+        child = _lower_stream(node.children[0], ctx)
+        pred = node.predicate
 
         def fn(tables, params):
             env, mask = child(tables, params)
-            out = {}
-            for name, op, col in aggs:
-                if ctx.distributed and op != "count":
-                    from repro.engine import distributed as D
-                    out[name] = D.dist_agg(ctx.mesh, ctx.data_axes, op, env[col], mask)
-                elif ctx.distributed:
-                    from repro.engine import distributed as D
-                    out[name] = D.dist_count(ctx.mesh, ctx.data_axes, mask)
-                else:
-                    out[name] = physical.agg_scalar(env, mask, op, col)
-            return out
+            if pred is not None:
+                mask = mask & pred.evaluate(env, params)
+            return {"count": ctx.strategy.count(mask)}
         return "scalar", fn
 
-    if isinstance(plan, P.GroupAgg):
-        return "grouped", _lower_groupagg(plan, ctx)
+    if isinstance(node, PH.JoinCountOp):
+        return "scalar", _lower_join_count(node, ctx)
+
+    if isinstance(node, PH.ScalarAgg):
+        child = _lower_stream(node.children[0], ctx)
+        aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            return {name: ctx.strategy.agg(env, mask, op, col)
+                    for name, op, col in aggs}
+        return "scalar", fn
+
+    if isinstance(node, (PH.GroupAggGeneric, PH.KernelSegmentAgg)):
+        return "grouped", _lower_groupagg(node, ctx)
 
     # table-producing terminals
-    stream = _lower_stream(plan, ctx)
-    return "table", stream
+    return "table", _lower_stream(node, ctx)
 
 
-def _lower_fused_range_count(plan: P.FusedRangeCount, ctx: ExecContext) -> Callable:
+def _lower_kernel_range_count(node: PH.KernelRangeCount, ctx: ExecContext) -> Callable:
     """Lower onto the filter_count kernel: one (k, n) int32 tile of predicate
     columns + a (k, 2) runtime bounds operand. The column read bypasses the
     generic stream path so NO row mask is ever built outside the kernel —
     when the base table carries a ``__valid__`` padding column it folds in as
     one extra kernel row with bounds (1, 1)."""
-    leaf = plan.children[0]
-    if isinstance(leaf, P.Project):  # projection pushdown wraps the Scan
-        leaf = leaf.children[0]
-    assert isinstance(leaf, P.Scan), "FusedRangeCount lowers over a Scan leaf"
-    key = f"{leaf.dataverse}.{leaf.dataset}"
-    ds = ctx.catalog.get(leaf.dataverse, leaf.dataset)
-    has_valid = "__valid__" in ds.table.columns
-    cols, los, his = plan.cols, plan.los, plan.his
+    key = f"{node.dataverse}.{node.dataset}"
+    cols, los, his, has_valid = node.cols, node.los, node.his, node.has_valid
 
     def fn(tables, params):
         t = tables[key]
@@ -598,139 +543,41 @@ def _lower_fused_range_count(plan: P.FusedRangeCount, ctx: ExecContext) -> Calla
             hi_vals.append(jnp.int32(1))
         mat = jnp.stack(rows)
         bounds = jnp.stack([jnp.stack(lo_vals), jnp.stack(hi_vals)], axis=1)
-        if ctx.distributed:
-            from repro.engine import distributed as D
-            cnt = D.dist_kernel_filter_count(ctx.mesh, ctx.data_axes, mat, bounds,
-                                             backend=ctx.kernel_backend)
-        else:
-            from repro.kernels import ops
-            cnt = ops.filter_count(mat, bounds, mat.shape[1],
-                                   backend=ctx.kernel_backend)
+        cnt = ctx.strategy.kernel_filter_count(mat, bounds)
         return {"count": cnt.astype(jnp.int32)}
     return fn
 
 
-def _lower_filter_count(plan: P.FilterCount, ctx: ExecContext) -> Callable:
-    child_node = plan.children[0]
-
-    # index-only count: FilterCount(IndexRangeScan, residual-free)
-    if isinstance(child_node, P.IndexRangeScan) and child_node.residual is None \
-            and plan.predicate is None:
-        node = child_node
-        key = f"{node.dataverse}.{node.dataset}"
-
-        def fn(tables, params):
-            cols = tables[key]
-            ix_keys = cols[f"__ix_{node.index_col}__"]
-            valid = cols.get("__valid__",
-                             jnp.ones((ix_keys.shape[0],), jnp.bool_))
-            lo = node.lo.evaluate({}, params) if node.lo is not None else None
-            hi = node.hi.evaluate({}, params) if node.hi is not None else None
-            if ctx.distributed:
-                from repro.engine import distributed as D
-                return {"count": D.dist_index_count(ctx.mesh, ctx.data_axes,
-                                                    ix_keys, valid, lo, hi)}
-            from repro.engine.index import index_count_local
-            nv = jnp.sum(valid, dtype=jnp.int32)
-            return {"count": index_count_local(ix_keys, nv, lo, hi)}
-        return fn
-
-    child = _lower_stream(child_node, ctx)
-    pred = plan.predicate
+def _lower_index_only_count(node: PH.IndexOnlyCount, ctx: ExecContext) -> Callable:
+    key = f"{node.dataverse}.{node.dataset}"
 
     def fn(tables, params):
-        env, mask = child(tables, params)
-        if pred is not None:
-            mask = mask & pred.evaluate(env, params)
-        if ctx.distributed:
-            from repro.engine import distributed as D
-            return {"count": D.dist_count(ctx.mesh, ctx.data_axes, mask)}
-        return {"count": jnp.sum(mask, dtype=jnp.int32)}
+        cols = tables[key]
+        ix_keys = cols[f"__ix_{node.index_col}__"]
+        valid = cols.get("__valid__",
+                         jnp.ones((ix_keys.shape[0],), jnp.bool_))
+        lo = node.lo.evaluate({}, params) if node.lo is not None else None
+        hi = node.hi.evaluate({}, params) if node.hi is not None else None
+        return {"count": ctx.strategy.index_count(ix_keys, valid, lo, hi)}
     return fn
 
 
-def _join_key_int32_safe(side: P.Plan, col: str, ctx: ExecContext) -> bool:
-    """True when catalog bounds prove the join key column casts to int32
-    losslessly (the merge_join kernel's tile dtype). Every leaf that carries
-    the column must pass — an LSM run can extend the base's domain."""
-    i32 = np.iinfo(np.int32)
-    metas = []
-    for leaf in P.walk(side):
-        if isinstance(leaf, P.Scan):
-            m = ctx.catalog.get(leaf.dataverse, leaf.dataset).table.meta.get(col)
-            if m is not None:
-                metas.append(m)
-    if not metas:
-        return False
-    for m in metas:
-        if m.is_string or not np.issubdtype(m.dtype, np.integer):
-            return False
-        if m.lo is None or m.hi is None or m.lo < i32.min or m.hi > i32.max:
-            return False
-    return True
+def _lower_join_count(node: PH.JoinCountOp, ctx: ExecContext) -> Callable:
+    lchild = _lower_stream(node.children[0], ctx)
+    rchild = _lower_stream(node.children[1], ctx)
+    left_on, right_on = node.left_on, node.right_on
+    presorted = node.presorted
+    if presorted:
+        rkey_table = f"{node.presorted_key[0]}.{node.presorted_key[1]}"
+        rkey_name = f"__ix_{right_on}__"
 
-
-def _lower_join_count(plan: P.JoinCount, ctx: ExecContext) -> Callable:
-    lchild = _lower_stream(plan.children[0], ctx)
-    rchild = _lower_stream(plan.children[1], ctx)
-    left_on, right_on = plan.left_on, plan.right_on
-
-    # presorted build side when the right leaf has an index on the join key
-    presorted = False
-    rleaf = plan.children[1]
-    if isinstance(rleaf, P.Scan):
-        ds = ctx.catalog.get(rleaf.dataverse, rleaf.dataset)
-        presorted = ds.index_on(right_on) is not None
-    rkey_name = f"__ix_{right_on}__" if presorted else right_on
-
-    # the merge_join kernel works on int32 tiles: both key columns need
-    # catalog bounds proving a lossless cast, else the generic native-dtype
-    # path keeps the counts exact (wider-int values would wrap silently).
-    if ctx.use_kernels and _join_key_int32_safe(plan.children[0], left_on, ctx) \
-            and _join_key_int32_safe(plan.children[1], right_on, ctx):
-        def fn(tables, params):
-            lenv, lm = lchild(tables, params)
-            renv, rm = rchild(tables, params)
-            if presorted:
-                rkey = tables[f"{rleaf.dataverse}.{rleaf.dataset}"][rkey_name]
-            else:
-                rkey = renv[right_on]
-            if ctx.distributed:
-                from repro.engine import distributed as D
-                cnt = D.dist_kernel_join_count(ctx.mesh, ctx.data_axes,
-                                               lenv[left_on], lm, rkey, rm,
-                                               presorted_right=presorted,
-                                               backend=ctx.kernel_backend)
-                return {"count": cnt}
-            from repro.kernels import ops
-            ls = ops.sort_join_keys(lenv[left_on], lm)
-            rs = ops.sort_join_keys(rkey, rm, presorted=presorted)
-            nl = jnp.sum(lm, dtype=jnp.int32)
-            nr = jnp.sum(rm, dtype=jnp.int32)
-            cnt = ops.merge_join_count(ls, rs, nl, nr, backend=ctx.kernel_backend)
-            return {"count": cnt.astype(jnp.int32)}
-        return fn
+    join = ctx.strategy.kernel_join_count if node.kernel \
+        else ctx.strategy.join_count
 
     def fn(tables, params):
         lenv, lm = lchild(tables, params)
         renv, rm = rchild(tables, params)
-        if presorted:
-            rleaf_key = f"{rleaf.dataverse}.{rleaf.dataset}"
-            rkey = tables[rleaf_key][rkey_name]
-        else:
-            rkey = renv[right_on]
-        if ctx.distributed:
-            from repro.engine import distributed as D
-            return {"count": D.dist_join_count(ctx.mesh, ctx.data_axes,
-                                               lenv[left_on], lm, rkey, rm,
-                                               presorted_right=presorted)}
-        if presorted:
-            # index order: valid keys ascending, padding at +inf tail
-            n_r = jnp.sum(rm, dtype=jnp.int32)
-            lo = jnp.searchsorted(rkey, lenv[left_on], side="left")
-            hi = jnp.searchsorted(rkey, lenv[left_on], side="right")
-            hi = jnp.minimum(hi, n_r)
-            cnt = jnp.where(lm, jnp.maximum(hi - lo, 0), 0)
-            return {"count": jnp.sum(cnt, dtype=jnp.int32)}
-        return {"count": physical.join_count(lenv[left_on], lm, rkey, rm)}
+        rkey = tables[rkey_table][rkey_name] if presorted else renv[right_on]
+        cnt = join(lenv[left_on], lm, rkey, rm, presorted)
+        return {"count": cnt}
     return fn

@@ -69,16 +69,6 @@ def _pg_table(dataverse: str, dataset: str) -> str:
 def _pg_plan(node: P.Plan) -> str:
     if isinstance(node, P.Scan):
         return f"SELECT t.* FROM {_pg_table(node.dataverse, node.dataset)} t"
-    if isinstance(node, P.IndexRangeScan):
-        parts = []
-        if node.lo is not None:
-            parts.append(f"t.{node.index_col} >= {_pg_expr(node.lo)}")
-        if node.hi is not None:
-            parts.append(f"t.{node.index_col} <= {_pg_expr(node.hi)}")
-        if node.residual is not None:
-            parts.append(_pg_expr(node.residual))
-        return (f"SELECT t.* FROM {_pg_table(node.dataverse, node.dataset)} t "
-                f"WHERE {' AND '.join(parts)}")
     if isinstance(node, P.Filter):
         return (f"SELECT t.* FROM ({_pg_plan(node.children[0])}) t "
                 f"WHERE {_pg_expr(node.predicate)}")

@@ -195,9 +195,10 @@ class AFrame:
         return render(self._plan, dialect)
 
     def explain(self) -> str:
-        from repro.core.optimizer import optimize
-        opt = optimize(self._plan, self._session.catalog)
-        return opt.fingerprint()
+        """The costed physical plan: per-operator cost estimates, the access
+        path the planner chose over its alternatives, and — over a fed
+        dataset — which LSM runs the zone maps pruned and why."""
+        return self._session.explain(self._plan)
 
     def _project_plan(self, outputs) -> P.Plan:
         return P.Project(self._plan, outputs)

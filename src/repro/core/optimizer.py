@@ -1,4 +1,7 @@
-"""Rule-based logical optimizer — the AsterixDB query-optimizer analogue.
+"""Rule-based *logical* optimizer — the rewrite half of AsterixDB's
+rule+cost compiler. (The cost half — index probe vs. full scan vs. Pallas
+kernel, zone-map run pruning — lives in core/physical_planner.py: this
+module decides *what* to compute, never *how*.)
 
 Rules (each is a bottom-up rewrite; applied to fixpoint):
   1. ``fuse_filters``        — Filter(Filter(x, a), b)        -> Filter(x, a AND b)
@@ -9,9 +12,8 @@ Rules (each is a bottom-up rewrite; applied to fixpoint):
       runs on n rows, not the dataset)
   4. ``fuse_agg``            — Agg[count*](Filter(x, p))      -> FilterCount(x, p)
                                Agg[count*](Join(l, r))        -> JoinCount(l, r)
-  5. ``select_index``        — FilterCount/Filter over Scan with a point or
-     range predicate on an indexed column -> IndexRangeScan (binary search;
-     count-only becomes an index-only query — paper expressions 1/11/12).
+  5. ``union_pushdown``      — distribute row-wise operators and scalar
+     aggregates through an LSM union (per-component access paths).
   6. ``prune_columns``       — insert narrow Projects above Scans so only
      referenced columns are ever touched (columnar projection pushdown).
 
@@ -28,13 +30,17 @@ from repro.core.catalog import Catalog
 from repro.core.expr import BoolOp, Col, Compare, Expr, Lit
 
 # Sentinel bounds for one-sided ranges; the filter_count kernel operates on
-# int32 column tiles, so the sentinels are the int32 domain edges.
+# int32 column tiles, so the sentinels are the int32 domain edges. (Shared
+# with the physical planner's kernel-range-count candidate construction.)
 _RANGE_MIN = int(np.iinfo(np.int32).min)
 _RANGE_MAX = int(np.iinfo(np.int32).max)
 
 
-def optimize(root: P.Plan, catalog: Catalog | None = None, *, enable_index: bool = True,
-             enable_pushdown: bool = True, enable_kernel_fusion: bool = False) -> P.Plan:
+def optimize(root: P.Plan, catalog: Catalog | None = None, *,
+             enable_pushdown: bool = True, **_compat) -> P.Plan:
+    """Logical rewrites only. ``**_compat`` swallows the historical
+    ``enable_index``/``enable_kernel_fusion`` flags: access-path choice is
+    the physical planner's job now (Session forwards those knobs there)."""
     prev_fp = None
     node = root
     if catalog is not None:
@@ -47,10 +53,6 @@ def optimize(root: P.Plan, catalog: Catalog | None = None, *, enable_index: bool
             node = _rewrite(node, _pushdown_limit)
             node = _rewrite(node, _fuse_agg)
             node = _rewrite(node, _union_pushdown)
-        if enable_index and catalog is not None:
-            node = _rewrite(node, lambda n: _select_index(n, catalog))
-        if enable_kernel_fusion and catalog is not None:
-            node = _rewrite(node, lambda n: _fuse_range_count(n, catalog))
         fp = node.fingerprint()
         if fp == prev_fp:
             break
@@ -204,89 +206,6 @@ def _range_bounds(conjuncts: list[Expr], column: str):
     return lo, hi, residual
 
 
-def _select_index(node: P.Plan, catalog: Catalog):
-    """Filter/FilterCount directly over Scan + indexed range/point predicate
-    -> IndexRangeScan (+ residual predicate)."""
-    pred = None
-    count_only = False
-    if isinstance(node, P.FilterCount) and isinstance(node.children[0], P.Scan):
-        pred, count_only = node.predicate, True
-    elif isinstance(node, P.Filter) and isinstance(node.children[0], P.Scan):
-        pred = node.predicate
-    if pred is None:
-        return None
-    scan = node.children[0]
-    try:
-        ds = catalog.get(scan.dataverse, scan.dataset)
-    except KeyError:
-        return None
-    conjuncts = _split_conjuncts(pred)
-    for ix in ds.indexes.values():
-        found = _range_bounds(conjuncts, ix.column)
-        if found is None:
-            continue
-        lo, hi, residual = found
-        res_expr = None
-        for r in residual:
-            res_expr = r if res_expr is None else BoolOp("AND", res_expr, r)
-        ixscan = P.IndexRangeScan(scan.dataset, scan.dataverse, ix.column, lo, hi, res_expr)
-        if count_only:
-            return P.FilterCount(ixscan, None)
-        return ixscan
-    return None
-
-
-def _fuse_range_count(node: P.Plan, catalog: Catalog):
-    """FilterCount over Scan whose predicate fully decomposes into conjuncts
-    of ``Col {==,>=,<=} Lit`` on typed integer columns -> FusedRangeCount
-    (one filter_count kernel row per conjunct, bounds as runtime params).
-
-    Partial matches do NOT fuse: any residual conjunct (OR, !=, strict
-    bounds, string/float columns) leaves the plan on the generic mask path —
-    the kernel mode's graceful fallback.
-    """
-    if not isinstance(node, P.FilterCount) or node.predicate is None:
-        return None
-    scan = node.children[0]
-    if not isinstance(scan, P.Scan):
-        return None
-    try:
-        ds = catalog.get(scan.dataverse, scan.dataset)
-    except KeyError:
-        return None
-    cols: list[str] = []
-    los: list[Expr] = []
-    his: list[Expr] = []
-    for c in _split_conjuncts(node.predicate):
-        if not isinstance(c, Compare):
-            return None
-        l, r = c.children
-        if not (isinstance(l, Col) and isinstance(r, Lit)):
-            return None
-        meta = ds.table.meta.get(l.name)
-        if meta is None or meta.is_string or not np.issubdtype(meta.dtype, np.integer):
-            return None
-        # the kernel evaluates on int32 tiles: column bounds must prove the
-        # cast lossless, or wider-int values wrap and counts corrupt.
-        if meta.lo is None or meta.hi is None \
-                or meta.lo < _RANGE_MIN or meta.hi > _RANGE_MAX:
-            return None
-        if not isinstance(r.value, (int, np.integer)):
-            return None
-        if c.op == "==":
-            lo, hi = r, Lit(r.value, source=r)
-        elif c.op == ">=":
-            lo, hi = r, Lit(_RANGE_MAX)
-        elif c.op == "<=":
-            lo, hi = Lit(_RANGE_MIN), r
-        else:  # strict bounds / != : conservative, stay on the mask path
-            return None
-        cols.append(l.name)
-        los.append(lo)
-        his.append(hi)
-    return P.FusedRangeCount(scan, cols, los, his)
-
-
 # -- projection pushdown ------------------------------------------------------
 
 
@@ -316,10 +235,6 @@ def _prune_columns(node: P.Plan, catalog: Catalog, needed: set[str] | None = Non
             for e in node.exprs():
                 child_needed |= e.columns()
         kids = (_prune_columns(node.children[0], catalog, child_needed),)
-        return _with_children(node, kids)
-
-    if isinstance(node, P.FusedRangeCount):
-        kids = (_prune_columns(node.children[0], catalog, set(node.cols)),)
         return _with_children(node, kids)
 
     if isinstance(node, (P.Agg, P.GroupAgg, P.TopK, P.Sort)):

@@ -1,0 +1,496 @@
+"""Physical query plans — what the cost-based planner hands the compiler.
+
+The logical optimizer (core/optimizer.py) only rewrites *what* to compute;
+every *how* decision — index probe vs. full scan vs. fused Pallas kernel,
+which LSM runs to read at all — lives in a physical operator chosen by the
+planner (core/physical_planner.py) from catalog statistics (core/stats.py).
+
+Each node carries its cost annotations:
+
+  * ``est_rows`` — estimated rows the operator emits,
+  * ``rows_touched`` — physical rows it reads (what the cost model charges),
+  * ``cost`` — the operator's own cost units,
+  * ``note`` — the planner's rationale (alternatives considered, pruning).
+
+``fingerprint()`` keys the compiled-executable dedup cache: two logical
+plans that the planner maps to the same physical shape (a point ``==`` and a
+range ``>=``/``<=`` over the same access path) share one executable —
+literal values stay runtime parameters exactly like the logical layer.
+``format_plan()`` renders the tree ``explain()`` shows, including per-node
+costs and the zone-span rationale for every pruned run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.expr import Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class PrunedComponent:
+    """One LSM component the planner dropped at bind time, with the zone-map
+    rationale (recorded for explain; the compiled plan never reads it)."""
+
+    address: str
+    column: str
+    span: tuple          # the run's zone span [lo, hi]
+    bound: tuple         # the predicate's effective [lo, hi] at bind time
+    rows: int            # live rows the pruned run holds
+
+    def describe(self) -> str:
+        return (f"{self.address} PRUNED: zone span {self.column}∈"
+                f"[{self.span[0]}, {self.span[1]}] misses predicate "
+                f"[{self.bound[0]}, {self.bound[1]}] ({self.rows} rows skipped)")
+
+
+class PhysOp:
+    """Base physical operator. ``children`` are other PhysOps; cost fields
+    are filled by the planner."""
+
+    children: tuple["PhysOp", ...] = ()
+    est_rows: float = 0.0
+    rows_touched: float = 0.0
+    cost: float = 0.0
+    note: str = ""
+
+    def exprs(self) -> list[Expr]:
+        return []
+
+    def fingerprint(self) -> str:
+        raise NotImplementedError
+
+    def label(self) -> str:
+        return type(self).__name__
+
+    def total_cost(self) -> float:
+        return self.cost + sum(c.total_cost() for c in self.children)
+
+
+def walk(node: PhysOp):
+    yield node
+    for c in node.children:
+        yield from walk(c)
+
+
+def all_exprs(node: PhysOp) -> list[Expr]:
+    out: list[Expr] = []
+    for n in walk(node):
+        out.extend(n.exprs())
+    return out
+
+
+def scan_leaves(node: PhysOp) -> list[tuple[str, str]]:
+    """Dataset keys the physical plan actually reads (pruned runs excluded —
+    the executable must never gather a dropped component)."""
+    keys: list[tuple[str, str]] = []
+    for n in walk(node):
+        key = getattr(n, "source_key", None)
+        if key is not None and key not in keys:
+            keys.append(key)
+    return keys
+
+
+# -- stream operators (produce (env, mask)) ---------------------------------
+
+
+class TableScan(PhysOp):
+    def __init__(self, dataverse: str, dataset: str, open_cast: bool = False):
+        self.dataverse, self.dataset, self.open_cast = dataverse, dataset, open_cast
+
+    @property
+    def source_key(self):
+        return (self.dataverse, self.dataset)
+
+    def fingerprint(self):
+        return f"p:scan({self.dataverse}.{self.dataset},{int(self.open_cast)})"
+
+    def label(self):
+        return f"TableScan {self.dataverse}.{self.dataset}" + \
+            (" [open: cast-per-access]" if self.open_cast else "")
+
+
+class IndexProbe(PhysOp):
+    """Streaming access path via an indexed column's range predicate: the
+    bound conjuncts become the index mask, the rest stay residual."""
+
+    def __init__(self, dataverse: str, dataset: str, index_col: str,
+                 lo: Optional[Expr], hi: Optional[Expr],
+                 residual: Optional[Expr] = None, open_cast: bool = False):
+        self.dataverse, self.dataset, self.index_col = dataverse, dataset, index_col
+        self.lo, self.hi, self.residual = lo, hi, residual
+        self.open_cast = open_cast
+
+    @property
+    def source_key(self):
+        return (self.dataverse, self.dataset)
+
+    def exprs(self):
+        return [e for e in (self.lo, self.hi, self.residual) if e is not None]
+
+    def fingerprint(self):
+        lo = self.lo.fingerprint() if self.lo else "-inf"
+        hi = self.hi.fingerprint() if self.hi else "+inf"
+        res = self.residual.fingerprint() if self.residual else ""
+        return (f"p:ixprobe({self.dataverse}.{self.dataset},{self.index_col},"
+                f"{lo},{hi},{res},{int(self.open_cast)})")
+
+    def label(self):
+        bounds = f"{self.index_col} ∈ [{'-∞' if self.lo is None else '?'}, " \
+                 f"{'+∞' if self.hi is None else '?'}]"
+        res = " +residual" if self.residual is not None else ""
+        return f"IndexProbe {self.dataverse}.{self.dataset} ({bounds}{res})"
+
+
+class FullScanFilter(PhysOp):
+    def __init__(self, child: PhysOp, predicate: Expr):
+        self.children, self.predicate = (child,), predicate
+
+    def exprs(self):
+        return [self.predicate]
+
+    def fingerprint(self):
+        return f"p:filter({self.predicate.fingerprint()},{self.children[0].fingerprint()})"
+
+    def label(self):
+        return f"FullScanFilter ({self.predicate.to_sql()})"
+
+
+class ProjectCols(PhysOp):
+    def __init__(self, child: PhysOp, outputs: Sequence[tuple[str, Expr]]):
+        self.children, self.outputs = (child,), tuple(outputs)
+
+    def exprs(self):
+        return [e for _, e in self.outputs]
+
+    def fingerprint(self):
+        items = ",".join(f"{n}:{e.fingerprint()}" for n, e in self.outputs)
+        return f"p:project([{items}],{self.children[0].fingerprint()})"
+
+    def label(self):
+        return f"Project [{', '.join(n for n, _ in self.outputs)}]"
+
+
+class LimitRows(PhysOp):
+    def __init__(self, child: PhysOp, n: int):
+        self.children, self.n = (child,), int(n)
+
+    def fingerprint(self):
+        return f"p:limit({self.n},{self.children[0].fingerprint()})"
+
+    def label(self):
+        return f"Limit {self.n}"
+
+
+class TopKSelect(PhysOp):
+    """Sort+limit fused; ``kernel`` selects the block_topk Pallas selection
+    primitive instead of lax.top_k (a planner decision, not a mode branch)."""
+
+    def __init__(self, child: PhysOp, key: str, k: int, ascending: bool,
+                 kernel: bool = False):
+        self.children = (child,)
+        self.key, self.k, self.ascending, self.kernel = key, int(k), ascending, kernel
+
+    def fingerprint(self):
+        return (f"p:topk({self.key},{self.k},{self.ascending},"
+                f"{int(self.kernel)},{self.children[0].fingerprint()})")
+
+    def label(self):
+        how = "pallas block_topk" if self.kernel else "lax.top_k"
+        d = "asc" if self.ascending else "desc"
+        return f"TopK {self.key} {d} k={self.k} [{how}]"
+
+
+class SortRows(PhysOp):
+    def __init__(self, child: PhysOp, key: str, ascending: bool):
+        self.children, self.key, self.ascending = (child,), key, ascending
+
+    def fingerprint(self):
+        return f"p:sort({self.key},{self.ascending},{self.children[0].fingerprint()})"
+
+    def label(self):
+        return f"Sort {self.key} {'asc' if self.ascending else 'desc'}"
+
+
+class WindowEval(PhysOp):
+    def __init__(self, child: PhysOp, window):
+        self.children, self.window = (child,), window
+
+    def fingerprint(self):
+        return f"p:window({self.window.fingerprint()},{self.children[0].fingerprint()})"
+
+    def label(self):
+        return f"Window {self.window.func}(order by {self.window.order_by})"
+
+
+class JoinGather(PhysOp):
+    """Materializing inner equi-join (unique build keys, proven from stats
+    by the planner): probe rows gather their single match."""
+
+    def __init__(self, left: PhysOp, right: PhysOp, left_on: str, right_on: str):
+        self.children = (left, right)
+        self.left_on, self.right_on = left_on, right_on
+
+    def fingerprint(self):
+        return (f"p:joingather({self.left_on}={self.right_on},"
+                f"{self.children[0].fingerprint()},{self.children[1].fingerprint()})")
+
+    def label(self):
+        return f"JoinGather {self.left_on} = {self.right_on}"
+
+
+class PrunedUnionRuns(PhysOp):
+    """Base ∪ surviving runs of a fed dataset. ``pruned`` records the runs
+    the bind-time zone-span test dropped; the executable only ever reads the
+    surviving children."""
+
+    def __init__(self, children: Sequence[PhysOp],
+                 pruned: Sequence[PrunedComponent] = ()):
+        self.children = tuple(children)
+        self.pruned = tuple(pruned)
+
+    def fingerprint(self):
+        inner = ",".join(c.fingerprint() for c in self.children)
+        return f"p:unionruns({inner})"
+
+    def label(self):
+        return (f"UnionRuns [{len(self.children)} components, "
+                f"{len(self.pruned)} pruned]")
+
+
+# -- grouped operators -------------------------------------------------------
+
+
+class GroupAggGeneric(PhysOp):
+    """Bounded-domain group-by via segment reductions (gspmd/shard_map
+    lowering; the domain [lo, lo+num_groups) comes from planner stats)."""
+
+    def __init__(self, child: PhysOp, key: str, lo: int, num_groups: int, aggs):
+        self.children = (child,)
+        self.key, self.lo, self.num_groups = key, int(lo), int(num_groups)
+        self.aggs = tuple(aggs)
+
+    def fingerprint(self):
+        a = ",".join(s.fingerprint() for s in self.aggs)
+        return (f"p:groupagg({self.key},{self.lo},{self.num_groups},[{a}],"
+                f"{self.children[0].fingerprint()})")
+
+    def label(self):
+        return (f"GroupAgg {self.key} G={self.num_groups} "
+                f"[{', '.join(s.op for s in self.aggs)}] [segment-reduce]")
+
+
+class KernelSegmentAgg(PhysOp):
+    """Group-by lowered onto the segment_agg Pallas kernel: one fused
+    one-hot-matmul launch per component for the sum family (+1 per extreme
+    family), partials merged with +/max/min. Children are the per-LSM-
+    component streams. Chosen only under a static f32-exactness proof."""
+
+    def __init__(self, comps: Sequence[PhysOp], key: str, lo: int,
+                 num_groups: int, aggs):
+        self.children = tuple(comps)
+        self.key, self.lo, self.num_groups = key, int(lo), int(num_groups)
+        self.aggs = tuple(aggs)
+
+    def fingerprint(self):
+        a = ",".join(s.fingerprint() for s in self.aggs)
+        inner = ",".join(c.fingerprint() for c in self.children)
+        return (f"p:ksegagg({self.key},{self.lo},{self.num_groups},[{a}],"
+                f"{inner})")
+
+    def label(self):
+        return (f"KernelSegmentAgg {self.key} G={self.num_groups} "
+                f"[{', '.join(s.op for s in self.aggs)}] "
+                f"[{len(self.children)} segment_agg launch group(s)]")
+
+
+# -- scalar terminals --------------------------------------------------------
+
+
+class MaskCount(PhysOp):
+    """Generic COUNT: stream the child, reduce the mask (full scan)."""
+
+    def __init__(self, child: PhysOp, predicate: Optional[Expr]):
+        self.children, self.predicate = (child,), predicate
+
+    def exprs(self):
+        return [self.predicate] if self.predicate is not None else []
+
+    def fingerprint(self):
+        p = self.predicate.fingerprint() if self.predicate else "true"
+        return f"p:maskcount({p},{self.children[0].fingerprint()})"
+
+    def label(self):
+        p = f" ({self.predicate.to_sql()})" if self.predicate is not None else ""
+        return f"MaskCount{p} [full scan]"
+
+
+class IndexOnlyCount(PhysOp):
+    """COUNT answered from the sorted index alone: two binary searches per
+    shard + merge — never touches the base columns (the paper's index-only
+    query)."""
+
+    def __init__(self, dataverse: str, dataset: str, index_col: str,
+                 lo: Optional[Expr], hi: Optional[Expr]):
+        self.dataverse, self.dataset, self.index_col = dataverse, dataset, index_col
+        self.lo, self.hi = lo, hi
+
+    @property
+    def source_key(self):
+        return (self.dataverse, self.dataset)
+
+    def exprs(self):
+        return [e for e in (self.lo, self.hi) if e is not None]
+
+    def fingerprint(self):
+        lo = self.lo.fingerprint() if self.lo else "-inf"
+        hi = self.hi.fingerprint() if self.hi else "+inf"
+        return f"p:ixcount({self.dataverse}.{self.dataset},{self.index_col},{lo},{hi})"
+
+    def label(self):
+        return (f"IndexOnlyCount {self.dataverse}.{self.dataset} "
+                f"on {self.index_col} [binary search]")
+
+
+class KernelRangeCount(PhysOp):
+    """COUNT of conjunctive inclusive ranges over integer columns lowered
+    onto the filter_count Pallas kernel: one (k, n) tile pass, bounds as a
+    (k, 2) runtime operand, no mask column in HBM."""
+
+    def __init__(self, dataverse: str, dataset: str, cols: Sequence[str],
+                 los: Sequence[Expr], his: Sequence[Expr], has_valid: bool):
+        self.dataverse, self.dataset = dataverse, dataset
+        self.cols = tuple(cols)
+        self.los, self.his = tuple(los), tuple(his)
+        self.has_valid = has_valid
+
+    @property
+    def source_key(self):
+        return (self.dataverse, self.dataset)
+
+    def exprs(self):
+        out: list[Expr] = []
+        for lo, hi in zip(self.los, self.his):
+            out.extend((lo, hi))
+        return out
+
+    def fingerprint(self):
+        return (f"p:krangecount({self.dataverse}.{self.dataset},"
+                f"[{','.join(self.cols)}],{int(self.has_valid)})")
+
+    def label(self):
+        return (f"KernelRangeCount {self.dataverse}.{self.dataset} "
+                f"[{', '.join(self.cols)}] [filter_count kernel]")
+
+
+class ScalarAgg(PhysOp):
+    def __init__(self, child: PhysOp, aggs):
+        self.children, self.aggs = (child,), tuple(aggs)
+
+    def fingerprint(self):
+        a = ",".join(s.fingerprint() for s in self.aggs)
+        return f"p:scalaragg([{a}],{self.children[0].fingerprint()})"
+
+    def label(self):
+        return f"ScalarAgg [{', '.join(s.op for s in self.aggs)}]"
+
+
+class JoinCountOp(PhysOp):
+    """Fused join+count. ``kernel`` lowers onto merge_join_count (int32-safe
+    proof required); ``presorted`` reuses the build side's sorted index."""
+
+    def __init__(self, left: PhysOp, right: PhysOp, left_on: str, right_on: str,
+                 presorted_key: Optional[tuple] = None, kernel: bool = False):
+        self.children = (left, right)
+        self.left_on, self.right_on = left_on, right_on
+        self.presorted_key = presorted_key  # (dataverse, dataset) of sorted build
+        self.kernel = kernel
+
+    @property
+    def presorted(self) -> bool:
+        return self.presorted_key is not None
+
+    def fingerprint(self):
+        return (f"p:joincount({self.left_on}={self.right_on},"
+                f"{self.presorted_key},{int(self.kernel)},"
+                f"{self.children[0].fingerprint()},{self.children[1].fingerprint()})")
+
+    def label(self):
+        how = "merge_join kernel" if self.kernel else "sort+searchsorted"
+        pre = ", presorted build" if self.presorted else ""
+        return f"JoinCount {self.left_on} = {self.right_on} [{how}{pre}]"
+
+
+class MergeScalars(PhysOp):
+    """Merge of per-LSM-component scalar programs (+/max/min per output) —
+    the cross-component psum analogue. ``pruned`` records runs the zone-span
+    test excluded at bind time."""
+
+    def __init__(self, children: Sequence[PhysOp],
+                 merges: Sequence[tuple[str, str]],
+                 pruned: Sequence[PrunedComponent] = ()):
+        self.children = tuple(children)
+        self.merges = tuple(merges)
+        self.pruned = tuple(pruned)
+
+    def fingerprint(self):
+        m = ",".join(f"{n}:{op}" for n, op in self.merges)
+        inner = ",".join(c.fingerprint() for c in self.children)
+        return f"p:mergescalars([{m}],{inner})"
+
+    def label(self):
+        ops = ", ".join(f"{n}:{op}" for n, op in self.merges)
+        return (f"MergeScalars [{ops}] [{len(self.children)} components, "
+                f"{len(self.pruned)} pruned]")
+
+
+# -- explain rendering --------------------------------------------------------
+
+
+def format_plan(root: PhysOp) -> str:
+    """The ``explain()`` rendering: one line per operator with cost
+    estimates, nested tree structure, planner rationale, and a pruning line
+    per excluded LSM run."""
+    lines: list[str] = []
+
+    def emit(node: PhysOp, prefix: str, is_last: bool, is_root: bool):
+        branch = "" if is_root else ("└─ " if is_last else "├─ ")
+        meta = f"cost={node.cost:,.0f} rows≈{node.est_rows:,.0f}"
+        if node.rows_touched and node.rows_touched != node.est_rows:
+            meta += f" touched={node.rows_touched:,.0f}"
+        lines.append(f"{prefix}{branch}{node.label()}  [{meta}]")
+        child_prefix = prefix if is_root else prefix + ("   " if is_last else "│  ")
+        if node.note:
+            lines.append(f"{child_prefix}· {node.note}")
+        pruned = getattr(node, "pruned", ())
+        items: list = list(node.children) + list(pruned)
+        for i, item in enumerate(items):
+            last = i == len(items) - 1
+            if isinstance(item, PrunedComponent):
+                mark = "└─ " if last else "├─ "
+                lines.append(f"{child_prefix}{mark}✂ {item.describe()}")
+            else:
+                emit(item, child_prefix, last, False)
+
+    emit(root, "", True, True)
+    lines.append(f"total estimated cost: {root.total_cost():,.0f}")
+    return "\n".join(lines)
+
+
+def prune_report(root: PhysOp) -> dict:
+    """Aggregate pruning metrics over a physical plan (benchmarks / CI smoke
+    read this): component counts and physical rows touched vs. skipped."""
+    components = pruned = 0
+    rows_pruned = 0
+    for node in walk(root):
+        p = getattr(node, "pruned", None)
+        if p is None:
+            continue
+        components += len(node.children) + len(p)
+        pruned += len(p)
+        rows_pruned += sum(pc.rows for pc in p)
+    rows_touched = sum(int(n.rows_touched) for n in walk(root)
+                       if getattr(n, "source_key", None) is not None)
+    return {"components": components, "pruned": pruned,
+            "rows_pruned": rows_pruned, "rows_touched": rows_touched,
+            "total_cost": root.total_cost()}

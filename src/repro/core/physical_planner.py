@@ -1,0 +1,877 @@
+"""Cost-based physical planner: optimized logical plan → physical plan.
+
+This is the layer AsterixDB's rule+cost optimizer provides and the paper's
+AFrame rides on: the logical optimizer (core/optimizer.py) only *rewrites*
+(filter fusion, limit pushdown, feed expansion, union pushdown); every
+access-path and execution-strategy decision is made here, by comparing
+estimated costs from the unified statistics layer (core/stats.py):
+
+  * COUNT over a predicate — ``IndexOnlyCount`` (two binary searches) vs.
+    ``KernelRangeCount`` (fused filter_count Pallas launch) vs.
+    ``MaskCount`` (generic full scan): the planner costs all valid
+    candidates and keeps the cheapest, instead of encoding the preference
+    as rewrite-rule priority.
+  * GroupAgg — ``KernelSegmentAgg`` (one-hot-matmul segment kernel, gated
+    on a static f32-exactness proof) vs. ``GroupAggGeneric``.
+  * JoinCount — merge_join kernel (int32-safety proof) vs. generic
+    sort+searchsorted, presorted build side detected from index stats.
+  * LSM unions — **zone-map run pruning**: at bind time, every run whose
+    column zone span ``[lo, hi]`` misses the bound predicate range is
+    dropped from the plan entirely (``PrunedUnionRuns``/``MergeScalars``
+    record the rationale). Pruning never changes results: a pruned run
+    provably contributes zero live rows.
+
+Pruning depends on *literal values* (runtime parameters), so it cannot be
+baked into the optimized-plan cache entry. The split:
+
+  * ``build_pruner`` runs once per (logical plan, stats epoch): it extracts
+    the prunable-union descriptors (component zone spans + the literal slots
+    that bound each column).
+  * ``Pruner.decide`` runs per execution with the fresh literal values —
+    a few interval overlap tests — and yields the **prune signature** the
+    Session's third cache level is keyed by, plus the per-run rationale.
+
+Everything else in the cost model is deterministic given (logical
+fingerprint, stats epoch, prune signature) — selectivities come from
+distinct counts and default fractions, never from literal values — so a
+cached executable is always the one this planner would rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core import physical as PH
+from repro.core import plan as P
+from repro.core.catalog import Catalog
+from repro.core.expr import Col, Compare, Expr, Lit
+from repro.core.optimizer import (_RANGE_MAX, _RANGE_MIN, _range_bounds,
+                                  _split_conjuncts)
+from repro.core.stats import ColumnStats, TableStats, harvest
+
+# -- cost model --------------------------------------------------------------
+# Units: ~relative per-row work of a generic masked scan. The absolute scale
+# is irrelevant; only ratios steer the plan choice.
+
+C_ROW_SCAN = 1.0       # generic stream: evaluate predicate columns, mask
+C_ROW_KERNEL = 0.35    # fused Pallas kernel row (single tiled pass, no HBM mask)
+C_ROW_GROUP = 2.0      # segment reduction per row
+C_ROW_SORT = 8.0       # full-sort per row (n log n folded into the constant)
+C_ROW_JOIN = 4.0       # sort+searchsorted join per row
+C_KERNEL_LAUNCH = 64.0  # fixed per kernel launch
+C_PROBE = 24.0         # one binary-search probe pair (per component)
+
+DEFAULT_EQ_SELECTIVITY = 0.1
+DEFAULT_RANGE_SELECTIVITY = 0.33
+_F32_EXACT = 1 << 24   # ints in [-2^24, 2^24] are exact in float32
+
+
+def _conjunct_selectivity(c: Expr, stats: TableStats) -> float:
+    """Deterministic textbook selectivity from stats alone (literal values
+    are runtime params — the executable must not depend on them)."""
+    if not isinstance(c, Compare):
+        return 1.0
+    l, r = c.children
+    if not (isinstance(l, Col) and isinstance(r, Lit)):
+        return 1.0
+    cs = stats.column(l.name)
+    if c.op == "==":
+        if cs is not None and cs.distinct:
+            return 1.0 / max(cs.distinct, 1)
+        return DEFAULT_EQ_SELECTIVITY
+    if c.op == "!=":
+        return 1.0 - (_conjunct_selectivity(Compare("==", l, r), stats))
+    return DEFAULT_RANGE_SELECTIVITY
+
+
+def _filter_selectivity(pred: Optional[Expr], stats: TableStats) -> float:
+    if pred is None:
+        return 1.0
+    sel = 1.0
+    for c in _split_conjuncts(pred):
+        sel *= _conjunct_selectivity(c, stats)
+    return sel
+
+
+# -- bind-time zone-map pruning ----------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Constraint:
+    """One ``col <op> lit`` conjunct constraining a union component. ``ref``
+    resolves the literal at bind time: ("raw", i) reads the i-th literal of
+    the raw plan, ("const", v) is a plan constant."""
+
+    column: str
+    op: str
+    ref: tuple
+
+    def value(self, raw_values: list):
+        kind, v = self.ref
+        return raw_values[v] if kind == "raw" else v
+
+    def excludes(self, span: tuple, v) -> bool:
+        """True when the component's zone span proves zero matching rows."""
+        lo, hi = span
+        if self.op == "==":
+            return v < lo or v > hi
+        if self.op == ">=":
+            return hi < v
+        if self.op == ">":
+            return hi <= v
+        if self.op == "<=":
+            return lo > v
+        if self.op == "<":
+            return lo >= v
+        return False
+
+    def bound_repr(self, v) -> tuple:
+        return {"==": (v, v), ">=": (v, "+∞"), ">": (f">{v}", "+∞"),
+                "<=": ("-∞", v), "<": ("-∞", f"<{v}")}[self.op]
+
+
+@dataclasses.dataclass
+class _CompDesc:
+    address: str
+    rows: int
+    spans: dict[str, tuple]
+    constraints: list[_Constraint]
+    prunable: bool
+
+
+@dataclasses.dataclass
+class _UnionDesc:
+    ordinal: int
+    comps: list[_CompDesc]
+
+
+class PruneDecisions:
+    """Bind-time pruning outcome: per union ordinal, the surviving component
+    indices and the zone-map rationale for each dropped run. ``signature``
+    keys the Session's third cache level."""
+
+    def __init__(self, by_union: dict[int, tuple[tuple, tuple]]):
+        self.by_union = by_union
+        self.signature = tuple(sorted(
+            (k, tuple(surv)) for k, (surv, _) in by_union.items()))
+
+    def surviving(self, ordinal: int, n: int) -> tuple:
+        if ordinal not in self.by_union:
+            return tuple(range(n))
+        return self.by_union[ordinal][0]
+
+    def pruned(self, ordinal: int) -> tuple:
+        if ordinal not in self.by_union:
+            return ()
+        return self.by_union[ordinal][1]
+
+
+NO_PRUNE = PruneDecisions({})
+
+
+class Pruner:
+    """Extracted once per (optimized plan, stats epoch); ``decide`` is the
+    cheap per-execution pass (pure interval arithmetic on python scalars)."""
+
+    def __init__(self, unions: list[_UnionDesc]):
+        self.unions = unions
+
+    @property
+    def has_prunable(self) -> bool:
+        return any(c.prunable and c.constraints for u in self.unions
+                   for c in u.comps)
+
+    def decide(self, raw_values: list) -> PruneDecisions:
+        by_union: dict[int, tuple[tuple, tuple]] = {}
+        for u in self.unions:
+            surviving: list[int] = []
+            pruned: list[PH.PrunedComponent] = []
+            for i, comp in enumerate(u.comps):
+                record = None
+                if comp.prunable:
+                    for con in comp.constraints:
+                        span = comp.spans.get(con.column)
+                        if span is None:
+                            continue
+                        v = con.value(raw_values)
+                        if not isinstance(v, (int, float, np.integer,
+                                              np.floating)):
+                            continue
+                        if con.excludes(span, v):
+                            record = PH.PrunedComponent(
+                                address=comp.address, column=con.column,
+                                span=span, bound=con.bound_repr(v),
+                                rows=comp.rows)
+                            break
+                if record is None:
+                    surviving.append(i)
+                else:
+                    pruned.append(record)
+            if not surviving:
+                # keep the first component: the merged identity result
+                # (count 0 / ±inf extremes) must still be computed on-device,
+                # bit-identical to the unpruned all-empty execution.
+                surviving = [0]
+                pruned = [r for r in pruned if r.address != u.comps[0].address]
+            by_union[u.ordinal] = (tuple(surviving), tuple(pruned))
+        return PruneDecisions(by_union)
+
+
+def _origin_column(node: P.Plan, name: str) -> Optional[str]:
+    """Resolve a stream column name at ``node``'s output down to the STORED
+    column it reads, following pure ``Col`` Project rebindings. None when the
+    name is computed (UDF/arith) or shadowed — a predicate on such a column
+    must never be matched against catalog spans by name (``df["k"] =
+    df["v"]`` rebinds the name k to v's values; k's stored span is a lie)."""
+    if isinstance(node, P.Scan):
+        return name
+    if isinstance(node, P.Project):
+        for n, e in node.outputs:
+            if n == name:
+                if isinstance(e, Col):
+                    return _origin_column(node.children[0], e.name)
+                return None
+        return None
+    if len(node.children) == 1:  # filter/limit/sort/window pass through
+        return _origin_column(node.children[0], name)
+    return None
+
+
+def _identity_project(node: P.Plan) -> bool:
+    """True for the narrow Projects column pruning inserts: every output is
+    the same-named stored column (no renames, no computed expressions) — the
+    only Project shape access-path planning may safely look through."""
+    return isinstance(node, P.Project) and all(
+        isinstance(e, Col) and e.name == n for n, e in node.outputs)
+
+
+def _union_ordinals(opt: P.Plan) -> dict[int, int]:
+    """Union nodes numbered in walk order — build_pruner and plan_physical
+    must agree on the numbering."""
+    out: dict[int, int] = {}
+    for node in P.walk(opt):
+        if isinstance(node, (P.UnionRuns, P.UnionScalar)):
+            out[id(node)] = len(out)
+    return out
+
+
+def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list) -> Pruner:
+    """Walk the optimized plan's LSM unions and describe every component's
+    prune opportunity: its zone spans plus the ``col <op> lit`` conjuncts
+    (from the pushed-down per-component filters) that bound it."""
+    raw_index = {id(l): i for i, l in enumerate(raw_lits)}
+
+    def lit_ref(lit: Lit) -> tuple:
+        src = lit
+        while id(src) not in raw_index and getattr(src, "source", None) is not None:
+            src = src.source
+        if id(src) in raw_index:
+            return ("raw", raw_index[id(src)])
+        return ("const", lit.value)
+
+    unions: list[_UnionDesc] = []
+    ordinals = _union_ordinals(opt)
+    for node in P.walk(opt):
+        if not isinstance(node, (P.UnionRuns, P.UnionScalar)):
+            continue
+        comps: list[_CompDesc] = []
+        for child in node.children:
+            scans = [n for n in P.walk(child) if isinstance(n, P.Scan)]
+            if len(scans) != 1:
+                comps.append(_CompDesc("?", 0, {}, [], prunable=False))
+                continue
+            scan = scans[0]
+            try:
+                stats = harvest(catalog.get(scan.dataverse, scan.dataset))
+            except KeyError:
+                comps.append(_CompDesc("?", 0, {}, [], prunable=False))
+                continue
+            spans = {name: cs.span for name, cs in stats.columns.items()
+                     if cs.span is not None and not cs.is_string}
+            constraints: list[_Constraint] = []
+            for n in P.walk(child):
+                pred = getattr(n, "predicate", None)
+                if not isinstance(n, (P.Filter, P.FilterCount)) or pred is None:
+                    continue
+                for c in _split_conjuncts(pred):
+                    if not isinstance(c, Compare):
+                        continue
+                    l, r = c.children
+                    if not (isinstance(l, Col) and isinstance(r, Lit)) \
+                            or c.op not in ("==", ">=", ">", "<=", "<"):
+                        continue
+                    # trace the stream name to its STORED column: a Project
+                    # may have rebound it (df["k"] = df["v"]), in which case
+                    # the stored k's zone span says nothing about this
+                    # predicate — only provenance-proven constraints prune.
+                    origin = _origin_column(n.children[0], l.name)
+                    if origin is not None and origin in spans:
+                        constraints.append(_Constraint(origin, c.op,
+                                                       lit_ref(r)))
+            comps.append(_CompDesc(stats.address, stats.rows, spans,
+                                   constraints, prunable=True))
+        unions.append(_UnionDesc(ordinals[id(node)], comps))
+    return Pruner(unions)
+
+
+# -- the planner -------------------------------------------------------------
+
+
+class _PlannerCtx:
+    def __init__(self, catalog: Catalog, mode: str, decisions: PruneDecisions,
+                 enable_index: bool):
+        self.catalog = catalog
+        self.mode = mode
+        self.decisions = decisions
+        self.enable_index = enable_index
+        self.ordinals: dict[int, int] = {}
+
+    def stats(self, dataverse: str, dataset: str) -> Optional[TableStats]:
+        try:
+            return harvest(self.catalog.get(dataverse, dataset))
+        except KeyError:
+            return None
+
+    @property
+    def kernels(self) -> bool:
+        return self.mode == "kernel"
+
+
+def plan_physical(opt: P.Plan, catalog: Catalog, *, mode: str = "gspmd",
+                  decisions: PruneDecisions = NO_PRUNE,
+                  enable_index: bool = True) -> PH.PhysOp:
+    """Logical (optimized) plan → costed physical plan. ``decisions`` is the
+    bind-time pruning outcome; the returned plan reads only surviving
+    components."""
+    ctx = _PlannerCtx(catalog, mode, decisions, enable_index)
+    ctx.ordinals = _union_ordinals(opt)
+    return _plan_terminal(opt, ctx)
+
+
+# -- stream planning ---------------------------------------------------------
+
+
+def _scan_stats(ctx: _PlannerCtx, node) -> Optional[TableStats]:
+    return ctx.stats(node.dataverse, node.dataset)
+
+
+def _plan_scan(node: P.Scan, ctx: _PlannerCtx) -> PH.PhysOp:
+    stats = _scan_stats(ctx, node)
+    ds = ctx.catalog.get(node.dataverse, node.dataset)
+    out = PH.TableScan(node.dataverse, node.dataset, open_cast=not ds.closed)
+    if stats is not None:
+        out.est_rows = stats.rows
+        out.rows_touched = stats.padded_rows
+        out.cost = stats.padded_rows * C_ROW_SCAN
+    return out
+
+
+def _plan_filter(node: P.Filter, ctx: _PlannerCtx) -> PH.PhysOp:
+    """Stream filter: an ``IndexProbe`` access path when an indexed column is
+    range-bound (remaining conjuncts stay residual), generic mask otherwise.
+    Both stream every physical row — the probe's value is the tighter
+    cardinality estimate it gives operators above (and the count path)."""
+    inner = node.children[0]
+    proj = None
+    if _identity_project(inner) and isinstance(inner.children[0], P.Scan):
+        # look through the narrow Project column pruning inserted (identity
+        # outputs only — a renaming Project would change what names mean)
+        proj, inner = inner, inner.children[0]
+    if ctx.enable_index and isinstance(inner, P.Scan):
+        stats = _scan_stats(ctx, inner)
+        if stats is not None:
+            conjuncts = _split_conjuncts(node.predicate)
+            for colname, cs in stats.columns.items():
+                if cs.index is None:
+                    continue
+                found = _range_bounds(conjuncts, colname)
+                if found is None:
+                    continue
+                lo, hi, residual = found
+                res_expr = None
+                for r in residual:
+                    from repro.core.expr import BoolOp
+                    res_expr = r if res_expr is None else BoolOp("AND", res_expr, r)
+                ds = ctx.catalog.get(inner.dataverse, inner.dataset)
+                probe = PH.IndexProbe(inner.dataverse, inner.dataset, colname,
+                                      lo, hi, res_expr, open_cast=not ds.closed)
+                probe.est_rows = max(
+                    stats.rows * _filter_selectivity(node.predicate, stats), 1)
+                probe.rows_touched = stats.padded_rows
+                probe.cost = stats.padded_rows * C_ROW_SCAN
+                probe.note = f"index {cs.index}:{colname} bounds the stream"
+                if proj is None:
+                    return probe
+                # mask-then-project ≡ project-then-mask for identity outputs
+                out = PH.ProjectCols(probe, proj.outputs)
+                out.est_rows = probe.est_rows
+                out.cost = probe.est_rows * 0.1 * len(proj.outputs)
+                return out
+    child = _plan_stream(node.children[0], ctx)
+    out = PH.FullScanFilter(child, node.predicate)
+    stats0 = _leaf_stats(child, ctx)
+    sel = _filter_selectivity(node.predicate, stats0) if stats0 else 0.5
+    out.est_rows = max(child.est_rows * sel, 1)
+    out.rows_touched = child.est_rows
+    out.cost = child.est_rows * 0.2
+    return out
+
+
+def _leaf_stats(phys: PH.PhysOp, ctx: _PlannerCtx) -> Optional[TableStats]:
+    for n in PH.walk(phys):
+        key = getattr(n, "source_key", None)
+        if key is not None:
+            return ctx.stats(*key)
+    return None
+
+
+def _plan_stream(node: P.Plan, ctx: _PlannerCtx) -> PH.PhysOp:
+    from repro.core.window import Window
+
+    if isinstance(node, P.Scan):
+        return _plan_scan(node, ctx)
+
+    if isinstance(node, P.Filter):
+        return _plan_filter(node, ctx)
+
+    if isinstance(node, P.Project):
+        child = _plan_stream(node.children[0], ctx)
+        out = PH.ProjectCols(child, node.outputs)
+        out.est_rows = child.est_rows
+        out.cost = child.est_rows * 0.1 * len(node.outputs)
+        return out
+
+    if isinstance(node, P.Limit):
+        child = _plan_stream(node.children[0], ctx)
+        out = PH.LimitRows(child, node.n)
+        out.est_rows = min(node.n, child.est_rows or node.n)
+        out.cost = child.est_rows * 0.1
+        return out
+
+    if isinstance(node, P.TopK):
+        child = _plan_stream(node.children[0], ctx)
+        out = PH.TopKSelect(child, node.key, node.k, node.ascending,
+                            kernel=ctx.kernels)
+        out.est_rows = min(node.k, child.est_rows or node.k)
+        out.cost = child.est_rows * (C_ROW_KERNEL if ctx.kernels else C_ROW_SCAN)
+        if ctx.kernels:
+            out.cost += C_KERNEL_LAUNCH
+            out.note = "block_topk kernel selection"
+        return out
+
+    if isinstance(node, P.Sort):
+        child = _plan_stream(node.children[0], ctx)
+        out = PH.SortRows(child, node.key, node.ascending)
+        out.est_rows = child.est_rows
+        out.cost = child.est_rows * C_ROW_SORT
+        return out
+
+    if isinstance(node, Window):
+        child = _plan_stream(node.children[0], ctx)
+        out = PH.WindowEval(child, node)
+        out.est_rows = child.est_rows
+        out.cost = child.est_rows * C_ROW_SORT
+        return out
+
+    if isinstance(node, P.UnionRuns):
+        return _plan_union_runs(node, ctx)
+
+    if isinstance(node, P.GroupAgg):
+        return _plan_groupagg(node, ctx)
+
+    if isinstance(node, P.Join):
+        _check_join_materializable(node, ctx)
+        left = _plan_stream(node.children[0], ctx)
+        right = _plan_stream(node.children[1], ctx)
+        out = PH.JoinGather(left, right, node.left_on, node.right_on)
+        out.est_rows = left.est_rows
+        out.cost = (left.est_rows + right.est_rows) * C_ROW_JOIN
+        return out
+
+    raise NotImplementedError(f"no physical plan for {type(node).__name__}")
+
+
+def _plan_union_runs(node: P.UnionRuns, ctx: _PlannerCtx) -> PH.PhysOp:
+    ordinal = ctx.ordinals.get(id(node), -1)
+    surviving = ctx.decisions.surviving(ordinal, len(node.children))
+    pruned = ctx.decisions.pruned(ordinal)
+    kids = [_plan_stream(node.children[i], ctx) for i in surviving]
+    out = PH.PrunedUnionRuns(kids, pruned)
+    out.est_rows = sum(k.est_rows for k in kids)
+    out.cost = out.est_rows * 0.05
+    if pruned:
+        out.note = (f"zone maps pruned {len(pruned)}/{len(node.children)} "
+                    f"components ({sum(p.rows for p in pruned):,} rows skipped)")
+    return out
+
+
+# -- join guards (moved from the compiler: they are *planning* decisions) ----
+
+
+def _check_join_materializable(node: P.Join, ctx: _PlannerCtx) -> None:
+    """Materializing joins require unique build keys (static shapes: each
+    probe row gathers ≤1 match). A fed build side contributes base + runs, so
+    every component must be internally unique AND the component key ranges
+    pairwise disjoint — proven from catalog stats or refused."""
+    scans = [l for l in P.walk(node.children[1]) if isinstance(l, P.Scan)]
+    if not scans:
+        return
+    first = scans[0].dataset.split("@")[0]
+    comps = [l for l in scans if l.dataverse == scans[0].dataverse
+             and l.dataset.split("@")[0] == first]
+    ranges = []
+    for leaf in comps:
+        stats = _scan_stats(ctx, leaf)
+        cs = stats.column(node.right_on) if stats is not None else None
+        if cs is None:
+            continue
+        if cs.distinct is not None and cs.distinct < stats.rows:
+            raise NotImplementedError(
+                f"materializing join on non-unique key "
+                f"{node.right_on!r} (distinct={cs.distinct} < "
+                f"rows={stats.rows}); COUNT over such joins is "
+                "supported (join-count path)")
+        if cs.lo is not None:
+            ranges.append((cs.lo, cs.hi))
+    if len(comps) > 1:
+        if len(ranges) < len(comps):
+            raise NotImplementedError(
+                f"materializing join against a fed dataset needs "
+                f"key bounds on {node.right_on!r} to prove the LSM "
+                "components disjoint")
+        for i, (lo_a, hi_a) in enumerate(ranges):
+            for lo_b, hi_b in ranges[i + 1:]:
+                if lo_a <= hi_b and lo_b <= hi_a:
+                    raise NotImplementedError(
+                        f"materializing join key {node.right_on!r} "
+                        "may repeat across LSM components "
+                        f"(overlapping bounds); compact first or "
+                        "use COUNT (join-count path)")
+
+
+def _join_key_int32_safe(side: P.Plan, col: str, ctx: _PlannerCtx) -> bool:
+    """True when stats prove the join key casts to int32 losslessly (the
+    merge_join kernel's tile dtype). Every leaf carrying the column must
+    pass — an LSM run can extend the base's domain."""
+    i32 = np.iinfo(np.int32)
+    metas: list[ColumnStats] = []
+    for leaf in P.walk(side):
+        if isinstance(leaf, P.Scan):
+            stats = _scan_stats(ctx, leaf)
+            cs = stats.column(col) if stats is not None else None
+            if cs is not None:
+                metas.append(cs)
+    if not metas:
+        return False
+    for m in metas:
+        if m.is_string or not np.issubdtype(m.dtype, np.integer):
+            return False
+        if m.lo is None or m.hi is None or m.lo < i32.min or m.hi > i32.max:
+            return False
+    return True
+
+
+# -- terminal planning -------------------------------------------------------
+
+
+def _plan_terminal(node: P.Plan, ctx: _PlannerCtx) -> PH.PhysOp:
+    if isinstance(node, P.UnionScalar):
+        ordinal = ctx.ordinals.get(id(node), -1)
+        surviving = ctx.decisions.surviving(ordinal, len(node.children))
+        pruned = ctx.decisions.pruned(ordinal)
+        kids = [_plan_terminal(node.children[i], ctx) for i in surviving]
+        out = PH.MergeScalars(kids, node.merges, pruned)
+        out.est_rows = 1
+        out.cost = len(kids) * 0.5
+        if pruned:
+            out.note = (f"zone maps pruned {len(pruned)}/{len(node.children)} "
+                        f"components "
+                        f"({sum(p.rows for p in pruned):,} rows skipped)")
+        return out
+
+    if isinstance(node, P.FilterCount):
+        return _plan_count(node, ctx)
+
+    if isinstance(node, P.JoinCount):
+        return _plan_join_count(node.children[0], node.children[1],
+                                node.left_on, node.right_on, ctx)
+
+    if isinstance(node, P.Agg):
+        # COUNT over a Join must use the duplicate-correct join-count path
+        # even when the optimizer was disabled (semantics ≠ optimization).
+        if len(node.aggs) == 1 and node.aggs[0].op == "count" \
+                and isinstance(node.children[0], P.Join):
+            j = node.children[0]
+            return _plan_join_count(j.children[0], j.children[1],
+                                    j.left_on, j.right_on, ctx)
+        child = _plan_stream(node.children[0], ctx)
+        out = PH.ScalarAgg(child, node.aggs)
+        out.est_rows = 1
+        out.cost = child.est_rows * 0.1 * len(node.aggs)
+        return out
+
+    if isinstance(node, P.GroupAgg):
+        return _plan_groupagg(node, ctx)
+
+    return _plan_stream(node, ctx)
+
+
+def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
+    """The flagship costed decision: COUNT(pred) over one component picks the
+    cheapest valid access path instead of the old rewrite-rule priority."""
+    child = node.children[0]
+    pred = node.predicate
+    # index/kernel candidates may only look through IDENTITY Projects (the
+    # narrow ones column pruning inserts): a renaming Project changes what
+    # predicate names mean, and a candidate reading stored columns by those
+    # names would count the wrong data — renames stay on the mask path.
+    inner = child.children[0] if _identity_project(child) else child
+
+    candidates: list[PH.PhysOp] = []
+    if isinstance(inner, P.Scan) and pred is not None:
+        stats = _scan_stats(ctx, inner)
+        if stats is not None:
+            conjuncts = _split_conjuncts(pred)
+            sel = _filter_selectivity(pred, stats)
+            if ctx.enable_index:
+                for colname, cs in stats.columns.items():
+                    if cs.index is None:
+                        continue
+                    found = _range_bounds(conjuncts, colname)
+                    if found is None:
+                        continue
+                    lo, hi, residual = found
+                    if residual:
+                        continue  # residual conjuncts: not index-only
+                    cand = PH.IndexOnlyCount(inner.dataverse, inner.dataset,
+                                             colname, lo, hi)
+                    cand.est_rows = max(stats.rows * sel, 1)
+                    cand.rows_touched = cand.est_rows
+                    cand.cost = C_PROBE + math.log2(max(stats.padded_rows, 2))
+                    cand.note = f"index-only: sorted {cs.index} index on {colname}"
+                    candidates.append(cand)
+            if ctx.kernels:
+                krc = _try_kernel_range_count(inner, pred, stats, ctx)
+                if krc is not None:
+                    krc.est_rows = max(stats.rows * sel, 1)
+                    krc.rows_touched = stats.padded_rows
+                    krc.cost = C_KERNEL_LAUNCH \
+                        + stats.padded_rows * C_ROW_KERNEL
+                    candidates.append(krc)
+
+    generic = PH.MaskCount(_plan_stream(child, ctx), pred)
+    gstats = _leaf_stats(generic, ctx)
+    gsel = _filter_selectivity(pred, gstats) if gstats is not None else 1.0
+    generic.est_rows = max((gstats.rows if gstats else 0) * gsel, 0)
+    generic.rows_touched = generic.children[0].est_rows
+    generic.cost = generic.children[0].est_rows * 0.05
+    candidates.append(generic)
+
+    best = min(candidates, key=lambda c: c.total_cost())
+    if len(candidates) > 1:
+        alts = "; ".join(f"{type(c).__name__} cost={c.total_cost():,.0f}"
+                         for c in candidates if c is not best)
+        best.note = (best.note + " — " if best.note else "") + \
+            f"chosen over {alts}"
+    return best
+
+
+def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
+                            ctx: _PlannerCtx) -> Optional[PH.KernelRangeCount]:
+    """COUNT whose predicate fully decomposes into ``Col {==,>=,<=} Lit``
+    conjuncts on int32-provable integer columns → filter_count kernel.
+    Partial matches never fuse (graceful fallback to the mask path)."""
+    cols: list[str] = []
+    los: list[Expr] = []
+    his: list[Expr] = []
+    for c in _split_conjuncts(pred):
+        if not isinstance(c, Compare):
+            return None
+        l, r = c.children
+        if not (isinstance(l, Col) and isinstance(r, Lit)):
+            return None
+        cs = stats.column(l.name)
+        if cs is None or cs.is_string or not np.issubdtype(cs.dtype, np.integer):
+            return None
+        # the kernel evaluates on int32 tiles: column bounds must prove the
+        # cast lossless, or wider-int values wrap and counts corrupt.
+        if cs.lo is None or cs.hi is None \
+                or cs.lo < _RANGE_MIN or cs.hi > _RANGE_MAX:
+            return None
+        if not isinstance(r.value, (int, np.integer)):
+            return None
+        if c.op == "==":
+            # NEVER alias one Lit as both bounds: a point and a range plan
+            # share a physical fingerprint (literal values excluded), so the
+            # executable's two param slots must map to two distinct Lit
+            # objects or a cache hit cross-binds them.
+            lo, hi = r, Lit(r.value, source=r)
+        elif c.op == ">=":
+            lo, hi = r, Lit(_RANGE_MAX)
+        elif c.op == "<=":
+            lo, hi = Lit(_RANGE_MIN), r
+        else:  # strict bounds / != : conservative, stay on the mask path
+            return None
+        cols.append(l.name)
+        los.append(lo)
+        his.append(hi)
+    ds = ctx.catalog.get(scan.dataverse, scan.dataset)
+    has_valid = "__valid__" in ds.table.columns
+    return PH.KernelRangeCount(scan.dataverse, scan.dataset, cols, los, his,
+                               has_valid)
+
+
+def _plan_join_count(lnode: P.Plan, rnode: P.Plan, left_on: str, right_on: str,
+                     ctx: _PlannerCtx) -> PH.PhysOp:
+    left = _plan_stream(lnode, ctx)
+    right = _plan_stream(rnode, ctx)
+    presorted_key = None
+    if isinstance(rnode, P.Scan):
+        stats = _scan_stats(ctx, rnode)
+        if stats is not None and stats.index_on(right_on) is not None:
+            presorted_key = (rnode.dataverse, rnode.dataset)
+    kernel = ctx.kernels and _join_key_int32_safe(lnode, left_on, ctx) \
+        and _join_key_int32_safe(rnode, right_on, ctx)
+    out = PH.JoinCountOp(left, right, left_on, right_on,
+                         presorted_key=presorted_key, kernel=kernel)
+    n = left.est_rows + right.est_rows
+    out.est_rows = 1
+    out.cost = C_KERNEL_LAUNCH + n * C_ROW_KERNEL if kernel else n * C_ROW_JOIN
+    if kernel:
+        out.note = "int32-safety proven from stats: merge_join kernel"
+    return out
+
+
+# -- group-by planning -------------------------------------------------------
+
+
+def _group_domain(phys_child: PH.PhysOp, key: str, ctx: _PlannerCtx):
+    """Resolve (lo, num_groups) for the bounded-domain group-by from the
+    *surviving* physical leaves. Bounds merge across the LSM components of
+    the FIRST dataset family that carries them; leaves of other datasets (a
+    join build side with a same-named column) never widen the domain."""
+    lo = hi = family = None
+    for leaf in PH.walk(phys_child):
+        skey = getattr(leaf, "source_key", None)
+        if skey is None:
+            continue
+        stats = ctx.stats(*skey)
+        cs = stats.column(key) if stats is not None else None
+        if cs is None or cs.lo is None or cs.hi is None:
+            continue
+        fam = (skey[0], skey[1].split("@")[0])
+        if family is None:
+            family = fam
+        elif fam != family:
+            continue
+        lo = cs.lo if lo is None else min(lo, cs.lo)
+        hi = cs.hi if hi is None else max(hi, cs.hi)
+    if lo is not None:
+        return int(lo), int(hi - lo + 1)
+    raise ValueError(
+        f"group key {key!r} has no domain statistics; bounded-domain group-by "
+        "requires catalog lo/hi (Wisconsin columns carry them)")
+
+
+def _trace_col(node: P.Plan, col: str, ctx: _PlannerCtx) -> Optional[ColumnStats]:
+    """Resolve the ColumnStats a stream column name originates from, following
+    Project renames and join name-resolution; None when provenance cannot be
+    established (computed expressions, suffixed join collisions)."""
+    from repro.core.window import Window
+
+    if isinstance(node, Window) and col == node.out_name:
+        return None  # computed analytic column, no catalog bounds
+    if isinstance(node, P.Scan):
+        stats = _scan_stats(ctx, node)
+        return stats.column(col) if stats is not None else None
+    if isinstance(node, P.Project):
+        for name, e in node.outputs:
+            if name == col:
+                if isinstance(e, Col):
+                    return _trace_col(node.children[0], e.name, ctx)
+                return None
+        return None
+    if isinstance(node, P.UnionRuns):
+        # every component must prove the column; the union's bound is the
+        # envelope of the per-component bounds (runs may extend the domain).
+        metas = [_trace_col(c, col, ctx) for c in node.children]
+        if any(m is None or m.lo is None or m.hi is None for m in metas):
+            return None
+        return ColumnStats(metas[0].dtype,
+                           min(m.lo for m in metas), max(m.hi for m in metas),
+                           sum(m.distinct or 0 for m in metas) or None,
+                           any(m.is_string for m in metas), False)
+    if isinstance(node, P.Join):
+        # join_materialize: the left side wins a bare name; right-only names
+        # pass through; a collision suffixes the right column (untraceable by
+        # its stream name, so it resolves to None here).
+        left_meta = _trace_col(node.children[0], col, ctx)
+        if left_meta is not None:
+            return left_meta
+        return _trace_col(node.children[1], col, ctx)
+    if len(node.children) == 1:  # filter/limit/sort/window pass columns through
+        return _trace_col(node.children[0], col, ctx)
+    return None
+
+
+def _kernel_groupagg_exact(node: P.GroupAgg, ctx: _PlannerCtx, aggs) -> bool:
+    """The segment_agg kernel computes in float32 — bit-identical to the
+    generic path only when every per-group result is an exactly-representable
+    integer: counts need n < 2^24; sum/mean need integer value columns whose
+    stats bounds prove n * max|value| < 2^24; max/min only need the values
+    representable. Provenance is traced to the origin table (conservative:
+    the UNPRUNED component set bounds n)."""
+    leaf_stats = [_scan_stats(ctx, l) for l in P.walk(node)
+                  if isinstance(l, P.Scan)]
+    leaf_stats = [s for s in leaf_stats if s is not None]
+    if not leaf_stats:
+        return False
+    n = sum(s.padded_rows for s in leaf_stats)
+    if n >= _F32_EXACT:
+        return False
+    for _, op, col in aggs:
+        if op == "count":
+            continue
+        m = _trace_col(node.children[0], col, ctx)
+        if m is None or m.is_string or not np.issubdtype(m.dtype, np.integer):
+            return False
+        if m.lo is None or m.hi is None:
+            return False
+        maxabs = max(abs(int(m.lo)), abs(int(m.hi)))
+        bound = maxabs if op in ("max", "min") else n * maxabs
+        if bound >= _F32_EXACT:
+            return False
+    return True
+
+
+def _plan_groupagg(node: P.GroupAgg, ctx: _PlannerCtx) -> PH.PhysOp:
+    assert len(node.keys) == 1, "single-key group-by (paper expressions 4/8)"
+    key = node.keys[0]
+    child = _plan_stream(node.children[0], ctx)
+    lo, num_groups = _group_domain(child, key, ctx)
+    aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
+
+    if ctx.kernels \
+            and all(op in ("count", "sum", "mean", "max", "min")
+                    for _, op, _ in aggs) \
+            and _kernel_groupagg_exact(node, ctx, aggs):
+        comps = list(child.children) if isinstance(child, PH.PrunedUnionRuns) \
+            else [child]
+        out = PH.KernelSegmentAgg(comps, key, lo, num_groups, node.aggs)
+        if isinstance(child, PH.PrunedUnionRuns):
+            out.pruned = child.pruned
+            out.note = child.note
+        out.est_rows = num_groups
+        out.cost = sum(c.est_rows for c in comps) * C_ROW_KERNEL \
+            + C_KERNEL_LAUNCH * len(comps)
+        out.note = (out.note + " — " if out.note else "") + \
+            "f32 exactness proven from stats: segment_agg kernel"
+        return out
+
+    out = PH.GroupAggGeneric(child, key, lo, num_groups, node.aggs)
+    out.est_rows = num_groups
+    out.cost = child.est_rows * C_ROW_GROUP + num_groups
+    return out

@@ -261,40 +261,10 @@ class UnionScalar(Plan):
         return f"SELECT {aggs} FROM ({parts}) t"
 
 
-# -- physical-only nodes introduced by the optimizer ------------------------
-
-
-class IndexRangeScan(Plan):
-    """Scan via a clustered/secondary index: predicate ``lo <= col <= hi``
-    becomes two binary searches. ``count_only`` makes it an *index-only*
-    query (paper: "executed as an index-only query on AsterixDB")."""
-
-    def __init__(self, dataset: str, dataverse: str, index_col: str,
-                 lo: Expr | None, hi: Expr | None, residual: Expr | None = None):
-        self.dataset, self.dataverse, self.index_col = dataset, dataverse, index_col
-        self.lo, self.hi, self.residual = lo, hi, residual
-
-    def exprs(self):
-        return [e for e in (self.lo, self.hi, self.residual) if e is not None]
-
-    def fingerprint(self):
-        lo = self.lo.fingerprint() if self.lo else "-inf"
-        hi = self.hi.fingerprint() if self.hi else "+inf"
-        res = self.residual.fingerprint() if self.residual else ""
-        return f"ixscan({self.dataverse}.{self.dataset},{self.index_col},{lo},{hi},{res})"
-
-    def to_sql(self):
-        parts = []
-        if self.lo is not None:
-            parts.append(f"t.{self.index_col} >= {self.lo.to_sql()}")
-        if self.hi is not None:
-            parts.append(f"t.{self.index_col} <= {self.hi.to_sql()}")
-        if self.residual is not None:
-            parts.append(self.residual.to_sql())
-        return (
-            f"SELECT VALUE t FROM {self.dataverse}.{self.dataset} t "
-            f"WHERE {' AND '.join(parts)} /*+ index({self.index_col}) */"
-        )
+# -- fused logical nodes introduced by the optimizer ------------------------
+# (Access paths — index probes, kernel launches, run pruning — are PHYSICAL
+# decisions and live in core/physical.py; these nodes only record semantic
+# fusions like "this aggregate is a COUNT over a filter".)
 
 
 class FilterCount(Plan):
@@ -316,46 +286,6 @@ class FilterCount(Plan):
         if self.predicate is None:
             return f"SELECT VALUE COUNT(*) FROM ({base}) t"
         return f"SELECT VALUE COUNT(*) FROM ({base}) t WHERE {self.predicate.to_sql()}"
-
-
-class FusedRangeCount(Plan):
-    """COUNT(*) over a conjunction of inclusive range predicates on integer
-    columns, directly over a Scan. The kernel execution mode lowers this onto
-    the ``filter_count`` Pallas kernel: one pass over a (k, n) column tile,
-    bounds arriving as a (k, 2) runtime operand — so the benchmark's
-    randomized literals hit the plan cache and no intermediate mask column
-    ever materializes in HBM.
-
-    One row per source conjunct: ``col == v`` becomes (v, v'), ``col >= v``
-    becomes (v, +sentinel), ``col <= v`` becomes (-sentinel, v). ``los`` and
-    ``his`` are Lit exprs (runtime params), never shared objects (see the
-    cache-cross-binding note in optimizer._range_bounds).
-    """
-
-    def __init__(self, child: Plan, cols: Sequence[str],
-                 los: Sequence[Expr], his: Sequence[Expr]):
-        self.children = (child,)
-        self.cols = tuple(cols)
-        self.los, self.his = tuple(los), tuple(his)
-
-    def exprs(self):
-        out: list[Expr] = []
-        for lo, hi in zip(self.los, self.his):
-            out.extend((lo, hi))
-        return out
-
-    def fingerprint(self):
-        # bounds are runtime params: any conjunction over the same column row
-        # list shares one executable (==, >=, <= all lower identically).
-        return f"fusedrangecount([{','.join(self.cols)}],{self.children[0].fingerprint()})"
-
-    def to_sql(self):
-        parts = [f"{lo.to_sql()} <= t.{c} AND t.{c} <= {hi.to_sql()}"
-                 for c, lo, hi in zip(self.cols, self.los, self.his)]
-        return (
-            f"SELECT VALUE COUNT(*) FROM ({self.children[0].to_sql()}) t "
-            f"WHERE {' AND '.join(parts)}"
-        )
 
 
 class JoinCount(Plan):

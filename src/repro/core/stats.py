@@ -1,0 +1,126 @@
+"""Unified statistics layer — the planner's single source of truth.
+
+AsterixDB's cost-based rewrites read dataset/index statistics from the
+metadata node; the analogue here is a uniform harvest over every storage
+component the engine owns:
+
+  * **base datasets** — per-column lo/hi/distinct collected at load
+    (``session._collect_stats``), index inventory, live row counts;
+  * **LSM runs**      — the same shape per device-resident flush: each run's
+    column ``[lo, hi]`` is its *zone span* (the envelope of the per-block
+    zone maps built at flush time), which is what run-level pruning tests
+    predicate ranges against;
+  * **materialized views** — group counts and key domain of the
+    incrementally-maintained state.
+
+Every harvest is O(metadata): nothing touches device arrays. The catalog
+carries a ``stats_epoch`` bumped on any event that changes what statistics
+describe (DDL, feed flush, compaction) — compiled plans are keyed by the
+epoch, so a stale executable can never read a dropped LSM component.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro.core.catalog import Catalog, Dataset
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnStats:
+    """Per-column statistics (the ColumnMeta view the planner consumes).
+
+    ``lo``/``hi`` bound the live value domain — for an LSM run this is the
+    run's zone span; ``index`` is the kind of index covering the column
+    ("primary"/"secondary") or None."""
+
+    dtype: np.dtype
+    lo: Optional[float] = None
+    hi: Optional[float] = None
+    distinct: Optional[int] = None
+    is_string: bool = False
+    sorted_ascending: bool = False
+    index: Optional[str] = None
+
+    @property
+    def bounded(self) -> bool:
+        return self.lo is not None and self.hi is not None
+
+    @property
+    def span(self) -> Optional[tuple[float, float]]:
+        return (self.lo, self.hi) if self.bounded else None
+
+
+@dataclasses.dataclass(frozen=True)
+class TableStats:
+    """Statistics for one storage component (base table, LSM run, or view).
+
+    ``rows`` counts live rows; ``padded_rows`` is the physical (block-padded,
+    shard-padded) length every full-scan operator actually touches —
+    the quantity the cost model charges for."""
+
+    address: str                 # "dataverse.name" (runs: "dv.name@run<i>")
+    rows: int
+    padded_rows: int
+    columns: Mapping[str, ColumnStats]
+    kind: str = "dataset"        # dataset | run | view
+
+    def column(self, name: str) -> Optional[ColumnStats]:
+        return self.columns.get(name)
+
+    def span(self, name: str) -> Optional[tuple[float, float]]:
+        c = self.columns.get(name)
+        return c.span if c is not None else None
+
+    def index_on(self, name: str) -> Optional[str]:
+        c = self.columns.get(name)
+        return c.index if c is not None else None
+
+    @property
+    def is_run(self) -> bool:
+        return self.kind == "run"
+
+
+def harvest(ds: Dataset) -> TableStats:
+    """Uniform stats harvest for a base dataset or an LSM run."""
+    cols: dict[str, ColumnStats] = {}
+    for name, meta in ds.table.meta.items():
+        if name == "__valid__":
+            continue
+        ix = ds.index_on(name)
+        cols[name] = ColumnStats(
+            dtype=np.dtype(meta.dtype), lo=meta.lo, hi=meta.hi,
+            distinct=meta.distinct, is_string=meta.is_string,
+            sorted_ascending=meta.sorted_ascending,
+            index=ix.kind if ix is not None else None)
+    return TableStats(address=f"{ds.dataverse}.{ds.name}",
+                      rows=ds.num_live_rows,
+                      padded_rows=len(ds.table),
+                      columns=cols,
+                      kind="run" if "@" in ds.name else "dataset")
+
+
+def component_stats(catalog: Catalog, dataverse: str, name: str) -> TableStats:
+    """Stats for a component address — resolves "<name>@run<i>" like the
+    catalog does, so planner code never special-cases LSM components."""
+    return harvest(catalog.get(dataverse, name))
+
+
+def view_stats(view) -> TableStats:
+    """Stats harvest for an incrementally-maintained MaterializedView: live
+    group count and the key domain of the dense state."""
+    counts = getattr(view, "_counts", None)
+    if counts is None:
+        return TableStats(address=f"{view.dataverse}.{view.name}", rows=0,
+                          padded_rows=0, columns={}, kind="view")
+    live = int((counts > 0).sum())
+    g = int(counts.shape[0])
+    key_dtype = np.dtype(view._key_dtype) if view._key_dtype is not None \
+        else np.dtype(np.int64)
+    cols = {view.key: ColumnStats(dtype=key_dtype, lo=view.lo,
+                                  hi=view.lo + g - 1, distinct=live,
+                                  sorted_ascending=True)}
+    return TableStats(address=f"{view.dataverse}.{view.name}", rows=live,
+                      padded_rows=g, columns=cols, kind="view")

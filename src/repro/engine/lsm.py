@@ -98,10 +98,13 @@ def make_run(session, base: Dataset, table: Table) -> Dataset:
 
 
 def register_run(session, base: Dataset, run: Dataset) -> None:
-    """Attach the run and drop every compiled plan: the LSM component set is
-    baked into optimized plans (UnionRuns fans out per component)."""
+    """Attach the run and bump the catalog's statistics epoch: the LSM
+    component set is baked into optimized plans (UnionRuns fans out per
+    component) and every level of the Session plan cache is keyed by the
+    epoch, so cached executables for the old component set become
+    unreachable — queries rebind against base ∪ runs including this one."""
     base.runs.append(run)
-    session._invalidate_plans()
+    session.catalog.bump_stats_epoch()
 
 
 def _valid_columns(table: Table) -> dict[str, np.ndarray]:

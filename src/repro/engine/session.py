@@ -5,18 +5,20 @@ expression time, paper §IV-D).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import plan as P
 from repro.core.catalog import Catalog, Dataset, IndexInfo, open_widen
-from repro.core.compiler import CompiledQuery, ExecContext, compile_plan
+from repro.core.compiler import (CompiledQuery, ExecContext, compile_physical,
+                                 compile_plan)
 from repro.core.optimizer import optimize
+from repro.core.physical_planner import build_pruner, plan_physical
 from repro.engine.table import Table
 
 try:
@@ -27,15 +29,33 @@ except ImportError:  # pragma: no cover
 from jax.sharding import PartitionSpec as PS
 
 
+@dataclasses.dataclass
+class _PlanEntry:
+    """One raw-fingerprint plan-cache entry, valid for a single statistics
+    epoch. ``variants`` is the third cache level: prune signature →
+    (executable, literal binding)."""
+
+    epoch: int
+    opt: P.Plan                  # optimized logical plan
+    opt_fp: str
+    raw_lits0: list              # the entry-creation call's literals (binding anchors)
+    pruner: "object"             # physical_planner.Pruner
+    variants: dict = dataclasses.field(default_factory=dict)
+
+
 class Session:
     def __init__(self, mesh: Optional[Mesh] = None, mode: str = "auto",
                  data_axes: tuple[str, ...] = ("data",),
                  enable_index: bool = True, enable_pushdown: bool = True,
+                 enable_prune: bool = True,
                  kernel_backend: Optional[str] = None):
         """mode: 'auto' (shard_map when a mesh is given), 'gspmd',
-        'shard_map', or 'kernel' (lower fusable plan shapes onto the Pallas
-        relational kernels; anything uncovered falls back to the gspmd /
-        shard_map lowering).
+        'shard_map', or 'kernel' (the cost-based planner lowers fusable plan
+        shapes onto the Pallas relational kernels; anything uncovered falls
+        back to the gspmd / shard_map lowering).
+
+        ``enable_prune`` turns bind-time zone-map run pruning on/off (off is
+        only useful for benchmarking the pruning win).
 
         ``kernel_backend`` feeds the kernels/ops dispatch: 'pallas' forces
         the Pallas kernels (interpret mode off-TPU), 'xla' the jnp twins;
@@ -60,15 +80,29 @@ class Session:
         self.data_axes = data_axes
         self.enable_index = enable_index
         self.enable_pushdown = enable_pushdown
-        # two-level plan cache: the raw (pre-optimization) fingerprint maps to
-        # (executable, literal binding, optimized plan) so repeated queries
-        # skip the optimizer entirely; the optimized fingerprint still dedups
-        # executables across raw plans that rewrite to the same shape (a
-        # point == and a range >=/<= predicate share one executable).
-        self._cache: dict[str, CompiledQuery] = {}
-        self._plan_cache: dict[str, tuple] = {}
+        self.enable_prune = enable_prune
+        # Three-level plan cache:
+        #   1. raw (pre-optimization) fingerprint → _PlanEntry, valid for one
+        #      stats epoch: repeated query shapes skip the optimizer and the
+        #      pruner *build* entirely;
+        #   2. per entry, (stats_epoch, prune signature) → (executable,
+        #      literal binding): randomized literals that keep the same
+        #      surviving-run set rebind into the cached executable; literals
+        #      that change which runs the zone maps prune rebuild only the
+        #      physical plan (the optimizer output is reused);
+        #   3. (physical fingerprint, epoch) → executable dedup across
+        #      logical shapes (a point == and a range >=/<= predicate still
+        #      share one compiled program, exactly like the old two-level
+        #      cache).
+        # Epoch keying is the invalidation mechanism: any flush / compaction
+        # / DDL bumps catalog.stats_epoch, so a stale executable (which bakes
+        # in shapes, access paths, and the LSM component set) can never run
+        # against a changed catalog — a dropped run is unreachable.
+        self._plans: dict[str, _PlanEntry] = {}
+        self._compiled: dict[tuple, CompiledQuery] = {}
         self.timings: dict[str, float] = {}
-        self.stats = {"compiles": 0, "hits": 0, "optimizes": 0}
+        self.stats = {"compiles": 0, "hits": 0, "optimizes": 0,
+                      "plans": 0, "pruned_components": 0}
         # incrementally-maintained materialized views (engine/lsm.py),
         # refreshed from each feed flush's delta batch.
         self.views: dict[str, "object"] = {}
@@ -106,12 +140,12 @@ class Session:
         return ds
 
     def _invalidate_plans(self) -> None:
-        """DDL drops every compiled plan: executables bake catalog facts
-        (array shapes, index selection, kernel exactness proofs) and the
-        raw-fingerprint cache additionally freezes optimizer decisions, so a
-        re-registered dataset must force re-optimization and re-compile."""
-        self._cache.clear()
-        self._plan_cache.clear()
+        """Free cached plans eagerly. Correctness never depends on this call:
+        every cache level is keyed by ``catalog.stats_epoch`` (bumped on DDL,
+        feed flush, and compaction), so stale entries are unreachable — this
+        just reclaims the memory."""
+        self._plans.clear()
+        self._compiled.clear()
 
     def _build_index(self, table: Table, column: str, kind: str) -> IndexInfo:
         sk, rid, zmin, zmax = _index_builder(self.mesh, self.data_axes)(
@@ -165,56 +199,119 @@ class Session:
 
     def _optimize(self, plan: P.Plan) -> P.Plan:
         self.stats["optimizes"] += 1
-        return optimize(plan, self.catalog, enable_index=self.enable_index,
-                        enable_pushdown=self.enable_pushdown,
-                        enable_kernel_fusion=self.mode == "kernel")
+        return optimize(plan, self.catalog,
+                        enable_pushdown=self.enable_pushdown)
+
+    def _plan_entry(self, plan: P.Plan, raw_fp: str, raw_lits: list) -> _PlanEntry:
+        """Level 1: optimized plan + pruner per (raw fingerprint, epoch)."""
+        epoch = self.catalog.stats_epoch
+        e = self._plans.get(raw_fp)
+        if e is not None and e.epoch == epoch:
+            return e
+        if e is not None:  # stale epoch: sweep dead executables with it
+            self._compiled = {k: v for k, v in self._compiled.items()
+                              if k[1] == epoch}
+        opt = self._optimize(plan)
+        e = _PlanEntry(epoch, opt, opt.fingerprint(), list(raw_lits),
+                       build_pruner(opt, self.catalog, raw_lits))
+        self._plans[raw_fp] = e
+        return e
+
+    def _variant(self, e: _PlanEntry, raw_lits: list):
+        """Levels 2+3: prune signature → (executable, binding); executables
+        dedup'd across logical shapes by physical fingerprint."""
+        from repro.core.expr import ordered_lits
+        from repro.core.physical_planner import NO_PRUNE
+
+        decisions = e.pruner.decide([l.value for l in raw_lits]) \
+            if self.enable_prune else NO_PRUNE
+        var = e.variants.get(decisions.signature)
+        if var is not None:
+            self.stats["hits"] += 1
+            return var
+        phys = plan_physical(e.opt, self.catalog, mode=self.mode,
+                             decisions=decisions,
+                             enable_index=self.enable_index)
+        self.stats["plans"] += 1
+        key = (phys.fingerprint(), e.epoch)
+        cq = self._compiled.get(key)
+        if cq is None:
+            cq = compile_physical(e.opt, phys, self.exec_context())
+            self._compiled[key] = cq
+            self.stats["compiles"] += 1
+        else:
+            self.stats["hits"] += 1
+            # reuse the executable but surface THIS binding's physical plan
+            # (its pruning rationale) for explain/stats readers.
+            cq = dataclasses.replace(cq, physical=phys)
+        # Bind against THIS entry's physical-plan literals: an executable
+        # dedup'd from another logical shape has the same fingerprint, hence
+        # the same slot order, but its Lit objects chain to the OTHER raw
+        # plan — only this plan's lits resolve against raw_lits0.
+        from repro.core import physical as PH
+        binding = _literal_binding(e.raw_lits0,
+                                   ordered_lits(PH.all_exprs(phys)))
+        var = (cq, binding)
+        e.variants[decisions.signature] = var
+        return var
 
     def execute(self, plan: P.Plan):
-        """Optimize → compile (cached) → run → numpy-ify.
+        """Optimize → cost-plan (pruning at bind time) → compile (cached) →
+        run → numpy-ify.
 
-        Caching is keyed on the *raw* plan fingerprint: a repeat of a query
-        shape (the benchmark's randomized literals) reads its literal values
-        off the un-optimized plan and binds them straight into the cached
-        executable's param slots — no optimizer pass, no optimized-plan walk.
+        A repeat of a query shape (the benchmark's randomized literals) reads
+        its literal values off the un-optimized plan, re-decides zone-map
+        pruning (pure interval arithmetic), and — when the surviving-run set
+        is unchanged — binds straight into the cached executable's param
+        slots: no optimizer pass, no planner pass, no re-compile.
         """
         from repro.core.expr import ordered_lits
+        from repro.core.physical import prune_report
 
         t0 = time.perf_counter()
         raw_fp = plan.fingerprint()
         raw_lits = ordered_lits(P.all_exprs(plan))
-        entry = self._plan_cache.get(raw_fp)
-        if entry is None:
-            opt = self._optimize(plan)
-            opt_fp = opt.fingerprint()
-            cq = self._cache.get(opt_fp)
-            if cq is None:
-                cq = compile_plan(opt, self.exec_context())
-                self._cache[opt_fp] = cq
-                self.stats["compiles"] += 1
-            else:
-                self.stats["hits"] += 1
-            binding = _literal_binding(raw_lits, ordered_lits(P.all_exprs(opt)))
-            entry = (cq, binding, opt)
-            self._plan_cache[raw_fp] = entry
-        else:
-            self.stats["hits"] += 1
-        cq, binding, opt = entry
+        e = self._plan_entry(plan, raw_fp, raw_lits)
+        cq, binding = self._variant(e, raw_lits)
         params = _bind_params(binding, raw_lits)
         out = cq.run(self.catalog, params=params)
         out = jax.block_until_ready(out)
         self.timings["last_execute"] = time.perf_counter() - t0
-        self.last_optimized = opt
+        self.last_optimized = e.opt
+        self.last_physical = cq.physical
+        self.last_prune_report = prune_report(cq.physical)
+        self.stats["pruned_components"] += self.last_prune_report["pruned"]
         if cq.kind == "scalar":
             vals = {k: np.asarray(v).item() for k, v in out.items()}
             return vals if len(vals) > 1 else next(iter(vals.values()))
         env, mask = out
         return _materialize(env, mask, cq.kind)
 
+    def explain(self, plan: P.Plan) -> str:
+        """The costed physical plan for ``plan``, rendered with per-operator
+        cost estimates and the zone-map pruning rationale — what AsterixDB's
+        EXPLAIN shows for the optimized Hyracks job. Runs the optimizer and
+        planner but compiles/executes nothing."""
+        from repro.core.expr import ordered_lits
+        from repro.core.physical import format_plan
+
+        raw_lits = ordered_lits(P.all_exprs(plan))
+        e = self._plan_entry(plan, plan.fingerprint(), raw_lits)
+        decisions = e.pruner.decide([l.value for l in raw_lits]) \
+            if self.enable_prune else None
+        from repro.core.physical_planner import NO_PRUNE
+        phys = plan_physical(e.opt, self.catalog, mode=self.mode,
+                             decisions=decisions or NO_PRUNE,
+                             enable_index=self.enable_index)
+        return format_plan(phys)
+
     def persist(self, plan: P.Plan, name: str, dataverse: str = "Default") -> Dataset:
         """CREATE DATASET AS <query> — result stays engine-resident (paper
         Input 15: no data ever leaves storage)."""
         opt = self._optimize(plan)
-        cq = compile_plan(opt, self.exec_context())
+        cq = compile_plan(opt, self.exec_context(),
+                          enable_index=self.enable_index,
+                          enable_prune=self.enable_prune)
         out = cq.run(self.catalog)
         if cq.kind == "scalar":
             raise ValueError("cannot persist a scalar result")

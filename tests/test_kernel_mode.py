@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import physical as PH
 from repro.core import plan as P
 from repro.core.expr import param_values
 from repro.core.frame import AFrame
@@ -108,7 +109,7 @@ def test_kernels_on_lowered_path(table, raw):
 
     len(df[(df["ten"] == 4) & (df["twentyPercent"] == 4) & (df["two"] == 0)])
     assert ops.DISPATCH_COUNTS.get("filter_count", 0) >= 1
-    assert isinstance(sess.last_optimized, P.FusedRangeCount)
+    assert isinstance(sess.last_physical, PH.KernelRangeCount)
 
     df.groupby("oddOnePercent").agg("count")
     assert ops.DISPATCH_COUNTS.get("segment_agg", 0) >= 1
@@ -160,15 +161,15 @@ def test_graceful_fallback_non_range_predicates(table, raw):
 
     n = len(df[(df["ten"] == 3) | (df["two"] == 0)])
     assert n == int(((raw["ten"] == 3) | (raw["two"] == 0)).sum())
-    assert isinstance(sess.last_optimized, P.FilterCount)
+    assert isinstance(sess.last_physical, PH.MaskCount)
 
     n = len(df[df["ten"] != 3])
     assert n == int((raw["ten"] != 3).sum())
-    assert isinstance(sess.last_optimized, P.FilterCount)
+    assert isinstance(sess.last_physical, PH.MaskCount)
 
     n = len(df[df["onePercent"] < 10])
     assert n == int((raw["onePercent"] < 10).sum())
-    assert isinstance(sess.last_optimized, P.FilterCount)
+    assert isinstance(sess.last_physical, PH.MaskCount)
 
 
 def test_index_still_wins_over_kernel_fusion(table, raw):
@@ -180,8 +181,8 @@ def test_index_still_wins_over_kernel_fusion(table, raw):
     df = AFrame("ix", "data", session=sess)
     n = len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 30)])
     assert n == int(((raw["onePercent"] >= 10) & (raw["onePercent"] <= 30)).sum())
-    assert isinstance(sess.last_optimized, P.FilterCount)
-    assert isinstance(sess.last_optimized.children[0], P.IndexRangeScan)
+    assert isinstance(sess.last_physical, PH.IndexOnlyCount)
+    assert "chosen over" in sess.last_physical.note  # beat the kernel on cost
 
 
 def test_fused_count_jaxpr_has_no_mask_column(table):
@@ -192,8 +193,8 @@ def test_fused_count_jaxpr_has_no_mask_column(table):
     df, _ = _frames(sess)
     len(df[(df["ten"] == 2) & (df["two"] == 0)])
 
-    fused = [(fp, cq) for fp, cq in sess._cache.items()
-             if fp.startswith("fusedrangecount")]
+    fused = [(key, cq) for key, cq in sess._compiled.items()
+             if key[0].startswith("p:krangecount")]
     assert fused, "no fused executable compiled"
 
     def walk_eqns(jaxpr):
@@ -253,7 +254,7 @@ def test_int32_unsafe_columns_fall_back(raw):
 
     ops.reset_dispatch_counts()
     assert len(df[df["k"] >= 5]) == n - 5
-    assert isinstance(sess.last_optimized, P.FilterCount)  # not FusedRangeCount
+    assert isinstance(sess.last_physical, PH.MaskCount)  # not KernelRangeCount
     assert ops.DISPATCH_COUNTS.get("filter_count", 0) == 0
 
     assert len(df.merge(df2, left_on="k", right_on="k")) == n
@@ -261,7 +262,7 @@ def test_int32_unsafe_columns_fall_back(raw):
 
     # the int32-bounded column still fuses
     assert len(df[df["ten"] == 3]) == int((vals % 10 == 3).sum())
-    assert isinstance(sess.last_optimized, P.FusedRangeCount)
+    assert isinstance(sess.last_physical, PH.KernelRangeCount)
 
 
 def test_group_sum_provenance_traced_through_rename(raw):

@@ -91,6 +91,8 @@ def test_queries_identical_before_and_after_compaction(mode):
 
 def test_union_plan_on_lowered_path():
     """Pre-compaction plans actually fan out per LSM component."""
+    from repro.core import physical as PH
+
     sess, feed = _fed_session("gspmd")
     df = AFrame("d", "Live", session=sess)
     len(df)
@@ -98,14 +100,16 @@ def test_union_plan_on_lowered_path():
     assert isinstance(opt, P.UnionScalar)
     assert len(opt.children) == 3  # base + 2 runs
     df.sort_values("unique1").head(3)
-    assert any(isinstance(n, P.UnionRuns) for n in P.walk(sess.last_optimized))
-    # per-component index probes: the indexed range count runs one
-    # IndexRangeScan per component
+    assert any(isinstance(n, PH.PrunedUnionRuns)
+               for n in PH.walk(sess.last_physical))
+    # per-component access paths: the indexed range count runs one
+    # index-only probe per component (onePercent spans overlap every
+    # component, so zone maps prune nothing here)
     len(df[(df["onePercent"] >= 5) & (df["onePercent"] <= 9)])
-    ixscans = [n for n in P.walk(sess.last_optimized)
-               if isinstance(n, P.IndexRangeScan)]
-    assert len(ixscans) == 3
-    assert {n.dataset for n in ixscans} == {"Live", "Live@run0", "Live@run1"}
+    probes = [n for n in PH.walk(sess.last_physical)
+              if isinstance(n, PH.IndexOnlyCount)]
+    assert len(probes) == 3
+    assert {n.dataset for n in probes} == {"Live", "Live@run0", "Live@run1"}
 
 
 def test_kernel_mode_launches_per_component():

@@ -1,9 +1,13 @@
-"""Optimizer rewrite rules (the AsterixDB query-optimizer analogue)."""
+"""Optimizer rewrite rules (the AsterixDB query-optimizer analogue) and the
+cost-based physical planner's access-path choices (logical→physical split:
+the optimizer only rewrites; index-vs-scan-vs-kernel lives in the planner)."""
 import pytest
 
+from repro.core import physical as PH
 from repro.core import plan as P
 from repro.core.expr import BoolOp, Col, Compare, Lit, StrUpper
 from repro.core.optimizer import optimize
+from repro.core.physical_planner import plan_physical
 from repro.core.catalog import Catalog, Dataset
 from repro.data import wisconsin
 from repro.engine.session import Session
@@ -60,15 +64,21 @@ def test_count_join_fuses(catalog):
 
 
 def test_index_selected_for_range(catalog):
-    """Paper expression 11: range count -> index-only query."""
+    """Paper expression 11: range count -> index-only query. The choice is
+    now COSTED in the physical planner: an index probe (binary search) must
+    beat the full scan, and the optimizer output stays purely logical."""
     pred = BoolOp("AND", Compare(">=", Col("onePercent"), Lit(10)),
                   Compare("<=", Col("onePercent"), Lit(30)))
     p = P.Agg(P.Filter(scan(), pred), [P.AggSpec("count", "count", None)])
     opt = optimize(p, catalog)
-    assert isinstance(opt, P.FilterCount)
-    assert isinstance(opt.children[0], P.IndexRangeScan)
-    assert opt.children[0].index_col == "onePercent"
-    assert "/*+ index(onePercent) */" in opt.to_sql()
+    assert isinstance(opt, P.FilterCount)          # logical fusion only
+    assert isinstance(opt.children[0], (P.Scan, P.Project))
+    phys = plan_physical(opt, catalog)
+    assert isinstance(phys, PH.IndexOnlyCount)
+    assert phys.index_col == "onePercent"
+    assert phys.cost < plan_physical(opt, catalog,
+                                     enable_index=False).total_cost()
+    assert "chosen over" in phys.note              # the costed alternatives
 
 
 def test_index_point_with_residual(catalog):
@@ -76,15 +86,17 @@ def test_index_point_with_residual(catalog):
                   Compare("==", Col("two"), Lit(1)))
     p = P.Filter(scan(), pred)
     opt = optimize(p, catalog)
-    assert isinstance(opt, P.IndexRangeScan)
-    assert opt.residual is not None
+    assert isinstance(opt, P.Filter)               # optimizer: no access path
+    phys = plan_physical(opt, catalog)
+    assert isinstance(phys, PH.IndexProbe)
+    assert phys.residual is not None
 
 
 def test_no_index_without_catalog_entry(catalog):
     pred = Compare(">=", Col("twenty"), Lit(3))
     p = P.Filter(scan(), pred)
-    opt = optimize(p, catalog)
-    assert isinstance(opt, P.Filter)  # twenty is not indexed
+    phys = plan_physical(optimize(p, catalog), catalog)
+    assert isinstance(phys, PH.FullScanFilter)  # twenty is not indexed
 
 
 def test_column_pruning_inserts_narrow_project(catalog):
