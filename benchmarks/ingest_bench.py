@@ -18,6 +18,12 @@ sweep**: with N runs resident, a range predicate on the monotone ``unique2``
 key that hits exactly 1 of the N runs is answered with zone-map pruning on
 vs. off — tracking the pruning win (latency + physical rows touched + runs
 skipped) in ``results/bench/ingest.json`` across PRs.
+
+A **mutation sweep** rides along: the same stream replayed as append-only
+vs. upsert-heavy vs. delete-heavy workloads (anti-matter records through
+``Feed.upsert``/``Feed.delete``), each with deferred and compact-every-flush
+policies — sustained mutation ops/sec, post-flush query freshness, and an
+uncompacted == compacted consistency check per cell.
 """
 from __future__ import annotations
 
@@ -144,6 +150,100 @@ def _selectivity_sweep(sess: Session, df: AFrame, base_rows: int,
     return sweep
 
 
+# mutation mix per workload: fractions of batches issued as (push, upsert,
+# delete); deletes target previously-ingested keys, upserts overwrite them.
+MUTATION_WORKLOADS = {
+    "append-only": (1.0, 0.0, 0.0),
+    "upsert-heavy": (0.4, 0.6, 0.0),
+    "delete-heavy": (0.4, 0.2, 0.4),
+}
+
+
+def _run_mutation_cell(size: str, workload: str, variant: str) -> dict:
+    """One mutation-sweep cell: replay the stream with the workload's
+    push/upsert/delete mix, measure sustained mutation ops/sec and post-
+    flush freshness, then assert uncompacted == compacted."""
+    base_rows, n_batches, batch_rows = SIZES[size]
+    base = wisconsin.generate(base_rows, seed=7)
+    sess = Session()
+    sess.create_dataset("MutStream", base, dataverse="bench",
+                        indexes=["onePercent"], primary="unique2")
+    feed = Feed(sess, "MutStream", "bench", flush_rows=batch_rows,
+                policy=POLICIES[variant]())
+    df = AFrame("bench", "MutStream", session=sess)
+    len(df)  # warm the base-only count executable
+
+    push_f, upsert_f, delete_f = MUTATION_WORKLOADS[workload]
+    rng = np.random.default_rng(13)
+    batches = _stream(base_rows, n_batches, batch_rows)
+    kinds = rng.choice(["push", "upsert", "delete"], size=n_batches,
+                       p=[push_f, upsert_f, delete_f])
+    hi_key = base_rows
+    ops = 0
+    mutate_s = 0.0
+    freshness = []
+    for i, rows in enumerate(batches):
+        kind = kinds[i]
+        t0 = time.perf_counter()
+        if kind == "push":
+            feed.push(rows)
+            hi_key = int(np.asarray(rows["unique2"]).max()) + 1
+        elif kind == "upsert":
+            rows = dict(rows)
+            rows["unique2"] = rng.choice(hi_key, size=batch_rows,
+                                         replace=False).astype(
+                np.asarray(rows["unique2"]).dtype)
+            feed.upsert(rows)
+        else:
+            keys = rng.choice(hi_key, size=batch_rows, replace=False)
+            feed.delete(keys.astype(np.asarray(rows["unique2"]).dtype))
+        feed.flush()
+        mutate_s += time.perf_counter() - t0
+        ops += batch_rows
+        t0 = time.perf_counter()
+        len(df)
+        len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 30)])
+        freshness.append(time.perf_counter() - t0)
+    uncompacted = len(df)
+    feed.compact()
+    assert len(df) == uncompacted, "mutation invariant violated"
+    return {
+        "size": size,
+        "variant": f"mutation:{workload}:{variant}",
+        "workload": workload,
+        "policy": variant,
+        "ops": ops,
+        "ops_per_s": round(ops / mutate_s, 1),
+        "freshness_median_s": round(float(np.median(freshness)), 4),
+        "freshness_p95_s": round(float(np.percentile(freshness, 95)), 4),
+        "flushes": feed.stats["flushes"],
+        "compactions": feed.stats["compactions"],
+        "level_merges": feed.stats["level_merges"],
+        "final_rows": uncompacted,
+        "mutation_ops": int(feed.stats["deletes"] + feed.stats["upserts"]),
+        "tombstones_flushed": int(feed.stats["tombstones_flushed"]),
+    }
+
+
+def _mutation_sweep(size: str) -> list[dict]:
+    rows = []
+    for workload in MUTATION_WORKLOADS:
+        per_policy = {}
+        for variant in POLICIES:
+            r = _run_mutation_cell(size, workload, variant)
+            per_policy[variant] = r
+            rows.append(r)
+            print(f"  {size:>2} {workload:<13} {variant:<20} "
+                  f"{r['ops_per_s']:>10,.0f} ops/s  freshness p50 "
+                  f"{r['freshness_median_s'] * 1e3:6.1f} ms  "
+                  f"(compactions={r['compactions']})")
+        speedup = (per_policy["deferred"]["ops_per_s"]
+                   / per_policy["compact-every-flush"]["ops_per_s"])
+        rows.append({"size": size, "variant": f"mutation:{workload}:speedup",
+                     "mutation_speedup": round(speedup, 2)})
+    return rows
+
+
 def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[dict]:
     names = list(sizes) if sizes else ["XS", "S"]
     rows = []
@@ -161,6 +261,7 @@ def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[d
         print(f"  {size:>2} deferred-compaction ingest speedup: {speedup:.1f}x")
         rows.append({"size": size, "variant": "speedup",
                      "ingest_speedup": round(speedup, 2)})
+        rows.extend(_mutation_sweep(size))
     if out_path is not None:
         out_path.write_text(json.dumps(rows, indent=2) + "\n")
         print(f"ingest benchmark -> {out_path}")

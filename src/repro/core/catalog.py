@@ -16,6 +16,12 @@ import numpy as np
 
 from repro.engine.table import ColumnMeta, Table
 
+# Engine-internal per-row columns that must never surface in query envs,
+# schemas, or statistics: the padding/validity mask and the anti-matter
+# (tombstone) flag mutated runs carry. One authoritative tuple — every
+# "skip internal columns" site references it.
+INTERNAL_COLUMNS = ("__valid__", "__antimatter__")
+
 
 @dataclasses.dataclass
 class IndexInfo:
@@ -51,11 +57,30 @@ class Dataset:
     # queries over a fed dataset execute as base ∪ runs (UnionRuns plan node)
     # until compaction folds them back into ``table``.
     runs: list["Dataset"] = dataclasses.field(default_factory=list)
-    live_rows: Optional[int] = None  # valid-row count (None -> len(table))
+    live_rows: Optional[int] = None  # matter-row count (None -> len(table))
+    # -- anti-matter (delete/upsert) bookkeeping ----------------------------
+    # A mutated run carries tombstones: its table holds anti-matter rows
+    # (``__antimatter__`` True, ``__valid__`` False — invisible to every
+    # matter path) and ``anti_keys_arr`` is the same key set as a sorted
+    # device array for query-time visibility probes. ``annihilated_*`` track
+    # THIS component's matter shadowed by strictly-newer components' anti-
+    # matter (maintained at flush time, O(tombstones·log n)); the stats
+    # layer discounts them so cost estimates and compaction triggers see
+    # visible rows, not raw storage.
+    anti_rows: int = 0                       # tombstones this component holds
+    anti_keys_arr: Optional[object] = None   # sorted device array of anti keys
+    annihilated_rows: int = 0                # own matter shadowed by newer anti
+    annihilated_keys: set = dataclasses.field(default_factory=set)
+    host_keys: Optional[object] = None       # host copy of the sorted matter
+    #                                          primary keys (clustered order)
+    level: int = 0                           # LSM level (leveled compaction)
 
     @property
     def num_live_rows(self) -> int:
-        return self.live_rows if self.live_rows is not None else len(self.table)
+        """Visible matter rows: physical matter minus rows newer anti-matter
+        has annihilated."""
+        matter = self.live_rows if self.live_rows is not None else len(self.table)
+        return max(matter - self.annihilated_rows, 0)
 
     def index_on(self, column: str) -> Optional[IndexInfo]:
         for ix in self.indexes.values():

@@ -30,9 +30,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import physical as PH
-from repro.core.catalog import Catalog
+from repro.core.catalog import INTERNAL_COLUMNS, Catalog
 from repro.core.expr import collect_params, param_values
 from repro.engine import physical
 
@@ -76,6 +77,11 @@ class LoweringStrategy:
         from repro.engine.index import index_count_local
         nv = jnp.sum(valid, dtype=jnp.int32)
         return index_count_local(ix_keys, nv, lo, hi)
+
+    def shadow_count(self, ix_keys, valid, anti_keys, lo, hi):
+        from repro.engine.index import shadow_count_local
+        nv = jnp.sum(valid, dtype=jnp.int32)
+        return shadow_count_local(ix_keys, nv, anti_keys, lo, hi)
 
     def join_count(self, lkey, lmask, rkey, rmask, presorted):
         if presorted:
@@ -151,6 +157,11 @@ class ShardMapStrategy(LoweringStrategy):
         return D.dist_index_count(self.mesh, self.data_axes, ix_keys, valid,
                                   lo, hi)
 
+    def shadow_count(self, ix_keys, valid, anti_keys, lo, hi):
+        from repro.engine import distributed as D
+        return D.dist_shadow_count(self.mesh, self.data_axes, ix_keys, valid,
+                                   anti_keys, lo, hi)
+
     def join_count(self, lkey, lmask, rkey, rmask, presorted):
         from repro.engine import distributed as D
         return D.dist_join_count(self.mesh, self.data_axes, lkey, lmask,
@@ -197,6 +208,11 @@ class CompiledQuery:
     leaf_keys: list             # dataset keys feeding `tables` (pruned runs excluded)
     lits: list                  # literal slots (physical plan order)
     raw_fn: Callable = None     # unjitted build (jaxpr inspection in tests)
+    anti_keys: list = dataclasses.field(default_factory=list)
+    #                             components whose sorted anti-key arrays the
+    #                             plan subtracts with (may include runs whose
+    #                             MATTER was zone-pruned — their tombstones
+    #                             still annihilate into older components)
 
     def gather_tables(self, catalog: Catalog) -> dict:
         tables = {}
@@ -207,6 +223,9 @@ class CompiledQuery:
                 if ix.sorted_keys is not None:
                     tables[f"{key[0]}.{key[1]}"][f"__ix_{ix.column}__"] = ix.sorted_keys
                     tables[f"{key[0]}.{key[1]}"][f"__ixid_{ix.column}__"] = ix.row_ids
+        for key in self.anti_keys:
+            ds = catalog.get(*key)
+            tables[f"anti:{key[0]}.{key[1]}"] = ds.anti_keys_arr
         return tables
 
     def run(self, catalog: Catalog, lits=None, params=None):
@@ -227,7 +246,8 @@ def compile_physical(logical, phys: PH.PhysOp, ctx: ExecContext) -> CompiledQuer
     kind, build = _lower_terminal(phys, ctx)
     jitted = jax.jit(build)
     return CompiledQuery(logical, phys, phys.fingerprint(), kind, jitted,
-                         leaf_keys, lits, raw_fn=build)
+                         leaf_keys, lits, raw_fn=build,
+                         anti_keys=PH.anti_leaves(phys))
 
 
 def compile_plan(opt_plan, ctx: ExecContext, *, enable_index: bool = True,
@@ -255,7 +275,7 @@ def compile_plan(opt_plan, ctx: ExecContext, *, enable_index: bool = True,
 
 def _env_of(cols: dict, open_cast: bool):
     env = {k: v for k, v in cols.items()
-           if k != "__valid__" and not k.startswith("__ix")}
+           if k not in INTERNAL_COLUMNS and not k.startswith("__ix")}
     if open_cast:  # schema-on-read: pay a widen/cast per access
         env = {k: (v.astype(jnp.float32) if jnp.issubdtype(v.dtype, jnp.integer)
                    and v.ndim == 1 else v) for k, v in env.items()}
@@ -264,23 +284,47 @@ def _env_of(cols: dict, open_cast: bool):
     return env, mask
 
 
+def _shadowed(tables: dict, keys, shadow_sources) -> "jax.Array":
+    """True where a row's primary key appears in any newer component's
+    sorted anti-key set — the newest-wins subtraction every matter stream
+    applies. One batched binary search per tombstone set; mode-independent
+    (the anti arrays are replicated, so gspmd/shard_map/kernel agree
+    bit-for-bit)."""
+    hit = None
+    for dv, name in shadow_sources:
+        ak = tables[f"anti:{dv}.{name}"]
+        k = keys.astype(ak.dtype)
+        pos = jnp.minimum(jnp.searchsorted(ak, k, side="left"),
+                          ak.shape[0] - 1)
+        h = ak[pos] == k
+        hit = h if hit is None else (hit | h)
+    return hit
+
+
 def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
     """Returns fn(tables, params) -> (env, mask). Filters never compact
     (selection-vector execution; DESIGN.md §2)."""
     if isinstance(node, PH.TableScan):
         key = f"{node.dataverse}.{node.dataset}"
         open_cast = node.open_cast
+        shadow, key_col = node.shadow_sources, node.key_col
 
         def fn(tables, params):
-            return _env_of(tables[key], open_cast)
+            env, mask = _env_of(tables[key], open_cast)
+            if shadow:
+                mask = mask & ~_shadowed(tables, tables[key][key_col], shadow)
+            return env, mask
         return fn
 
     if isinstance(node, PH.IndexProbe):
         key = f"{node.dataverse}.{node.dataset}"
         open_cast = node.open_cast
+        shadow, key_col = node.shadow_sources, node.key_col
 
         def fn(tables, params):
             env, mask = _env_of(tables[key], open_cast)
+            if shadow:
+                mask = mask & ~_shadowed(tables, tables[key][key_col], shadow)
             keys_col = env[node.index_col]
             lo = node.lo.evaluate(env, params) if node.lo is not None else None
             hi = node.hi.evaluate(env, params) if node.hi is not None else None
@@ -486,6 +530,24 @@ def _lower_terminal(node: PH.PhysOp, ctx: ExecContext) -> tuple[str, Callable]:
             return res
         return "scalar", fn
 
+    if isinstance(node, PH.SubtractScalars):
+        # anti-matter subtraction: visible = all matter − shadowed matter,
+        # computed by two scalar programs over the same component.
+        kind_a, minuend = _lower_terminal(node.children[0], ctx)
+        kind_b, subtrahend = _lower_terminal(node.children[1], ctx)
+        assert kind_a == kind_b == "scalar", (kind_a, kind_b)
+        names = node.names
+
+        def fn(tables, params):
+            a = minuend(tables, params)
+            b = subtrahend(tables, params)
+            return {n: (a[n] - b[n]).astype(a[n].dtype)
+                    if n in names and n in b else a[n] for n in a}
+        return "scalar", fn
+
+    if isinstance(node, PH.ShadowProbeCount):
+        return "scalar", _lower_shadow_probe_count(node, ctx)
+
     if isinstance(node, PH.KernelRangeCount):
         return "scalar", _lower_kernel_range_count(node, ctx)
 
@@ -528,22 +590,57 @@ def _lower_kernel_range_count(node: PH.KernelRangeCount, ctx: ExecContext) -> Ca
     columns + a (k, 2) runtime bounds operand. The column read bypasses the
     generic stream path so NO row mask is ever built outside the kernel —
     when the base table carries a ``__valid__`` padding column it folds in as
-    one extra kernel row with bounds (1, 1)."""
+    one extra kernel row with bounds (1, 1). Newer components' anti-matter
+    folds into the SAME row: the matter mask (valid ∧ not-shadowed) is the
+    subtract-at-merge term, evaluated by the kernel itself."""
     key = f"{node.dataverse}.{node.dataset}"
     cols, los, his, has_valid = node.cols, node.los, node.his, node.has_valid
+    shadow, key_col = node.shadow_sources, node.key_col
 
     def fn(tables, params):
         t = tables[key]
         rows = [t[c].astype(jnp.int32) for c in cols]
         lo_vals = [jnp.asarray(e.evaluate({}, params), jnp.int32) for e in los]
         hi_vals = [jnp.asarray(e.evaluate({}, params), jnp.int32) for e in his]
-        if has_valid:
-            rows.append(t["__valid__"].astype(jnp.int32))
+        if has_valid or shadow:
+            n = rows[0].shape[0]
+            matter = t["__valid__"] if has_valid \
+                else jnp.ones((n,), jnp.bool_)
+            if shadow:
+                matter = matter & ~_shadowed(tables, t[key_col], shadow)
+            rows.append(matter.astype(jnp.int32))
             lo_vals.append(jnp.int32(1))
             hi_vals.append(jnp.int32(1))
         mat = jnp.stack(rows)
         bounds = jnp.stack([jnp.stack(lo_vals), jnp.stack(hi_vals)], axis=1)
         cnt = ctx.strategy.kernel_filter_count(mat, bounds)
+        return {"count": cnt.astype(jnp.int32)}
+    return fn
+
+
+def _lower_shadow_probe_count(node: PH.ShadowProbeCount, ctx: ExecContext) -> Callable:
+    """The index-only subtrahend: the deduplicated union of the newer
+    components' anti-key sets (a key may be tombstoned twice — a row must
+    die exactly once), clipped to the predicate range, counts each
+    tombstone's matter occurrences in this component's sorted primary index
+    with two binary searches. The anti arrays are immutable for the life of
+    the plan (the executable is stats-epoch keyed), so the sorted-unique
+    union is computed ONCE here on the host and baked in as a constant —
+    never re-sorted per query."""
+    key = f"{node.dataverse}.{node.dataset}"
+    ix_name = f"__ix_{node.index_col}__"
+    anti_union = np.unique(np.concatenate(
+        [np.asarray(ctx.catalog.get(dv, name).anti_keys_arr)
+         for dv, name in node.shadow_sources]))
+
+    def fn(tables, params):
+        t = tables[key]
+        ix_keys = t[ix_name]
+        valid = t.get("__valid__", jnp.ones((ix_keys.shape[0],), jnp.bool_))
+        anti = jnp.asarray(anti_union).astype(ix_keys.dtype)
+        lo = node.lo.evaluate({}, params) if node.lo is not None else None
+        hi = node.hi.evaluate({}, params) if node.hi is not None else None
+        cnt = ctx.strategy.shadow_count(ix_keys, valid, anti, lo, hi)
         return {"count": cnt.astype(jnp.int32)}
     return fn
 

@@ -229,7 +229,9 @@ class AFrame:
                 return [n for n, _ in node.outputs]
             if isinstance(node, (P.Scan,)):
                 ds = self._session.catalog.get(node.dataverse, node.dataset)
-                return [c for c in ds.table.column_names() if c != "__valid__"]
+                from repro.core.catalog import INTERNAL_COLUMNS
+                return [c for c in ds.table.column_names()
+                        if c not in INTERNAL_COLUMNS]
             if not node.children:
                 raise ValueError("cannot infer columns")
             node = node.children[0]

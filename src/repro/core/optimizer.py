@@ -215,9 +215,13 @@ def _prune_columns(node: P.Plan, catalog: Catalog, needed: set[str] | None = Non
     if isinstance(node, P.Scan):
         if needed is None:
             return node
+        from repro.core.catalog import INTERNAL_COLUMNS
+
         ds = catalog.get(node.dataverse, node.dataset)
-        cols = [c for c in ds.table.column_names() if c in needed and c != "__valid__"]
-        if set(cols) >= set(n for n in ds.table.column_names() if n != "__valid__"):
+        cols = [c for c in ds.table.column_names()
+                if c in needed and c not in INTERNAL_COLUMNS]
+        if set(cols) >= set(n for n in ds.table.column_names()
+                            if n not in INTERNAL_COLUMNS):
             return node
         return P.Project(node, [(c, Col(c)) for c in cols])
 

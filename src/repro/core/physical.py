@@ -30,18 +30,31 @@ from repro.core.expr import Expr
 @dataclasses.dataclass(frozen=True)
 class PrunedComponent:
     """One LSM component the planner dropped at bind time, with the zone-map
-    rationale (recorded for explain; the compiled plan never reads it)."""
+    rationale (recorded for explain; the compiled plan never reads it).
+
+    Pruning is mutation-safe because it reasons per key-visibility: only the
+    component's *matter* contribution is dropped (zone spans cover matter
+    only, and a span miss proves zero visible matching rows). Its anti-matter
+    — which annihilates *into* older components — is never pruned: surviving
+    scans keep the pruned run's tombstone set among their shadow sources, so
+    the subtraction still happens. ``tombstones`` records that retention for
+    the explain rationale."""
 
     address: str
     column: str
     span: tuple          # the run's zone span [lo, hi]
     bound: tuple         # the predicate's effective [lo, hi] at bind time
     rows: int            # live rows the pruned run holds
+    tombstones: int = 0  # anti-matter records the run keeps contributing
 
     def describe(self) -> str:
-        return (f"{self.address} PRUNED: zone span {self.column}∈"
-                f"[{self.span[0]}, {self.span[1]}] misses predicate "
-                f"[{self.bound[0]}, {self.bound[1]}] ({self.rows} rows skipped)")
+        out = (f"{self.address} PRUNED: zone span {self.column}∈"
+               f"[{self.span[0]}, {self.span[1]}] misses predicate "
+               f"[{self.bound[0]}, {self.bound[1]}] ({self.rows} rows skipped)")
+        if self.tombstones:
+            out += (f"; {self.tombstones} anti-matter record(s) RETAINED — "
+                    f"they still subtract from older components")
+        return out
 
 
 class PhysOp:
@@ -91,35 +104,72 @@ def scan_leaves(node: PhysOp) -> list[tuple[str, str]]:
     return keys
 
 
+def anti_leaves(node: PhysOp) -> list[tuple[str, str]]:
+    """Components whose anti-matter key sets the plan subtracts with. A
+    matter-pruned run can still appear here: its tombstones annihilate into
+    surviving older components, so its anti array must be gathered even
+    though its table is not."""
+    keys: list[tuple[str, str]] = []
+    for n in walk(node):
+        for key in getattr(n, "shadow_sources", ()):
+            if key not in keys:
+                keys.append(key)
+    return keys
+
+
+def _shadow_fp(shadow_sources) -> str:
+    return "|".join(f"{dv}.{name}" for dv, name in shadow_sources)
+
+
 # -- stream operators (produce (env, mask)) ---------------------------------
 
 
 class TableScan(PhysOp):
-    def __init__(self, dataverse: str, dataset: str, open_cast: bool = False):
+    """Full component scan. ``shadow_sources`` are the newer LSM components
+    whose anti-matter annihilates into this one: the lowering subtracts the
+    shadowed rows from the stream mask (a sorted-probe per source on the
+    ``key_col`` primary key), so every operator above sees only visible
+    matter — in all three execution modes."""
+
+    def __init__(self, dataverse: str, dataset: str, open_cast: bool = False,
+                 key_col: Optional[str] = None,
+                 shadow_sources: tuple = ()):
         self.dataverse, self.dataset, self.open_cast = dataverse, dataset, open_cast
+        self.key_col = key_col
+        self.shadow_sources = tuple(shadow_sources)
 
     @property
     def source_key(self):
         return (self.dataverse, self.dataset)
 
     def fingerprint(self):
-        return f"p:scan({self.dataverse}.{self.dataset},{int(self.open_cast)})"
+        return (f"p:scan({self.dataverse}.{self.dataset},{int(self.open_cast)},"
+                f"{self.key_col},{_shadow_fp(self.shadow_sources)})")
 
     def label(self):
-        return f"TableScan {self.dataverse}.{self.dataset}" + \
+        out = f"TableScan {self.dataverse}.{self.dataset}" + \
             (" [open: cast-per-access]" if self.open_cast else "")
+        if self.shadow_sources:
+            out += (f" ⊖ anti-matter of {len(self.shadow_sources)} newer "
+                    f"component(s)")
+        return out
 
 
 class IndexProbe(PhysOp):
     """Streaming access path via an indexed column's range predicate: the
-    bound conjuncts become the index mask, the rest stay residual."""
+    bound conjuncts become the index mask, the rest stay residual. Shadow
+    sources subtract exactly like :class:`TableScan`."""
 
     def __init__(self, dataverse: str, dataset: str, index_col: str,
                  lo: Optional[Expr], hi: Optional[Expr],
-                 residual: Optional[Expr] = None, open_cast: bool = False):
+                 residual: Optional[Expr] = None, open_cast: bool = False,
+                 key_col: Optional[str] = None,
+                 shadow_sources: tuple = ()):
         self.dataverse, self.dataset, self.index_col = dataverse, dataset, index_col
         self.lo, self.hi, self.residual = lo, hi, residual
         self.open_cast = open_cast
+        self.key_col = key_col
+        self.shadow_sources = tuple(shadow_sources)
 
     @property
     def source_key(self):
@@ -133,13 +183,18 @@ class IndexProbe(PhysOp):
         hi = self.hi.fingerprint() if self.hi else "+inf"
         res = self.residual.fingerprint() if self.residual else ""
         return (f"p:ixprobe({self.dataverse}.{self.dataset},{self.index_col},"
-                f"{lo},{hi},{res},{int(self.open_cast)})")
+                f"{lo},{hi},{res},{int(self.open_cast)},{self.key_col},"
+                f"{_shadow_fp(self.shadow_sources)})")
 
     def label(self):
         bounds = f"{self.index_col} ∈ [{'-∞' if self.lo is None else '?'}, " \
                  f"{'+∞' if self.hi is None else '?'}]"
         res = " +residual" if self.residual is not None else ""
-        return f"IndexProbe {self.dataverse}.{self.dataset} ({bounds}{res})"
+        out = f"IndexProbe {self.dataverse}.{self.dataset} ({bounds}{res})"
+        if self.shadow_sources:
+            out += (f" ⊖ anti-matter of {len(self.shadow_sources)} newer "
+                    f"component(s)")
+        return out
 
 
 class FullScanFilter(PhysOp):
@@ -352,17 +407,78 @@ class IndexOnlyCount(PhysOp):
                 f"on {self.index_col} [binary search]")
 
 
+class ShadowProbeCount(PhysOp):
+    """The subtrahend of anti-matter subtraction on the index-only path:
+    COUNT of this component's matter rows with primary key ∈ [lo, hi] that
+    newer components' anti-matter shadows. Still index-only — the unioned
+    (deduplicated) anti keys probe the component's sorted primary index,
+    two binary searches per tombstone, never touching base columns."""
+
+    def __init__(self, dataverse: str, dataset: str, index_col: str,
+                 lo: Optional[Expr], hi: Optional[Expr],
+                 shadow_sources: tuple):
+        self.dataverse, self.dataset, self.index_col = dataverse, dataset, index_col
+        self.lo, self.hi = lo, hi
+        self.shadow_sources = tuple(shadow_sources)
+
+    @property
+    def source_key(self):
+        return (self.dataverse, self.dataset)
+
+    def exprs(self):
+        return [e for e in (self.lo, self.hi) if e is not None]
+
+    def fingerprint(self):
+        lo = self.lo.fingerprint() if self.lo else "-inf"
+        hi = self.hi.fingerprint() if self.hi else "+inf"
+        return (f"p:shadowprobe({self.dataverse}.{self.dataset},"
+                f"{self.index_col},{lo},{hi},"
+                f"{_shadow_fp(self.shadow_sources)})")
+
+    def label(self):
+        return (f"ShadowProbeCount {self.dataverse}.{self.dataset} "
+                f"on {self.index_col} [{len(self.shadow_sources)} anti "
+                f"set(s), binary search]")
+
+
+class SubtractScalars(PhysOp):
+    """Anti-matter subtraction at the scalar merge: result = minuend −
+    subtrahend per output (sum-merged outputs only — counts and sums; an
+    extremum is never subtractable and takes the mask path instead). This
+    is what keeps a component's index-only access path valid after newer
+    components deleted/upserted into it."""
+
+    def __init__(self, child: PhysOp, shadow: PhysOp,
+                 names: Sequence[str] = ("count",)):
+        self.children = (child, shadow)
+        self.names = tuple(names)
+
+    def fingerprint(self):
+        return (f"p:subtract([{','.join(self.names)}],"
+                f"{self.children[0].fingerprint()},"
+                f"{self.children[1].fingerprint()})")
+
+    def label(self):
+        return f"SubtractScalars [{', '.join(self.names)}] [anti-matter]"
+
+
 class KernelRangeCount(PhysOp):
     """COUNT of conjunctive inclusive ranges over integer columns lowered
     onto the filter_count Pallas kernel: one (k, n) tile pass, bounds as a
-    (k, 2) runtime operand, no mask column in HBM."""
+    (k, 2) runtime operand, no mask column in HBM. With shadow sources the
+    matter/visibility mask folds in as ONE extra kernel row with bounds
+    (1, 1) — the kernel itself performs the subtract-at-merge."""
 
     def __init__(self, dataverse: str, dataset: str, cols: Sequence[str],
-                 los: Sequence[Expr], his: Sequence[Expr], has_valid: bool):
+                 los: Sequence[Expr], his: Sequence[Expr], has_valid: bool,
+                 key_col: Optional[str] = None,
+                 shadow_sources: tuple = ()):
         self.dataverse, self.dataset = dataverse, dataset
         self.cols = tuple(cols)
         self.los, self.his = tuple(los), tuple(his)
         self.has_valid = has_valid
+        self.key_col = key_col
+        self.shadow_sources = tuple(shadow_sources)
 
     @property
     def source_key(self):
@@ -376,11 +492,15 @@ class KernelRangeCount(PhysOp):
 
     def fingerprint(self):
         return (f"p:krangecount({self.dataverse}.{self.dataset},"
-                f"[{','.join(self.cols)}],{int(self.has_valid)})")
+                f"[{','.join(self.cols)}],{int(self.has_valid)},"
+                f"{self.key_col},{_shadow_fp(self.shadow_sources)})")
 
     def label(self):
-        return (f"KernelRangeCount {self.dataverse}.{self.dataset} "
-                f"[{', '.join(self.cols)}] [filter_count kernel]")
+        out = (f"KernelRangeCount {self.dataverse}.{self.dataset} "
+               f"[{', '.join(self.cols)}] [filter_count kernel]")
+        if self.shadow_sources:
+            out += " [matter-mask row folded]"
+        return out
 
 
 class ScalarAgg(PhysOp):
@@ -481,7 +601,7 @@ def prune_report(root: PhysOp) -> dict:
     """Aggregate pruning metrics over a physical plan (benchmarks / CI smoke
     read this): component counts and physical rows touched vs. skipped."""
     components = pruned = 0
-    rows_pruned = 0
+    rows_pruned = tombstones_retained = 0
     for node in walk(root):
         p = getattr(node, "pruned", None)
         if p is None:
@@ -489,8 +609,10 @@ def prune_report(root: PhysOp) -> dict:
         components += len(node.children) + len(p)
         pruned += len(p)
         rows_pruned += sum(pc.rows for pc in p)
+        tombstones_retained += sum(pc.tombstones for pc in p)
     rows_touched = sum(int(n.rows_touched) for n in walk(root)
                        if getattr(n, "source_key", None) is not None)
     return {"components": components, "pruned": pruned,
             "rows_pruned": rows_pruned, "rows_touched": rows_touched,
+            "tombstones_retained": tombstones_retained,
             "total_cost": root.total_cost()}

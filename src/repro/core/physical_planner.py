@@ -63,6 +63,8 @@ C_ROW_SORT = 8.0       # full-sort per row (n log n folded into the constant)
 C_ROW_JOIN = 4.0       # sort+searchsorted join per row
 C_KERNEL_LAUNCH = 64.0  # fixed per kernel launch
 C_PROBE = 24.0         # one binary-search probe pair (per component)
+C_TOMBSTONE = 0.05     # per anti-matter key: one probe pair in a batched
+#                        searchsorted (visibility masks / shadow subtraction)
 
 DEFAULT_EQ_SELECTIVITY = 0.1
 DEFAULT_RANGE_SELECTIVITY = 0.33
@@ -140,6 +142,10 @@ class _CompDesc:
     spans: dict[str, tuple]
     constraints: list[_Constraint]
     prunable: bool
+    tombstones: int = 0  # anti-matter the component retains even when its
+    #                      matter is pruned (key-visibility reasoning: a span
+    #                      miss proves zero visible MATTER, never zero
+    #                      annihilation into older components)
 
 
 @dataclasses.dataclass
@@ -204,7 +210,7 @@ class Pruner:
                             record = PH.PrunedComponent(
                                 address=comp.address, column=con.column,
                                 span=span, bound=con.bound_repr(v),
-                                rows=comp.rows)
+                                rows=comp.rows, tombstones=comp.tombstones)
                             break
                 if record is None:
                     surviving.append(i)
@@ -312,7 +318,8 @@ def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list) -> Pruner:
                         constraints.append(_Constraint(origin, c.op,
                                                        lit_ref(r)))
             comps.append(_CompDesc(stats.address, stats.rows, spans,
-                                   constraints, prunable=True))
+                                   constraints, prunable=True,
+                                   tombstones=stats.tombstones))
         unions.append(_UnionDesc(ordinals[id(node)], comps))
     return Pruner(unions)
 
@@ -358,14 +365,47 @@ def _scan_stats(ctx: _PlannerCtx, node) -> Optional[TableStats]:
     return ctx.stats(node.dataverse, node.dataset)
 
 
+def _component_shadow(ctx: _PlannerCtx, dataverse: str, dataset: str):
+    """Anti-matter shadowing info for one LSM component: the primary key the
+    visibility probes compare on, the strictly-newer components that hold
+    tombstones (their anti sets must subtract from this component), and the
+    total tombstone count (for costing). Newest-wins is an ORDER property:
+    base < run0 < run1 < …, and only newer anti-matter annihilates."""
+    base_name = dataset.split("@")[0]
+    try:
+        base = ctx.catalog.get(dataverse, base_name)
+    except KeyError:
+        return None, (), 0
+    primary = base.primary_index
+    if primary is None or not base.runs:
+        return (primary.column if primary is not None else None), (), 0
+    ordinal = 0 if "@" not in dataset \
+        else int(dataset.split("@run", 1)[1]) + 1
+    sources: list[tuple[str, str]] = []
+    total = 0
+    for i, r in enumerate(base.runs):
+        if i + 1 > ordinal and r.anti_rows:
+            sources.append((dataverse, f"{base_name}@run{i}"))
+            total += r.anti_rows
+    return primary.column, tuple(sources), total
+
+
 def _plan_scan(node: P.Scan, ctx: _PlannerCtx) -> PH.PhysOp:
     stats = _scan_stats(ctx, node)
     ds = ctx.catalog.get(node.dataverse, node.dataset)
-    out = PH.TableScan(node.dataverse, node.dataset, open_cast=not ds.closed)
+    key_col, shadow, n_anti = _component_shadow(ctx, node.dataverse,
+                                                node.dataset)
+    out = PH.TableScan(node.dataverse, node.dataset, open_cast=not ds.closed,
+                       key_col=key_col if shadow else None,
+                       shadow_sources=shadow)
     if stats is not None:
         out.est_rows = stats.rows
         out.rows_touched = stats.padded_rows
-        out.cost = stats.padded_rows * C_ROW_SCAN
+        out.cost = stats.padded_rows * C_ROW_SCAN + n_anti * C_TOMBSTONE
+    if shadow:
+        out.note = (f"newest-wins: {n_anti} tombstone(s) in "
+                    f"{len(shadow)} newer component(s) subtract from this "
+                    f"scan's mask")
     return out
 
 
@@ -396,13 +436,21 @@ def _plan_filter(node: P.Filter, ctx: _PlannerCtx) -> PH.PhysOp:
                     from repro.core.expr import BoolOp
                     res_expr = r if res_expr is None else BoolOp("AND", res_expr, r)
                 ds = ctx.catalog.get(inner.dataverse, inner.dataset)
+                key_col, shadow, n_anti = _component_shadow(
+                    ctx, inner.dataverse, inner.dataset)
                 probe = PH.IndexProbe(inner.dataverse, inner.dataset, colname,
-                                      lo, hi, res_expr, open_cast=not ds.closed)
+                                      lo, hi, res_expr, open_cast=not ds.closed,
+                                      key_col=key_col if shadow else None,
+                                      shadow_sources=shadow)
                 probe.est_rows = max(
                     stats.rows * _filter_selectivity(node.predicate, stats), 1)
                 probe.rows_touched = stats.padded_rows
-                probe.cost = stats.padded_rows * C_ROW_SCAN
+                probe.cost = stats.padded_rows * C_ROW_SCAN \
+                    + n_anti * C_TOMBSTONE
                 probe.note = f"index {cs.index}:{colname} bounds the stream"
+                if shadow:
+                    probe.note += (f" — {n_anti} newer tombstone(s) subtract "
+                                   f"from the mask")
                 if proj is None:
                     return probe
                 # mask-then-project ≡ project-then-mask for identity outputs
@@ -636,6 +684,8 @@ def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
         if stats is not None:
             conjuncts = _split_conjuncts(pred)
             sel = _filter_selectivity(pred, stats)
+            key_col, shadow, n_anti = _component_shadow(
+                ctx, inner.dataverse, inner.dataset)
             if ctx.enable_index:
                 for colname, cs in stats.columns.items():
                     if cs.index is None:
@@ -646,20 +696,49 @@ def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
                     lo, hi, residual = found
                     if residual:
                         continue  # residual conjuncts: not index-only
-                    cand = PH.IndexOnlyCount(inner.dataverse, inner.dataset,
-                                             colname, lo, hi)
+                    if shadow and colname != key_col:
+                        # newer anti-matter shadows rows of this component by
+                        # PRIMARY key; a secondary index alone cannot tell
+                        # which of its matching entries died — only the
+                        # primary index supports index-only subtraction. The
+                        # mask/kernel candidates below stay valid.
+                        continue
+                    cand: PH.PhysOp = PH.IndexOnlyCount(
+                        inner.dataverse, inner.dataset, colname, lo, hi)
                     cand.est_rows = max(stats.rows * sel, 1)
                     cand.rows_touched = cand.est_rows
                     cand.cost = C_PROBE + math.log2(max(stats.padded_rows, 2))
                     cand.note = f"index-only: sorted {cs.index} index on {colname}"
+                    if shadow:
+                        sub = PH.ShadowProbeCount(inner.dataverse,
+                                                  inner.dataset, colname,
+                                                  lo, hi, shadow)
+                        sub.est_rows = min(n_anti, cand.est_rows)
+                        sub.cost = C_PROBE + n_anti * C_TOMBSTONE
+                        sub.note = (f"{n_anti} tombstone(s) from "
+                                    f"{len(shadow)} newer component(s) probe "
+                                    f"the primary index")
+                        wrapped = PH.SubtractScalars(cand, sub)
+                        wrapped.est_rows = cand.est_rows
+                        wrapped.cost = 0.5
+                        wrapped.note = ("anti-matter subtraction: count = "
+                                        "index-only matches − matches newer "
+                                        "tombstones shadow")
+                        cand = wrapped
                     candidates.append(cand)
             if ctx.kernels:
-                krc = _try_kernel_range_count(inner, pred, stats, ctx)
+                krc = _try_kernel_range_count(inner, pred, stats, ctx,
+                                              key_col if shadow else None,
+                                              shadow)
                 if krc is not None:
                     krc.est_rows = max(stats.rows * sel, 1)
                     krc.rows_touched = stats.padded_rows
                     krc.cost = C_KERNEL_LAUNCH \
-                        + stats.padded_rows * C_ROW_KERNEL
+                        + stats.padded_rows * C_ROW_KERNEL \
+                        + n_anti * C_TOMBSTONE
+                    if shadow:
+                        krc.note = (f"matter mask folds {n_anti} newer "
+                                    f"tombstone(s) into one kernel row")
                     candidates.append(krc)
 
     generic = PH.MaskCount(_plan_stream(child, ctx), pred)
@@ -680,7 +759,10 @@ def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
 
 
 def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
-                            ctx: _PlannerCtx) -> Optional[PH.KernelRangeCount]:
+                            ctx: _PlannerCtx,
+                            key_col: Optional[str] = None,
+                            shadow_sources: tuple = ()
+                            ) -> Optional[PH.KernelRangeCount]:
     """COUNT whose predicate fully decomposes into ``Col {==,>=,<=} Lit``
     conjuncts on int32-provable integer columns → filter_count kernel.
     Partial matches never fuse (graceful fallback to the mask path)."""
@@ -721,7 +803,8 @@ def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
     ds = ctx.catalog.get(scan.dataverse, scan.dataset)
     has_valid = "__valid__" in ds.table.columns
     return PH.KernelRangeCount(scan.dataverse, scan.dataset, cols, los, his,
-                               has_valid)
+                               has_valid, key_col=key_col,
+                               shadow_sources=shadow_sources)
 
 
 def _plan_join_count(lnode: P.Plan, rnode: P.Plan, left_on: str, right_on: str,

@@ -25,7 +25,7 @@ from typing import Mapping, Optional
 
 import numpy as np
 
-from repro.core.catalog import Catalog, Dataset
+from repro.core.catalog import INTERNAL_COLUMNS, Catalog, Dataset
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,15 +57,22 @@ class ColumnStats:
 class TableStats:
     """Statistics for one storage component (base table, LSM run, or view).
 
-    ``rows`` counts live rows; ``padded_rows`` is the physical (block-padded,
+    ``rows`` counts *visible* rows — matter minus what newer components'
+    anti-matter annihilated; ``padded_rows`` is the physical (block-padded,
     shard-padded) length every full-scan operator actually touches —
-    the quantity the cost model charges for."""
+    the quantity the cost model charges for. ``tombstones`` counts the
+    anti-matter records this component carries (they subtract from older
+    components at query time); ``shadowed`` counts this component's own
+    matter newer anti-matter annihilated (already discounted from
+    ``rows``)."""
 
     address: str                 # "dataverse.name" (runs: "dv.name@run<i>")
     rows: int
     padded_rows: int
     columns: Mapping[str, ColumnStats]
     kind: str = "dataset"        # dataset | run | view
+    tombstones: int = 0
+    shadowed: int = 0
 
     def column(self, name: str) -> Optional[ColumnStats]:
         return self.columns.get(name)
@@ -87,7 +94,7 @@ def harvest(ds: Dataset) -> TableStats:
     """Uniform stats harvest for a base dataset or an LSM run."""
     cols: dict[str, ColumnStats] = {}
     for name, meta in ds.table.meta.items():
-        if name == "__valid__":
+        if name in INTERNAL_COLUMNS:
             continue
         ix = ds.index_on(name)
         cols[name] = ColumnStats(
@@ -99,7 +106,9 @@ def harvest(ds: Dataset) -> TableStats:
                       rows=ds.num_live_rows,
                       padded_rows=len(ds.table),
                       columns=cols,
-                      kind="run" if "@" in ds.name else "dataset")
+                      kind="run" if "@" in ds.name else "dataset",
+                      tombstones=ds.anti_rows,
+                      shadowed=ds.annihilated_rows)
 
 
 def component_stats(catalog: Catalog, dataverse: str, name: str) -> TableStats:

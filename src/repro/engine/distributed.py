@@ -345,3 +345,27 @@ def dist_index_count(mesh: Mesh, data_axes, sorted_keys, valid, lo, hi):
     hi_a = jnp.asarray(hi if hi is not None else 0)
     return _smap(mesh, data_axes, local, (P(dp), P(dp), P(), P()), P())(
         sorted_keys, valid, lo_a, hi_a)
+
+
+def dist_shadow_count(mesh: Mesh, data_axes, sorted_keys, valid, anti_keys,
+                      lo, hi):
+    """Anti-matter subtrahend of the index-only count: the (replicated,
+    pre-deduplicated) tombstone keys probe each shard's sorted primary
+    index, per-shard occurrence counts psum — the same collective shape as
+    :func:`dist_index_count`."""
+    from repro.engine.index import shadow_count_local
+
+    dp = _dp(data_axes)
+
+    def local(sk, v, ak, lo_, hi_):
+        nv = jnp.sum(v, dtype=jnp.int32)
+        c = shadow_count_local(sk, nv, ak,
+                               lo_ if lo is not None else None,
+                               hi_ if hi is not None else None)
+        return jax.lax.psum(c.astype(jnp.int32), data_axes)
+
+    lo_a = jnp.asarray(lo if lo is not None else 0)
+    hi_a = jnp.asarray(hi if hi is not None else 0)
+    return _smap(mesh, data_axes, local,
+                 (P(dp), P(dp), P(), P(), P()), P())(
+        sorted_keys, valid, anti_keys, lo_a, hi_a)

@@ -66,6 +66,23 @@ def index_count_local(ix_keys: jax.Array, num_valid: jax.Array, lo, hi) -> jax.A
     return jnp.maximum(hi_pos - lo_pos, 0).astype(jnp.int32)
 
 
+def shadow_count_local(ix_keys: jax.Array, num_valid: jax.Array,
+                       anti_keys: jax.Array, lo, hi) -> jax.Array:
+    """Anti-matter subtrahend on one shard: for every tombstone key inside
+    [lo, hi], count its matter occurrences in the sorted (primary) index —
+    two batched binary searches. ``anti_keys`` must already be deduplicated
+    (the compiler bakes in a sorted-unique union: a row dies exactly once)."""
+    l = jnp.minimum(jnp.searchsorted(ix_keys, anti_keys, side="left"), num_valid)
+    r = jnp.minimum(jnp.searchsorted(ix_keys, anti_keys, side="right"), num_valid)
+    occ = jnp.maximum(r - l, 0)
+    keep = jnp.ones(anti_keys.shape, jnp.bool_)
+    if lo is not None:
+        keep = keep & (anti_keys >= lo)
+    if hi is not None:
+        keep = keep & (anti_keys <= hi)
+    return jnp.sum(jnp.where(keep, occ, 0), dtype=jnp.int32)
+
+
 def index_head_rows_local(ix: SortedIndex, num_valid, lo, hi, k: int):
     """First-k row ids in index order within [lo, hi] (for LIMIT pushdown).
 

@@ -9,6 +9,22 @@ re-shard merges every component into the base. Queries see base ∪ runs (the
 ``UnionRuns`` plan node) — the same data before and after compaction,
 exactly like querying an LSM tree across its components. Registered
 materialized views refresh incrementally from each flushed delta.
+
+Mutations follow the engine's anti-matter design (AsterixDB §III):
+
+  * ``Feed.delete(keys)`` buffers an anti-matter record per key — at query
+    or merge time it annihilates every matter record with that key in
+    strictly older components.
+  * ``Feed.upsert(rows)`` buffers an anti-matter record for each row's
+    primary key plus the fresh matter — newest wins: all older rows with
+    the key die, the upserted row survives.
+
+A flush first *normalizes* the buffer (O(batch)): mutations later in the
+buffer annihilate matter earlier in the same buffer on the host, so the
+flushed run holds only intra-batch survivors plus one tombstone per key
+that must still subtract from older components. Flush stays O(batch);
+annihilation of older components is bookkeeping (O(tombstones · log n)),
+never a rewrite.
 """
 from __future__ import annotations
 
@@ -29,10 +45,12 @@ class Feed:
         self.dataverse = dataverse
         self.flush_rows = flush_rows
         self.policy = policy if policy is not None else lsm.CompactionPolicy()
-        self._buffer: list[dict[str, np.ndarray]] = []
+        self._buffer: list[tuple[str, object]] = []  # (kind, payload)
         self._buffered = 0
         self.stats = {"ingested": 0, "flushes": 0, "compactions": 0,
-                      "runs": 0, "run_rows": 0}
+                      "runs": 0, "run_rows": 0,
+                      "upserts": 0, "deletes": 0, "tombstones": 0,
+                      "tombstones_flushed": 0, "level_merges": 0}
 
     # -- ingest ------------------------------------------------------------
 
@@ -43,36 +61,106 @@ class Feed:
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         rows = _validate_batch(rows, ds.table)
         n = len(next(iter(rows.values())))
-        self._buffer.append(rows)
+        self._buffer.append(("push", rows))
         self._buffered += n
         self.stats["ingested"] += n
+        self._maybe_flush()
+
+    def upsert(self, rows: dict[str, np.ndarray]) -> None:
+        """Insert-or-replace by primary key: every older record with one of
+        the batch's keys is annihilated (anti-matter), the batch's rows
+        survive. Duplicate keys *within* the batch resolve newest-wins —
+        only each key's last row is kept."""
+        self._key_column("upsert")  # primary key required; raises without one
+        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        rows = _validate_batch(rows, ds.table)
+        n = len(next(iter(rows.values())))
+        self._buffer.append(("upsert", rows))
+        self._buffered += n
+        self.stats["ingested"] += n
+        self.stats["upserts"] += n
+        self._maybe_flush()
+
+    def delete(self, keys: np.ndarray) -> None:
+        """Delete by primary key: buffers one anti-matter record per key.
+        Deleting an absent key is a no-op (the tombstone annihilates
+        nothing). All matter with the key dies — including duplicates a
+        plain ``push`` appended."""
+        key_col = self._key_column("delete")
+        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        keys = _validate_keys(keys, ds.table, key_col)
+        self._buffer.append(("delete", keys))
+        self._buffered += len(keys)
+        self.stats["deletes"] += len(keys)
+        self._maybe_flush()
+
+    def _key_column(self, op: str) -> str:
+        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        primary = ds.primary_index
+        if primary is None:
+            raise ValueError(
+                f"Feed.{op} needs a primary key on "
+                f"{self.dataverse}.{self.dataset} (anti-matter records "
+                "annihilate by primary key; create the dataset with "
+                "primary=<column>)")
+        return primary.column
+
+    def _maybe_flush(self) -> None:
         if self._buffered >= self.flush_rows:
             self.flush()
 
     def flush(self) -> None:
-        """Move the host buffer into a new device-resident run — O(batch):
-        pad + shard + per-run index build, never touching the base. Views
-        registered on the dataset refresh from the delta; the compaction
-        policy may then fold the components back into the base."""
+        """Normalize the host buffer (intra-batch newest-wins) and move it
+        into a new device-resident run — O(batch): pad + shard + per-run
+        index build, never touching the base. Older components only get
+        their annihilation bookkeeping updated. Views registered on the
+        dataset refresh from the delta (inserts) and the retraction (the
+        old rows the tombstones just annihilated); the compaction policy
+        may then fold components."""
         if not self._buffer:
             return
-        cols = {k: np.concatenate([b[k] for b in self._buffer], axis=0)
-                for k in self._buffer[0]}
+        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        key_col = ds.primary_index.column if ds.primary_index is not None else None
+        cols, anti_keys = _normalize_buffer(self._buffer, ds.table, key_col)
         self._buffer.clear()
         self._buffered = 0
-        ds = self.session.catalog.get(self.dataverse, self.dataset)
-        run = lsm.make_run(self.session, ds, Table(cols))
-        lsm.register_run(self.session, ds, run)
-        self.session.refresh_views(self.dataverse, self.dataset, cols)
+        if not len(next(iter(cols.values()))) and anti_keys is None:
+            return
+        run = lsm.make_run(self.session, ds, Table(cols), anti_keys=anti_keys)
+        retracted = lsm.register_run(self.session, ds, run)
+        self.session.refresh_views(self.dataverse, self.dataset, cols,
+                                   retracted)
         self.stats["flushes"] += 1
         self.stats["runs"] = len(ds.runs)
         self.stats["run_rows"] = sum(r.num_live_rows for r in ds.runs)
-        if lsm.should_compact(ds, self.policy):
-            self.compact()
+        self.stats["tombstones"] = sum(r.anti_rows for r in ds.runs)
+        if anti_keys is not None:  # post-normalization: actually flushed
+            self.stats["tombstones_flushed"] += len(anti_keys)
+        self._apply_policy()
+
+    def _apply_policy(self) -> None:
+        """Run the compaction policy to quiescence: leveled merges may
+        cascade (an L0 fold can overflow L1), the full fold ends it."""
+        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        for _ in range(16):
+            actions = self.policy.plan(ds)
+            if not actions:
+                return
+            act = actions[0]
+            if act[0] == "full":
+                self.compact()
+                return
+            _, start, end, level = act
+            lsm.merge_runs(self.session, ds, start, end, level)
+            self.stats["level_merges"] += 1
+            self.stats["runs"] = len(ds.runs)
+            self.stats["run_rows"] = sum(r.num_live_rows for r in ds.runs)
+            self.stats["tombstones"] = sum(r.anti_rows for r in ds.runs)
 
     def compact(self) -> None:
-        """Merge base ∪ runs into a fresh base (single re-shard + re-sort +
-        index rebuild). Query results are unchanged — the LSM invariant."""
+        """Merge base ∪ runs into a fresh base (single newest-wins merge +
+        re-sort + index rebuild; annihilated matter and tombstones drop).
+        Query results are unchanged — the LSM invariant."""
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         if not ds.runs:
             return
@@ -80,13 +168,85 @@ class Feed:
         self.stats["compactions"] += 1
         self.stats["runs"] = 0
         self.stats["run_rows"] = 0
+        self.stats["tombstones"] = 0
+
+
+def _normalize_buffer(buffer, base: Table, key_col: Optional[str]):
+    """Resolve one flush's worth of interleaved push/upsert/delete batches
+    into (surviving matter columns, sorted unique anti keys or None).
+
+    Newest wins: a matter row survives the buffer iff no strictly LATER
+    batch mutated its key; an upsert batch additionally keeps only each
+    key's last occurrence. One reverse walk accumulates the kill-set of
+    later mutations and masks every matter batch exactly once — O(total ·
+    log tombstones), never quadratic in the batch count. The resulting
+    anti set applies to strictly OLDER components only — survivors in this
+    very flush are newer than the tombstones by construction."""
+    kill: Optional[np.ndarray] = None  # sorted unique keys of later mutations
+    matter: list[tuple[dict, np.ndarray]] = []  # reversed arrival order
+    for kind, payload in reversed(buffer):
+        if kind == "delete":
+            keys = np.unique(np.asarray(payload))
+            kill = keys if kill is None else np.union1d(kill, keys)
+            continue
+        keys = np.asarray(payload[key_col]) if key_col is not None else None
+        if kind == "push":
+            n = len(next(iter(payload.values())))
+            live = np.ones(n, bool)
+        else:  # upsert: last occurrence per key wins within the batch
+            n = keys.shape[0]
+            live = np.zeros(n, bool)
+            _, last_rev = np.unique(keys[::-1], return_index=True)
+            live[n - 1 - last_rev] = True
+        if kill is not None and keys is not None:
+            live &= ~np.isin(keys, kill)
+        matter.append((payload, live))
+        if kind == "upsert":
+            uk = np.unique(keys)
+            kill = uk if kill is None else np.union1d(kill, uk)
+    matter.reverse()
+    schema = [c for c in base.column_names()
+              if c not in lsm.INTERNAL_COLUMNS]
+    out: dict[str, np.ndarray] = {}
+    for c in schema:
+        parts = [np.asarray(cols[c])[m] for cols, m in matter]
+        if parts:
+            out[c] = np.concatenate(parts, axis=0)
+        else:
+            tgt = np.asarray(base.columns[c])
+            shape = (0,) if tgt.ndim == 1 else (0, tgt.shape[1])
+            out[c] = np.zeros(shape, tgt.dtype)
+    return out, kill
+
+
+def _validate_keys(keys, base: Table, key_col: str) -> np.ndarray:
+    """Validate one delete batch: 1-D, losslessly castable to the primary
+    key's stored dtype."""
+    a = np.asarray(keys)
+    if a.ndim != 1:
+        raise ValueError(f"delete keys must be 1-d, got {a.ndim}-d")
+    tdt = np.asarray(base.columns[key_col]).dtype
+    if not np.can_cast(a.dtype, tdt, casting="same_kind"):
+        raise ValueError(
+            f"delete keys: dtype {a.dtype} is not safely castable to "
+            f"primary key dtype {tdt}")
+    cast = a.astype(tdt, copy=False)
+    if cast.dtype != a.dtype:
+        roundtrip = cast.astype(a.dtype, copy=False)
+        if not np.array_equal(roundtrip, a,
+                              equal_nan=np.issubdtype(a.dtype, np.inexact)):
+            raise ValueError(
+                f"delete keys do not fit primary key dtype {tdt} "
+                f"(lossy narrowing from {a.dtype})")
+    return cast
 
 
 def _validate_batch(rows: dict[str, np.ndarray], base: Table) -> dict[str, np.ndarray]:
     """Schema-check one pushed batch against the stored table: exact column
     set, rectangular, dtypes safely castable, string widths matching.
     Returns the batch cast to the base dtypes, in base column order."""
-    schema = [c for c in base.column_names() if c != "__valid__"]
+    schema = [c for c in base.column_names()
+              if c not in lsm.INTERNAL_COLUMNS]
     missing = [c for c in schema if c not in rows]
     extra = [c for c in rows if c not in schema]
     if missing or extra:

@@ -8,18 +8,34 @@ device-resident analogue here:
     mesh-sharded) columnar Table with its own sorted secondary indexes and
     zone maps, registered beside the base table. Flush cost is O(batch),
     never O(base).
+  * **mutations** follow AsterixDB's anti-matter design (paper §III, live
+    ingestion): a delete/upsert buffers an *anti-matter* record; the flushed
+    run's table carries a per-row matter/anti-matter flag plus the primary
+    key (anti rows are ``__valid__`` False, so every matter path ignores
+    them), and a sorted anti-key array rides along for query-time visibility
+    probes. An anti-matter record *annihilates* all matter with its key in
+    strictly older components — newest component wins; an upsert is an
+    anti-matter record plus fresh matter in the same run.
   * queries over a fed dataset execute as **base ∪ runs** (the ``UnionRuns``
     plan node): per-component index probes / kernel launches, one final
-    merge — results are identical to querying the compacted dataset.
-  * **compaction** is deferred until a size-ratio policy fires, then merges
-    every component into the base with a single re-shard + re-sort + index
-    rebuild (the only O(base) step, amortized over many flushes).
+    merge — results are identical to querying the compacted dataset,
+    including after upserts/deletes (the planner subtracts each component's
+    contribution that newer anti-matter shadows).
+  * **compaction** is deferred until a size-ratio policy fires, then folds
+    every component into the base with a key-ordered newest-component-wins
+    merge — annihilated matter and all tombstones are dropped (the only
+    O(base) step, amortized over many flushes). The leveled policy variant
+    instead merges same-level run groups into the next level, keeping every
+    merge O(level), and full-compacts only on the size-ratio trigger.
   * **materialized views** (``Session.create_view``) are group-by aggregates
     maintained *incrementally*: each flush runs only the delta batch through
     the ``segment_agg`` path and merges partial aggregates — the paper's
     live-dashboard scenario. The f32 kernel path is gated by the same
     exactness reasoning the kernel execution mode uses; batches that cannot
-    be proven exact fall back to native-dtype host reduction.
+    be proven exact fall back to native-dtype host reduction. Deletes and
+    upserts feed *retraction* deltas: counts/sums take negative deltas; a
+    retracted group max/min that touches the current extremum triggers an
+    exact host recompute of the affected groups.
 """
 from __future__ import annotations
 
@@ -31,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import plan as P
-from repro.core.catalog import Dataset, open_widen
+from repro.core.catalog import INTERNAL_COLUMNS, Dataset, open_widen
 from repro.engine.table import ColumnMeta, Table, pad_to_block
 
 RUN_BLOCK = 1024      # runs are padded to this row multiple
@@ -41,12 +57,51 @@ _F32_EXACT = 1 << 24  # every int in [-2^24, 2^24] is exactly representable
 @dataclasses.dataclass(frozen=True)
 class CompactionPolicy:
     """Deferred-compaction trigger (AsterixDB's size-ratio merge policy
-    analogue): compact when accumulated run rows reach ``size_ratio`` × base
-    rows, or when more than ``max_runs`` components pile up. ``size_ratio=0``
-    degenerates to compact-every-flush (the benchmark baseline)."""
+    analogue): compact when the accumulated run burden — visible matter plus
+    tombstones plus base rows the tombstones annihilated — reaches
+    ``size_ratio`` × visible base rows, or when more than ``max_runs``
+    components pile up. ``size_ratio=0`` degenerates to compact-every-flush
+    (the benchmark baseline)."""
 
     size_ratio: float = 1.0
     max_runs: int = 8
+
+    def plan(self, ds: Dataset) -> list[tuple]:
+        """Compaction actions to run after a flush: ``("full",)`` merges
+        every component into the base."""
+        return [("full",)] if should_compact(ds, self) else []
+
+
+@dataclasses.dataclass(frozen=True)
+class LeveledCompactionPolicy(CompactionPolicy):
+    """Leveled/tiered variant (the ROADMAP's planner-visible cost trade):
+    flushes land in level 0; when a level accumulates ``fanin`` runs they
+    merge into ONE run at the next level (an O(level) merge that drops
+    annihilated matter early), so read amplification stays
+    ~``levels × fanin`` instead of growing with every flush. The inherited
+    size-ratio trigger still forces the full O(base) fold — with
+    ``size_ratio=0`` the policy degenerates to compact-every-flush exactly
+    like the tiered default."""
+
+    level0_runs: int = 4    # runs tolerated at level 0 before a level merge
+    level_ratio: int = 4    # fanin of every level above 0
+
+    def fanin(self, level: int) -> int:
+        return max(self.level0_runs if level == 0 else self.level_ratio, 2)
+
+    def plan(self, ds: Dataset) -> list[tuple]:
+        if should_compact(ds, self):
+            return [("full",)]
+        by_level: dict[int, list[int]] = {}
+        for i, r in enumerate(ds.runs):
+            by_level.setdefault(r.level, []).append(i)
+        for level in sorted(by_level):
+            idxs = by_level[level]
+            if len(idxs) >= self.fanin(level):
+                # same-level runs are contiguous by construction (levels are
+                # non-increasing along the run list)
+                return [("merge", idxs[0], idxs[-1] + 1, level + 1)]
+        return []
 
 
 def should_compact(ds: Dataset, policy: CompactionPolicy) -> bool:
@@ -54,17 +109,30 @@ def should_compact(ds: Dataset, policy: CompactionPolicy) -> bool:
         return False
     if len(ds.runs) > policy.max_runs:
         return True
-    run_rows = sum(r.num_live_rows for r in ds.runs)
-    return run_rows >= policy.size_ratio * max(ds.num_live_rows, 1)
+    # Run burden discounts annihilated rows from the visible term but charges
+    # the tombstones themselves and every component's shadowed matter (base
+    # AND runs): all of it is storage a compaction would reclaim.
+    burden = sum(r.num_live_rows + r.anti_rows + r.annihilated_rows
+                 for r in ds.runs)
+    burden += ds.annihilated_rows
+    return burden >= policy.size_ratio * max(ds.num_live_rows, 1)
 
 
 # -- runs -------------------------------------------------------------------
 
 
-def make_run(session, base: Dataset, table: Table) -> Dataset:
+def make_run(session, base: Dataset, table: Table,
+             anti_keys: Optional[np.ndarray] = None) -> Dataset:
     """Build one device-resident run from a flush batch: stats → (optional)
-    open-widen → sort by the base's primary → block-pad (+shard) → per-run
-    sorted secondary indexes with zone maps. O(batch) throughout."""
+    open-widen → sort by the base's primary → append anti-matter rows →
+    block-pad (+shard) → per-run sorted secondary indexes with zone maps.
+    O(batch) throughout.
+
+    ``anti_keys`` are the primary keys this run's anti-matter annihilates in
+    older components. They materialize twice: as table rows flagged
+    ``__antimatter__`` (``__valid__`` False — no matter path ever sees them)
+    and as the sorted ``anti_keys_arr`` device array query-time visibility
+    probes search. Column stats/zone spans are harvested from matter only."""
     from repro.engine.session import _collect_stats
 
     live = table.num_rows
@@ -72,6 +140,7 @@ def make_run(session, base: Dataset, table: Table) -> Dataset:
     if not base.closed:
         table = open_widen(table)
     primary = base.primary_index
+    host_keys = None
     if primary is not None:
         order = np.argsort(np.asarray(table.columns[primary.column]),
                            kind="stable")
@@ -81,12 +150,23 @@ def make_run(session, base: Dataset, table: Table) -> Dataset:
         meta[primary.column] = ColumnMeta(m.dtype, m.lo, m.hi, m.distinct,
                                           m.is_string, True)
         table = Table(cols, meta, table.num_rows)
+        host_keys = np.asarray(table.columns[primary.column])
+    anti_sorted = None
+    n_anti = 0 if anti_keys is None else len(anti_keys)
+    if n_anti:
+        key_col = primary.column
+        kdt = np.asarray(table.columns[key_col]).dtype
+        anti_sorted = np.sort(np.asarray(anti_keys).astype(kdt))
+        table = _append_anti_rows(table, key_col, anti_sorted)
     table = pad_to_block(table, RUN_BLOCK)
     if session.mesh is not None:
         table = table.shard(session.mesh, session.data_axes)
     run = Dataset(name=f"{base.name}@run{len(base.runs)}",
                   dataverse=base.dataverse, table=table, closed=base.closed,
-                  live_rows=live)
+                  live_rows=live, anti_rows=n_anti,
+                  anti_keys_arr=None if anti_sorted is None
+                  else jnp.asarray(anti_sorted),
+                  host_keys=host_keys)
     if primary is not None:
         run.indexes["primary"] = session._build_index(table, primary.column,
                                                       "primary")
@@ -97,20 +177,116 @@ def make_run(session, base: Dataset, table: Table) -> Dataset:
     return run
 
 
-def register_run(session, base: Dataset, run: Dataset) -> None:
+def _append_anti_rows(table: Table, key_col: str,
+                      anti_sorted: np.ndarray) -> Table:
+    """Anti-matter rows ride after the matter prefix: key column carries the
+    annihilated key, every other column is zero, ``__antimatter__`` True and
+    ``__valid__`` False (invisible to matter paths and index builds)."""
+    m = table.num_rows
+    t = len(anti_sorted)
+    cols: dict[str, np.ndarray] = {}
+    for k, v in table.columns.items():
+        a = np.asarray(v)
+        if k == key_col:
+            pad = anti_sorted
+        elif a.ndim == 2:
+            pad = np.zeros((t, a.shape[1]), a.dtype)
+        else:
+            pad = np.zeros(t, a.dtype)
+        cols[k] = np.concatenate([a, pad], axis=0)
+    cols["__antimatter__"] = np.concatenate(
+        [np.zeros(m, bool), np.ones(t, bool)])
+    cols["__valid__"] = np.concatenate([np.ones(m, bool), np.zeros(t, bool)])
+    meta = dict(table.meta)  # matter-only stats survive the append
+    return Table(cols, meta, m + t)
+
+
+def register_run(session, base: Dataset, run: Dataset) -> Optional[dict]:
     """Attach the run and bump the catalog's statistics epoch: the LSM
     component set is baked into optimized plans (UnionRuns fans out per
     component) and every level of the Session plan cache is keyed by the
     epoch, so cached executables for the old component set become
-    unreachable — queries rebind against base ∪ runs including this one."""
+    unreachable — queries rebind against base ∪ runs including this one.
+
+    When the run carries anti-matter, every older component's annihilation
+    bookkeeping updates (O(tombstones · log component) host searches over
+    the clustered key copies); when a materialized view is registered over
+    the dataset, the newly annihilated rows are also gathered and returned
+    for its retraction — without a view the gather is skipped entirely."""
     base.runs.append(run)
+    retracted = None
+    if run.anti_rows:
+        gather = any((v.dataverse, v.dataset) == (base.dataverse, base.name)
+                     for v in getattr(session, "views", {}).values())
+        retracted = _annihilate_older(base, run, gather=gather)
     session.catalog.bump_stats_epoch()
+    return retracted
 
 
-def _valid_columns(table: Table) -> dict[str, np.ndarray]:
-    valid = np.asarray(table.valid)
-    return {k: np.asarray(v)[valid] for k, v in table.columns.items()
-            if k != "__valid__"}
+def _annihilate_older(base: Dataset, run: Dataset,
+                      gather: bool = True) -> Optional[dict]:
+    """Apply one new run's anti-key set to every strictly older component:
+    count (and, with ``gather``, collect) the matter rows it newly shadows.
+    A key a previous tombstone already covered is skipped — its matter was
+    discounted then, so nothing double-subtracts."""
+    anti_set = set(np.asarray(run.anti_keys_arr).tolist())
+    gathered: list[dict[str, np.ndarray]] = []
+    for comp in [base] + base.runs[:-1]:
+        new = anti_set - comp.annihilated_keys
+        if not new or comp.host_keys is None or not len(comp.host_keys):
+            continue
+        ak = np.sort(np.fromiter(new, dtype=comp.host_keys.dtype,
+                                 count=len(new)))
+        lo = np.searchsorted(comp.host_keys, ak, side="left")
+        hi = np.searchsorted(comp.host_keys, ak, side="right")
+        occ = hi - lo
+        total = int(occ.sum())
+        if not total:
+            continue
+        # record only keys that actually hit matter: a duplicate tombstone
+        # for a miss re-probes later and finds 0 again (nothing can double-
+        # discount), and the visibility masks stay proportional to rows
+        # killed, not tombstones issued.
+        comp.annihilated_keys |= set(ak[occ > 0].tolist())
+        comp.annihilated_rows += total
+        if not gather:
+            continue
+        # the matter prefix is clustered by the primary key, so index-space
+        # positions ARE table row positions: gather the dying rows (device
+        # gather of `total` rows) for view retraction.
+        idx = np.concatenate([np.arange(l, h) for l, h in zip(lo, hi)
+                              if h > l])
+        gathered.append({k: np.asarray(v[jnp.asarray(idx)])
+                         for k, v in comp.table.columns.items()
+                         if k not in INTERNAL_COLUMNS
+                         and not k.startswith("__ix")})
+    if not gathered:
+        return None
+    names = list(gathered[0])
+    return {k: np.concatenate([g[k] for g in gathered], axis=0)
+            for k in names}
+
+
+def host_visible_mask(comp: Dataset, key_col: Optional[str]) -> np.ndarray:
+    """Host-side visibility of one component's physical rows: valid matter
+    (anti rows and padding are ``__valid__`` False) minus rows newer
+    components' anti-matter annihilated."""
+    mask = np.asarray(comp.table.valid).copy()
+    anti = comp.table.columns.get("__antimatter__")
+    if anti is not None:
+        mask &= ~np.asarray(anti)
+    if comp.annihilated_keys and key_col is not None:
+        keys = np.asarray(comp.table.columns[key_col])
+        kill = np.fromiter(comp.annihilated_keys, dtype=keys.dtype,
+                           count=len(comp.annihilated_keys))
+        mask &= ~np.isin(keys, kill)
+    return mask
+
+
+def _visible_columns(comp: Dataset, key_col: Optional[str]) -> dict[str, np.ndarray]:
+    mask = host_visible_mask(comp, key_col)
+    return {k: np.asarray(v)[mask] for k, v in comp.table.columns.items()
+            if k not in INTERNAL_COLUMNS}
 
 
 def _merge_meta(metas: list[ColumnMeta], total_rows: int) -> ColumnMeta:
@@ -137,21 +313,62 @@ def _merge_meta(metas: list[ColumnMeta], total_rows: int) -> ColumnMeta:
 
 
 def compact(session, ds: Dataset) -> Dataset:
-    """Fold base ∪ runs into a fresh base: one host merge, one re-shard, one
-    re-sort, one index rebuild — instead of doing all of that per flush.
-    Component stats merge so the catalog bounds stay truthful for the new
-    key/value domains the runs introduced."""
-    parts = [_valid_columns(ds.table)] + [_valid_columns(r.table) for r in ds.runs]
+    """Fold base ∪ runs into a fresh base with a key-ordered newest-
+    component-wins merge: each component contributes only the matter no
+    newer component's anti-matter annihilated (upserted rows survive once,
+    deleted rows not at all), all tombstones drop — nothing older remains
+    for them to annihilate — and the primary re-sort restores the clustered
+    key order. One host merge, one re-shard, one index rebuild. Component
+    stats merge so the catalog bounds stay truthful for the new key/value
+    domains the runs introduced."""
+    key_col = ds.primary_index.column if ds.primary_index is not None else None
+    comps = [ds] + list(ds.runs)
+    parts = [_visible_columns(c, key_col) for c in comps]
     names = list(parts[0])
     merged = {k: np.concatenate([p[k] for p in parts], axis=0) for k in names}
     total = len(next(iter(merged.values()))) if names else 0
-    metas = [ds.table.meta] + [r.table.meta for r in ds.runs]
+    metas = [c.table.meta for c in comps]
     meta = {k: _merge_meta([mm[k] for mm in metas], total) for k in names}
     secondary = [ix.column for ix in ds.indexes.values() if ix.kind == "secondary"]
-    primary = ds.primary_index.column if ds.primary_index is not None else None
     return session.create_dataset(ds.name, Table(merged, meta),
                                   dataverse=ds.dataverse, closed=ds.closed,
-                                  indexes=secondary, primary=primary)
+                                  indexes=secondary, primary=key_col)
+
+
+def merge_runs(session, ds: Dataset, start: int, end: int, level: int) -> Dataset:
+    """Leveled-compaction step: fold the contiguous run segment
+    ``runs[start:end]`` into ONE run at ``level`` — O(segment), never
+    touching the base. Newest-wins inside the segment is already encoded in
+    each member's annihilation bookkeeping (a member's matter shadowed by
+    any newer component — inside or outside the segment — is dropped here),
+    and the merged run keeps the union of member anti-key sets: older
+    components still need them to subtract at query time."""
+    members = ds.runs[start:end]
+    key_col = ds.primary_index.column if ds.primary_index is not None else None
+    parts = [_visible_columns(c, key_col) for c in members]
+    names = list(parts[0])
+    merged_cols = {k: np.concatenate([p[k] for p in parts], axis=0)
+                   for k in names}
+    anti_parts = [np.asarray(m.anti_keys_arr) for m in members
+                  if m.anti_rows]
+    anti_union = np.unique(np.concatenate(anti_parts)) if anti_parts else None
+    del ds.runs[start:end]  # make_run names the new run by its slot
+    tail = ds.runs[start:]
+    del ds.runs[start:]
+    run = make_run(session, ds, Table(merged_cols), anti_keys=anti_union)
+    run.level = level
+    # matter annihilated by newer-than-segment components was dropped above;
+    # seed the bookkeeping so their anti keys are never re-counted.
+    for newer in tail:
+        if newer.anti_rows:
+            run.annihilated_keys |= set(
+                np.asarray(newer.anti_keys_arr).tolist())
+    ds.runs.append(run)
+    ds.runs.extend(tail)
+    for i, r in enumerate(ds.runs):
+        r.name = f"{ds.name}@run{i}"
+    session.catalog.bump_stats_epoch()
+    return run
 
 
 # -- incrementally-maintained materialized views ----------------------------
@@ -198,7 +415,9 @@ class MaterializedView:
         self._key_dtype = None
         self._dtypes: dict[str, np.dtype] = {}
         self.stats = {"refreshes": 0, "rows_applied": 0,
-                      "kernel_batches": 0, "exact_fallback_batches": 0}
+                      "kernel_batches": 0, "exact_fallback_batches": 0,
+                      "retractions": 0, "rows_retracted": 0,
+                      "extremum_recomputes": 0}
 
     @classmethod
     def from_plan(cls, name: str, plan: P.Plan) -> "MaterializedView":
@@ -319,6 +538,60 @@ class MaterializedView:
             for i, c in enumerate(self._min_cols):
                 np.minimum(self._mins[c], part[:, i].astype(np.float64),
                            out=self._mins[c])
+
+    def apply_retraction(self, cols: dict[str, np.ndarray],
+                         recompute=None) -> None:
+        """Retract rows previously applied (their OLD values — the matter a
+        flush's anti-matter just annihilated). Counts and sums take exact
+        negative deltas (int64/float64 state); means follow for free. A
+        retracted group max/min is *not* subtractable: when a retracted
+        value touches the stored extremum, ``recompute(op, column, keys)``
+        — the exact host fallback the Session provides, scanning the
+        dataset's current visible rows — repairs exactly the affected
+        groups. Groups whose count hits zero reset to identity so future
+        inserts re-aggregate from scratch."""
+        n = len(next(iter(cols.values()))) if cols else 0
+        if n == 0 or self._counts is None:
+            return
+        self.stats["retractions"] += 1
+        live = np.ones(n, bool)
+        if self.predicate is not None:
+            env = {k: jnp.asarray(v) for k, v in cols.items()}
+            live &= np.asarray(self.predicate.evaluate(env, []), bool)
+        if not live.any():
+            return
+        keys = np.asarray(cols[self.key])
+        kl = keys[live]
+        self._ensure_domain(int(kl.min()), int(kl.max()))
+        g = self._counts.shape[0]
+        ix = (kl.astype(np.int64) - self.lo).astype(np.int64)
+        self.stats["rows_retracted"] += int(live.sum())
+        self._counts -= np.bincount(ix, minlength=g).astype(np.int64)
+        for c in self._sum_cols:
+            vals = np.asarray(cols[c])[live].astype(np.float64)
+            self._sums[c] -= np.bincount(ix, weights=vals, minlength=g)
+        emptied = self._counts <= 0
+        for c, op, state in [(c, "max", self._maxs) for c in self._max_cols] \
+                + [(c, "min", self._mins) for c in self._min_cols]:
+            vals = np.asarray(cols[c])[live].astype(np.float64)
+            # groups where a retracted value ties the stored extremum: the
+            # extremum may have just left the group — recompute those exactly
+            hit = np.zeros(g, bool)
+            touched = vals >= state[c][ix] if op == "max" else vals <= state[c][ix]
+            hit[ix[touched]] = True
+            hit &= ~emptied  # empty groups just reset below
+            if hit.any():
+                if recompute is None:
+                    raise ValueError(
+                        f"view {self.name!r}: retraction touched a group "
+                        f"{op} and no exact recompute fallback is available")
+                self.stats["extremum_recomputes"] += 1
+                group_keys = (self.lo + np.nonzero(hit)[0]).astype(np.int64)
+                state[c][hit] = recompute(op, c, group_keys)
+            state[c][emptied] = -np.inf if op == "max" else np.inf
+        for c in self._sum_cols:
+            self._sums[c][emptied] = 0.0
+        self._counts[emptied] = 0
 
     def _apply_exact(self, cols, gid, live, g) -> None:
         """Native-dtype host fallback when f32 exactness cannot be proven

@@ -14,7 +14,8 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import plan as P
-from repro.core.catalog import Catalog, Dataset, IndexInfo, open_widen
+from repro.core.catalog import (INTERNAL_COLUMNS, Catalog, Dataset, IndexInfo,
+                                open_widen)
 from repro.core.compiler import (CompiledQuery, ExecContext, compile_physical,
                                  compile_plan)
 from repro.core.optimizer import optimize
@@ -120,6 +121,7 @@ class Session:
         table = _collect_stats(table)  # DBMS-style stats on load
         if not closed:
             table = open_widen(table)
+        host_keys = None
         if primary is not None:
             order = np.argsort(np.asarray(table.columns[primary]), kind="stable")
             cols = {k: np.asarray(v)[order] for k, v in table.columns.items()}
@@ -127,9 +129,13 @@ class Session:
             m = meta[primary]
             meta[primary] = type(m)(m.dtype, m.lo, m.hi, m.distinct, m.is_string, True)
             table = Table(cols, meta, table.num_rows)
+            # host copy of the clustered key order: anti-matter annihilation
+            # bookkeeping (engine/lsm.py) binary-searches it at flush time
+            host_keys = np.asarray(table.columns[primary])
         if self.mesh is not None:
             table = table.shard(self.mesh, self.data_axes)
-        ds = Dataset(name=name, dataverse=dataverse, table=table, closed=closed)
+        ds = Dataset(name=name, dataverse=dataverse, table=table, closed=closed,
+                     host_keys=host_keys)
         if primary is not None:
             ds.indexes["primary"] = self._build_index(table, primary, "primary")
         for col in indexes:
@@ -163,15 +169,18 @@ class Session:
         filtered — dataset scan. The view is seeded from the dataset's
         current contents (base ∪ runs) and from then on refreshed
         *incrementally* from each feed flush's delta batch."""
-        from repro.engine.lsm import MaterializedView
+        from repro.engine.lsm import MaterializedView, host_visible_mask
 
         plan = getattr(frame_or_plan, "_plan", frame_or_plan)
         view = MaterializedView.from_plan(name, plan)
         ds = self.catalog.get(view.dataverse, view.dataset)
+        key_col = ds.primary_index.column if ds.primary_index is not None else None
         for comp in [ds] + list(ds.runs):
             cols = {k: np.asarray(v) for k, v in comp.table.columns.items()
-                    if k != "__valid__"}
-            view.apply_delta(cols, np.asarray(comp.table.valid))
+                    if k not in INTERNAL_COLUMNS}
+            # seed from VISIBLE rows only: anti rows are __valid__ False, and
+            # matter newer components already annihilated must not count
+            view.apply_delta(cols, host_visible_mask(comp, key_col))
         self.views[name] = view
         return view
 
@@ -183,12 +192,59 @@ class Session:
         self.views.pop(name, None)
 
     def refresh_views(self, dataverse: str, dataset: str,
-                      delta_cols: dict) -> None:
+                      delta_cols: dict, retracted: Optional[dict] = None) -> None:
         """Apply one flushed delta batch to every view over the dataset
-        (called by Feed.flush)."""
+        (called by Feed.flush). ``retracted`` carries the OLD rows this
+        flush's anti-matter annihilated: counts/sums take exact negative
+        deltas; a retracted group extremum falls back to the exact host
+        recompute over the dataset's current visible rows."""
         for view in self.views.values():
             if (view.dataverse, view.dataset) == (dataverse, dataset):
                 view.apply_delta(delta_cols)
+                if retracted is not None:
+                    view.apply_retraction(retracted,
+                                          recompute=self._view_recompute(view))
+
+    def _view_recompute(self, view):
+        """The exact extremum-repair fallback: host-scan the dataset's
+        visible rows (base ∪ runs, newest-wins masks applied) and recompute
+        ``op(column)`` for exactly the affected groups. O(dataset) — but it
+        runs only when a retraction removed a group's current max/min, the
+        one delta that is fundamentally not incremental."""
+        from repro.engine.lsm import host_visible_mask
+
+        def recompute(op: str, column: str, group_keys: np.ndarray) -> np.ndarray:
+            import jax.numpy as jnp
+
+            ds = self.catalog.get(view.dataverse, view.dataset)
+            key_col = ds.primary_index.column \
+                if ds.primary_index is not None else None
+            keys_parts, vals_parts = [], []
+            for comp in [ds] + list(ds.runs):
+                mask = host_visible_mask(comp, key_col)
+                if view.predicate is not None:
+                    env = {k: jnp.asarray(v)
+                           for k, v in comp.table.columns.items()}
+                    mask &= np.asarray(view.predicate.evaluate(env, []), bool)
+                keys_parts.append(np.asarray(comp.table.columns[view.key])[mask])
+                vals_parts.append(np.asarray(comp.table.columns[column])[mask])
+            keys = np.concatenate(keys_parts)
+            vals = np.concatenate(vals_parts).astype(np.float64)
+            # one sort, then a binary-searched slice per affected group —
+            # total work O(n log n + matching rows), not O(groups × n)
+            order = np.argsort(keys, kind="stable")
+            ks, vs = keys[order], vals[order]
+            lo = np.searchsorted(ks, group_keys, side="left")
+            hi = np.searchsorted(ks, group_keys, side="right")
+            identity = -np.inf if op == "max" else np.inf
+            out = np.full(len(group_keys), identity, np.float64)
+            for i, (l, h) in enumerate(zip(lo, hi)):
+                if h > l:
+                    sel = vs[l:h]
+                    out[i] = sel.max() if op == "max" else sel.min()
+            return out
+
+        return recompute
 
     # -- query execution -------------------------------------------------------
 
@@ -390,7 +446,7 @@ def _collect_stats(table: Table) -> Table:
 
     meta = dict(table.meta)
     for name, col in table.columns.items():
-        if name == "__valid__":
+        if name in INTERNAL_COLUMNS:
             continue
         m = meta.get(name)
         if m is not None and m.lo is not None:

@@ -1,0 +1,115 @@
+"""Golden-output tests for the ``explain()`` renderer (core/physical.py
+``format_plan``): the PrunedUnionRuns / MergeScalars pruning rationale and
+the anti-matter subtraction notes are asserted line-for-line, so the
+renderer is no longer untested surface.
+
+Cost numbers inside ``[cost=...]`` brackets and ``cost=N`` notes are
+normalized — the golden text pins the plan SHAPE and the rationale wording,
+not the cost model's constants."""
+import re
+
+import numpy as np
+
+from repro.core import plan as P
+from repro.core.frame import AFrame
+from repro.engine import lsm
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+from repro.engine.table import Table
+
+
+def _normalize(text: str) -> str:
+    text = re.sub(r"\[cost=[^\]]*\]", "[cost]", text)
+    text = re.sub(r"cost=[\d,]+", "cost=#", text)
+    text = re.sub(r"total estimated cost: [\d,]+", "total estimated cost: #",
+                  text)
+    return text
+
+
+def _mutated_fed_session():
+    """Deterministic scenario: base keys 0..1999, run0 appends 2000..2999,
+    run1 deletes {100, 150} and appends 3000..3499. A count over k ∈ [0,200]
+    prunes both runs' matter — but run1's tombstones must be retained."""
+    sess = Session()
+    n = 2000
+    k = np.arange(n, dtype=np.int32)
+    sess.create_dataset("Events", Table({"k": k, "v": (k * 2).astype(np.int32)}),
+                        dataverse="g", primary="k")
+    feed = Feed(sess, "Events", "g", flush_rows=10**9,
+                policy=lsm.CompactionPolicy(size_ratio=100.0, max_runs=64))
+    feed.push({"k": np.arange(2000, 3000, dtype=np.int32),
+               "v": np.zeros(1000, np.int32)})
+    feed.flush()
+    feed.delete(np.array([100, 150], np.int32))
+    feed.push({"k": np.arange(3000, 3500, dtype=np.int32),
+               "v": np.zeros(500, np.int32)})
+    feed.flush()
+    return sess
+
+
+GOLDEN_SCALAR = """\
+MergeScalars [count:sum] [1 components, 2 pruned]  [cost]
+· zone maps pruned 2/3 components (1,500 rows skipped)
+├─ SubtractScalars [count] [anti-matter]  [cost]
+│  · anti-matter subtraction: count = index-only matches − matches newer tombstones shadow — chosen over MaskCount cost=#
+│  ├─ IndexOnlyCount g.Events on k [binary search]  [cost]
+│  │  · index-only: sorted primary index on k
+│  └─ ShadowProbeCount g.Events on k [1 anti set(s), binary search]  [cost]
+│     · 2 tombstone(s) from 1 newer component(s) probe the primary index
+├─ ✂ g.Events@run0 PRUNED: zone span k∈[2000, 2999] misses predicate [-∞, 200] (1000 rows skipped)
+└─ ✂ g.Events@run1 PRUNED: zone span k∈[3000, 3499] misses predicate [-∞, 200] (500 rows skipped); 2 anti-matter record(s) RETAINED — they still subtract from older components
+total estimated cost: #"""
+
+
+GOLDEN_TABLE = """\
+UnionRuns [1 components, 2 pruned]  [cost]
+· zone maps pruned 2/3 components (1,500 rows skipped)
+├─ IndexProbe g.Events (k ∈ [?, ?]) ⊖ anti-matter of 1 newer component(s)  [cost]
+│  · index primary:k bounds the stream — 2 newer tombstone(s) subtract from the mask
+├─ ✂ g.Events@run0 PRUNED: zone span k∈[2000, 2999] misses predicate [-∞, 200] (1000 rows skipped)
+└─ ✂ g.Events@run1 PRUNED: zone span k∈[3000, 3499] misses predicate [-∞, 200] (500 rows skipped); 2 anti-matter record(s) RETAINED — they still subtract from older components
+total estimated cost: #"""
+
+
+def test_explain_golden_scalar_count_with_subtraction_and_pruning():
+    sess = _mutated_fed_session()
+    df = AFrame("g", "Events", session=sess)
+    plan = P.Agg(df[(df["k"] >= 0) & (df["k"] <= 200)]._plan,
+                 [P.AggSpec("count", "count", None)])
+    assert _normalize(sess.explain(plan)) == GOLDEN_SCALAR
+    # and the plan really computes the subtracted answer
+    assert len(df[(df["k"] >= 0) & (df["k"] <= 200)]) == 199  # 201 − {100,150}
+
+
+def test_explain_golden_table_plan_with_shadowed_probe():
+    sess = _mutated_fed_session()
+    df = AFrame("g", "Events", session=sess)
+    text = _normalize(sess.explain(df[(df["k"] >= 0) & (df["k"] <= 200)]._plan))
+    assert text == GOLDEN_TABLE
+
+
+def test_explain_frame_api_matches_session_explain():
+    sess = _mutated_fed_session()
+    df = AFrame("g", "Events", session=sess)
+    sel = df[(df["k"] >= 0) & (df["k"] <= 200)]
+    assert sel.explain() == sess.explain(sel._plan)
+
+
+def test_explain_no_mutation_no_subtraction_notes():
+    """A clean (tombstone-free) fed dataset renders without any anti-matter
+    lines — the subtraction rationale appears only when it applies."""
+    sess = Session()
+    k = np.arange(1000, dtype=np.int32)
+    sess.create_dataset("Clean", Table({"k": k, "v": k.copy()}),
+                        dataverse="g", primary="k")
+    feed = Feed(sess, "Clean", "g", flush_rows=10**9,
+                policy=lsm.CompactionPolicy(size_ratio=100.0, max_runs=64))
+    feed.push({"k": np.arange(1000, 1500, dtype=np.int32),
+               "v": np.zeros(500, np.int32)})
+    feed.flush()
+    df = AFrame("g", "Clean", session=sess)
+    plan = P.Agg(df[(df["k"] >= 0) & (df["k"] <= 100)]._plan,
+                 [P.AggSpec("count", "count", None)])
+    text = sess.explain(plan)
+    assert "anti-matter" not in text and "ShadowProbeCount" not in text
+    assert "PRUNED" in text  # the appended run still prunes

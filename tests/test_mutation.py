@@ -1,0 +1,534 @@
+"""Mutation support (anti-matter records): Feed.upsert/Feed.delete with
+newest-wins merge semantics through ingest, storage, planner, compiler, and
+materialized views.
+
+The acceptance invariant: every query family over a mutated, UNCOMPACTED
+dataset (base ∪ runs with anti-matter) is bit-identical to the result after
+compaction, in all three execution modes — including group max/min after the
+current extremum was retracted, and with zone-map pruning enabled."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import physical as PH
+from repro.core import plan as P
+from repro.core.frame import AFrame
+from repro.core.stats import harvest
+from repro.data import wisconsin
+from repro.engine import lsm
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+from repro.engine.table import Table
+
+BASE_ROWS = 3_000
+PUSH_ROWS = 700
+
+DEFERRED = lsm.CompactionPolicy(size_ratio=100.0, max_runs=64)  # never auto
+
+
+def _session(mode):
+    if mode == "shard_map":
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        return Session(mesh=mesh, mode="shard_map")
+    return Session(mode=mode)
+
+
+def _assert_same(a, b, label):
+    if isinstance(a, dict):
+        assert set(a) == set(b), label
+        for k in a:
+            av, bv = np.asarray(a[k]), np.asarray(b[k])
+            assert av.dtype == bv.dtype, (label, k, av.dtype, bv.dtype)
+            np.testing.assert_array_equal(av, bv, err_msg=f"{label}:{k}")
+    else:
+        assert a == b, (label, a, b)
+
+
+def _mutated_session(mode):
+    """Base + appended run + a mutation run that upserts into both older
+    components and deletes the dataset's extremes (scalar max key, group
+    extremum rows)."""
+    sess = _session(mode)
+    t = wisconsin.generate(BASE_ROWS, seed=3)
+    sess.create_dataset("Live", t, dataverse="d", indexes=["onePercent"],
+                        primary="unique2")
+    sess.create_dataset("Dim", wisconsin.generate(500, seed=7), dataverse="d")
+    feed = Feed(sess, "Live", "d", flush_rows=10**9, policy=DEFERRED)
+    extra = wisconsin.generate(PUSH_ROWS, seed=20)
+    rows = {k: np.asarray(v) for k, v in extra.columns.items()}
+    rows["unique2"] = rows["unique2"] + BASE_ROWS
+    feed.push(rows)
+    feed.flush()
+    # upsert 150 keys from the base and 50 from run0 with fresh values
+    up = wisconsin.generate(200, seed=33)
+    up_rows = {k: np.asarray(v) for k, v in up.columns.items()}
+    up_rows["unique2"] = np.concatenate([
+        np.arange(100, 250, dtype=up_rows["unique2"].dtype),
+        np.arange(BASE_ROWS + 10, BASE_ROWS + 60,
+                  dtype=up_rows["unique2"].dtype)])
+    feed.upsert(up_rows)
+    # delete the newest keys (the scalar unique2 max lives in run0) plus a
+    # spread of base keys — retracting group extremes along the way
+    feed.delete(np.arange(BASE_ROWS + PUSH_ROWS - 40, BASE_ROWS + PUSH_ROWS,
+                          dtype=np.int32))
+    feed.delete(np.arange(0, 90, 7, dtype=np.int32))
+    feed.flush()
+    return sess, feed
+
+
+def _query_suite(sess):
+    df = AFrame("d", "Live", session=sess)
+    dim = AFrame("d", "Dim", session=sess)
+    return {
+        "len": len(df),
+        "filter_count": len(df[(df["ten"] == 3) & (df["two"] == 1)]),
+        "indexed_range": len(df[(df["onePercent"] >= 10) & (df["onePercent"] <= 30)]),
+        "primary_range": len(df[(df["unique2"] >= 50) & (df["unique2"] <= 400)]),
+        "pruning_range": len(df[(df["unique2"] >= BASE_ROWS + 100)
+                                & (df["unique2"] <= BASE_ROWS + 300)]),
+        "group_count": df.groupby("ten").agg("count"),
+        "group_mix": df.groupby("twenty").agg(
+            {"four": "sum", "ten": "mean", "two": "max", "onePercent": "min"}),
+        "group_extremes": df.groupby("ten").agg(
+            {"unique1": "max", "unique2": "min"}),
+        "scalar_max": df["unique2"].max(),
+        "scalar_min": df["unique1"].min(),
+        "scalar_sum": df["four"].sum(),
+        "sort_head": df.sort_values("unique1", ascending=False).head(7),
+        "head": df.head(5),
+        "join_count": len(df.merge(dim, left_on="unique1", right_on="unique1")),
+        "project_head": df[["two", "four", "stringu1"]].head(4),
+    }
+
+
+@pytest.mark.parametrize("mode", ["gspmd", "shard_map", "kernel"])
+def test_mutated_queries_identical_before_and_after_compaction(mode):
+    """THE acceptance criterion: base ∪ runs with anti-matter answers every
+    query family bit-identically to the compacted dataset, zone-map pruning
+    on, in all three modes."""
+    sess, feed = _mutated_session(mode)
+    assert feed.stats["tombstones"] > 0 and feed.stats["compactions"] == 0
+    before = _query_suite(sess)
+    feed.compact()
+    after = _query_suite(sess)
+    for k in before:
+        _assert_same(before[k], after[k], f"{mode}:{k}")
+    # the deleted newest keys are really gone
+    assert before["scalar_max"] == BASE_ROWS + PUSH_ROWS - 41
+
+
+def test_newest_wins_semantics():
+    """Upsert replaces all older matter with the key; delete kills every
+    occurrence (including duplicates push appended); a re-insert after a
+    delete survives; within an upsert batch the LAST row wins."""
+    sess = Session()
+    k = np.arange(10, dtype=np.int32)
+    sess.create_dataset("T", Table({"k": k, "v": (k * 10).astype(np.int32)}),
+                        dataverse="d", primary="k")
+    feed = Feed(sess, "T", "d", flush_rows=10**9, policy=DEFERRED)
+    df = AFrame("d", "T", session=sess)
+    # duplicate matter for key 3 via plain push, then upsert kills both
+    feed.push({"k": np.array([3, 3], np.int32), "v": np.array([1, 2], np.int32)})
+    feed.flush()
+    assert len(df[df["k"] == 3]) == 3
+    feed.upsert({"k": np.array([3, 3], np.int32),
+                 "v": np.array([111, 222], np.int32)})
+    feed.flush()
+    assert len(df[df["k"] == 3]) == 1
+    assert df[df["k"] == 3].collect()["v"].tolist() == [222]  # last wins
+    # delete, then re-insert in a later flush: the re-insert survives
+    feed.delete(np.array([3], np.int32))
+    feed.flush()
+    assert len(df[df["k"] == 3]) == 0
+    feed.push({"k": np.array([3], np.int32), "v": np.array([9], np.int32)})
+    feed.flush()
+    assert df[df["k"] == 3].collect()["v"].tolist() == [9]
+    # interleaving within ONE buffer normalizes host-side: the delete kills
+    # the base row (7, 70) AND the just-buffered push; only the later push
+    # survives
+    feed.push({"k": np.array([7], np.int32), "v": np.array([700], np.int32)})
+    feed.delete(np.array([7], np.int32))
+    feed.push({"k": np.array([7], np.int32), "v": np.array([71], np.int32)})
+    feed.flush()
+    assert df[df["k"] == 7].collect()["v"].tolist() == [71]
+    feed.compact()
+    assert df[df["k"] == 7].collect()["v"].tolist() == [71]
+    assert df[df["k"] == 3].collect()["v"].tolist() == [9]
+
+
+def test_mutations_require_primary_key():
+    sess = Session()
+    sess.create_dataset("NoPk", Table({"a": np.arange(5, dtype=np.int32)}),
+                        dataverse="d")
+    feed = Feed(sess, "NoPk", "d")
+    with pytest.raises(ValueError, match="primary key"):
+        feed.upsert({"a": np.array([1], np.int32)})
+    with pytest.raises(ValueError, match="primary key"):
+        feed.delete(np.array([1], np.int32))
+
+
+def test_delete_key_validation():
+    sess = Session()
+    sess.create_dataset("T", Table({"k": np.arange(5, dtype=np.int32)}),
+                        dataverse="d", primary="k")
+    feed = Feed(sess, "T", "d", policy=DEFERRED)
+    with pytest.raises(ValueError, match="1-d"):
+        feed.delete(np.zeros((2, 2), np.int32))
+    with pytest.raises(ValueError, match="lossy narrowing"):
+        feed.delete(np.array([2**31 + 7], np.int64))
+    feed.delete(np.array([999], np.int64))  # absent key, in-range: fine
+    feed.flush()
+    assert len(AFrame("d", "T", session=sess)) == 5
+
+
+def test_pruned_run_anti_matter_still_subtracts():
+    """Mutation-safe zone-map pruning: a run whose MATTER span misses the
+    predicate is pruned, but its tombstones keep annihilating into older
+    surviving components — pruned == unpruned == oracle."""
+    k = np.arange(50, dtype=np.int32)
+    results = {}
+    for prune in (True, False):
+        sess = Session(enable_prune=prune)
+        sess.create_dataset("Z", Table({"k": k.copy(),
+                                        "v": (k * 2).astype(np.int32)}),
+                            dataverse="d", primary="k")
+        feed = Feed(sess, "Z", "d", flush_rows=10**9, policy=DEFERRED)
+        # the run's matter (keys 1000+) misses [0, 10]; its anti-matter
+        # (keys 1, 2) annihilates INTO the base inside the range
+        feed.delete(np.array([1, 2], np.int32))
+        feed.push({"k": np.arange(1000, 1005, dtype=np.int32),
+                   "v": np.zeros(5, np.int32)})
+        feed.flush()
+        df = AFrame("d", "Z", session=sess)
+        results[prune] = len(df[(df["k"] >= 0) & (df["k"] <= 10)])
+        if prune:
+            rep = sess.last_prune_report
+            assert rep["pruned"] >= 1, rep
+            assert rep["tombstones_retained"] >= 2, rep
+            feed.compact()
+            assert len(df[(df["k"] >= 0) & (df["k"] <= 10)]) == 9
+    assert results[True] == results[False] == 9  # 11 keys minus {1, 2}
+
+
+def test_subtract_scalars_on_index_only_path():
+    """A range count on the PRIMARY key of a shadowed component stays
+    index-only: the plan subtracts a ShadowProbeCount instead of falling
+    back to a full scan."""
+    n = 5_000
+    k = np.arange(n, dtype=np.int32)
+    sess = Session()
+    sess.create_dataset("S", Table({"k": k, "v": (k * 2).astype(np.int32)}),
+                        dataverse="d", primary="k")
+    feed = Feed(sess, "S", "d", flush_rows=10**9, policy=DEFERRED)
+    feed.delete(np.array([5, 6, 7], np.int32))
+    # tombstone the same key from TWO different runs: it must subtract once
+    feed.flush()
+    feed.delete(np.array([7, 8], np.int32))
+    feed.flush()
+    df = AFrame("d", "S", session=sess)
+    assert len(df[(df["k"] >= 0) & (df["k"] <= 10)]) == 7  # 11 - {5,6,7,8}
+    phys = sess.last_physical
+    subs = [x for x in PH.walk(phys) if isinstance(x, PH.SubtractScalars)]
+    probes = [x for x in PH.walk(phys) if isinstance(x, PH.ShadowProbeCount)]
+    assert subs and probes
+    assert any("anti-matter subtraction" in x.note for x in subs)
+    # a count bounded on a NON-primary column must not use the index-only
+    # path on the shadowed base (the secondary index cannot see deaths)
+    sess2 = Session()
+    sess2.create_dataset("S2", Table({"k": k.copy(),
+                                      "v": (k % 100).astype(np.int32)}),
+                         dataverse="d", primary="k", indexes=["v"])
+    feed2 = Feed(sess2, "S2", "d", flush_rows=10**9, policy=DEFERRED)
+    feed2.delete(np.array([42], np.int32))  # v=42 row dies
+    feed2.flush()
+    df2 = AFrame("d", "S2", session=sess2)
+    assert len(df2[(df2["v"] >= 40) & (df2["v"] <= 44)]) == 5 * 50 - 1
+    base_counts = [x for x in PH.walk(sess2.last_physical)
+                   if isinstance(x, PH.IndexOnlyCount) and x.dataset == "S2"]
+    assert not base_counts
+
+
+def test_stats_discount_annihilated_rows():
+    """TableStats rows/tombstones/shadowed reflect visibility; should_compact
+    sees the discounted burden."""
+    n = 1_000
+    k = np.arange(n, dtype=np.int32)
+    sess = Session()
+    sess.create_dataset("D", Table({"k": k, "v": k.copy()}), dataverse="d",
+                        primary="k")
+    feed = Feed(sess, "D", "d", flush_rows=10**9, policy=DEFERRED)
+    feed.delete(np.arange(0, 100, dtype=np.int32))
+    feed.flush()
+    ds = sess.catalog.get("d", "D")
+    assert ds.annihilated_rows == 100
+    assert ds.num_live_rows == n - 100
+    base_stats = harvest(ds)
+    assert base_stats.rows == n - 100 and base_stats.shadowed == 100
+    run_stats = harvest(sess.catalog.get("d", "D@run0"))
+    assert run_stats.tombstones == 100 and run_stats.rows == 0
+    assert len(AFrame("d", "D", session=sess)) == n - 100
+    # deleting the same keys again must not double-discount
+    feed.delete(np.arange(0, 100, dtype=np.int32))
+    feed.flush()
+    assert ds.annihilated_rows == 100
+    assert len(AFrame("d", "D", session=sess)) == n - 100
+    # burden counts tombstones + shadowed base rows: triggers compaction
+    # even though visible run rows are zero
+    assert lsm.should_compact(ds, lsm.CompactionPolicy(size_ratio=0.2))
+    assert not lsm.should_compact(ds, lsm.CompactionPolicy(size_ratio=0.5))
+
+
+def test_leveled_policy_trigger_boundaries():
+    """LeveledCompactionPolicy: level-0 fanin merges, cascades to higher
+    levels, size_ratio still forces the full fold, size_ratio=0 degenerates
+    to compact-every-flush."""
+    def feed_with(policy, n_flushes, base_rows=100, batch=10):
+        sess = Session()
+        sess.create_dataset(
+            "L", Table({"k": np.arange(base_rows, dtype=np.int32),
+                        "v": np.zeros(base_rows, np.int32)}),
+            dataverse="d", primary="k")
+        feed = Feed(sess, "L", "d", flush_rows=batch, policy=policy)
+        for i in range(n_flushes):
+            feed.push({"k": np.arange(base_rows + i * batch,
+                                      base_rows + (i + 1) * batch,
+                                      dtype=np.int32),
+                       "v": np.zeros(batch, np.int32)})
+        return sess, feed
+
+    # below the fanin: no merge
+    pol = lsm.LeveledCompactionPolicy(size_ratio=1000.0, max_runs=64,
+                                      level0_runs=3, level_ratio=2)
+    sess, feed = feed_with(pol, 2)
+    assert feed.stats["level_merges"] == 0
+    assert [r.level for r in sess.catalog.get("d", "L").runs] == [0, 0]
+    # at the fanin boundary: the 3rd level-0 run triggers one merge to L1
+    sess, feed = feed_with(pol, 3)
+    ds = sess.catalog.get("d", "L")
+    assert feed.stats["level_merges"] == 1
+    assert [r.level for r in ds.runs] == [1]
+    assert ds.runs[0].num_live_rows == 30
+    assert [r.name for r in ds.runs] == ["L@run0"]
+    # cascade: 6 flushes -> two L1 runs -> one L2 (level_ratio=2)
+    sess, feed = feed_with(pol, 6)
+    ds = sess.catalog.get("d", "L")
+    assert [r.level for r in ds.runs] == [2]
+    assert feed.stats["level_merges"] == 3
+    assert len(AFrame("d", "L", session=sess)) == 160
+    # size-ratio full fold still fires (60 run rows >= 0.5 * 100 base)
+    sess, feed = feed_with(lsm.LeveledCompactionPolicy(
+        size_ratio=0.5, max_runs=64, level0_runs=10), 5)
+    assert feed.stats["compactions"] == 1
+    assert not sess.catalog.get("d", "L").runs
+    # size_ratio=0 degenerate mode: compact on every flush
+    sess, feed = feed_with(lsm.LeveledCompactionPolicy(size_ratio=0.0), 3)
+    assert feed.stats["compactions"] == 3
+    assert feed.stats["level_merges"] == 0
+
+
+def test_leveled_merge_preserves_mutation_results():
+    """Level merges drop annihilated matter early but keep the anti-key
+    union — query results never change across level merges or the final
+    fold."""
+    sess = Session()
+    n = 200
+    sess.create_dataset("M", Table({"k": np.arange(n, dtype=np.int32),
+                                    "v": np.arange(n, dtype=np.int32)}),
+                        dataverse="d", primary="k")
+    pol = lsm.LeveledCompactionPolicy(size_ratio=1000.0, max_runs=64,
+                                      level0_runs=2, level_ratio=2)
+    feed = Feed(sess, "M", "d", flush_rows=10**9, policy=pol)
+    df = AFrame("d", "M", session=sess)
+    rng = np.random.default_rng(0)
+    expect = {int(k): int(k) for k in range(n)}
+    for i in range(6):
+        ks = rng.integers(0, n, 5).astype(np.int32)
+        if i % 3 == 2:
+            feed.delete(ks)
+            for kk in ks.tolist():
+                expect.pop(kk, None)
+        else:
+            vs = rng.integers(1000, 2000, 5).astype(np.int32)
+            feed.upsert({"k": ks, "v": vs})
+            seen = {}
+            for kk, vv in zip(ks.tolist(), vs.tolist()):
+                seen[kk] = vv  # last occurrence wins
+            expect.update(seen)
+        feed.flush()
+    assert feed.stats["level_merges"] >= 1
+    assert len(df) == len(expect)
+    assert df["v"].sum() == sum(expect.values())
+    got = df.sort_values("k").collect()
+    np.testing.assert_array_equal(got["k"], sorted(expect))
+    np.testing.assert_array_equal(got["v"],
+                                  [expect[kk] for kk in sorted(expect)])
+    feed.compact()
+    assert len(df) == len(expect) and df["v"].sum() == sum(expect.values())
+
+
+def test_view_retraction_counts_sums_and_extremes():
+    """Materialized views learn retraction: deletes feed negative count/sum
+    deltas; a retracted group extremum triggers the exact host recompute;
+    the view stays bit-identical to the from-scratch query."""
+    sess = Session()
+    n = 60
+    k = np.arange(n, dtype=np.int32)
+    sess.create_dataset("V", Table({"k": k, "g": (k % 4).astype(np.int32),
+                                    "v": (k * 2).astype(np.int32)}),
+                        dataverse="d", primary="k")
+    plan = P.GroupAgg(P.Scan("V", "d"), ["g"], [
+        P.AggSpec("count", "count", None),
+        P.AggSpec("sum_v", "sum", "v"),
+        P.AggSpec("mean_v", "mean", "v"),
+        P.AggSpec("max_v", "max", "v"),
+        P.AggSpec("min_v", "min", "v")])
+    view = sess.create_view("by_g", plan)
+    feed = Feed(sess, "V", "d", flush_rows=10**9, policy=DEFERRED)
+    # delete group 3's maximum (k=59, v=118) and minimum (k=3, v=6)
+    feed.delete(np.array([59, 3], np.int32))
+    # upsert group 0's maximum away (k=56: v 112 -> 0) and boost another
+    feed.upsert({"k": np.array([56, 8], np.int32),
+                 "g": np.array([0, 0], np.int32),
+                 "v": np.array([0, 5000], np.int32)})
+    feed.flush()
+    _assert_same(sess.read_view("by_g"), sess.execute(plan), "retracted_view")
+    assert view.stats["retractions"] == 1
+    assert view.stats["rows_retracted"] == 4
+    assert view.stats["extremum_recomputes"] >= 1
+    # compaction must not disturb the view
+    feed.compact()
+    _assert_same(sess.read_view("by_g"), sess.execute(plan), "post_compact")
+    # empty a whole group: count drops to 0 and the group leaves the view,
+    # then a re-insert re-aggregates from identity
+    feed.delete(np.arange(1, n, 4, dtype=np.int32))  # all of group 1
+    feed.flush()
+    got = sess.read_view("by_g")
+    assert 1 not in np.asarray(got["g"]).tolist()
+    _assert_same(got, sess.execute(plan), "emptied_group")
+    feed.push({"k": np.array([n + 1], np.int32), "g": np.array([1], np.int32),
+               "v": np.array([-7], np.int32)})
+    feed.flush()
+    _assert_same(sess.read_view("by_g"), sess.execute(plan), "reborn_group")
+
+
+def test_view_with_predicate_retracts_filtered_rows_only():
+    sess = Session()
+    n = 40
+    k = np.arange(n, dtype=np.int32)
+    sess.create_dataset("F", Table({"k": k, "g": (k % 2).astype(np.int32),
+                                    "v": k.copy()}),
+                        dataverse="d", primary="k")
+    df = AFrame("d", "F", session=sess)
+    plan = df[df["v"] >= 10].groupby("g").agg_plan({"v": "sum"})
+    sess.create_view("f", plan)
+    feed = Feed(sess, "F", "d", flush_rows=10**9, policy=DEFERRED)
+    feed.delete(np.array([5, 20], np.int32))  # 5 fails the predicate: no-op
+    feed.flush()
+    _assert_same(sess.read_view("f"), sess.execute(plan), "filtered_retract")
+
+
+def test_mutation_interleavings_match_newest_wins_oracle():
+    """Satellite: hypothesis property test — random interleavings of
+    push/upsert/delete/flush/compact against a newest-wins oracle, asserted
+    equal across gspmd/shard_map/kernel."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    rows_batch = st.lists(st.tuples(st.integers(0, 30), st.integers(-40, 40)),
+                          min_size=1, max_size=6)
+    op = st.one_of(
+        st.tuples(st.just("push"), rows_batch),
+        st.tuples(st.just("upsert"), rows_batch),
+        st.tuples(st.just("delete"),
+                  st.lists(st.integers(0, 30), min_size=1, max_size=5)),
+        st.tuples(st.just("flush"), st.just(None)),
+        st.tuples(st.just("compact"), st.just(None)),
+    )
+
+    def oracle_apply(rows, kind, payload):
+        if kind == "push":
+            rows.extend(payload)
+        elif kind == "upsert":
+            for kk, vv in payload:
+                rows[:] = [r for r in rows if r[0] != kk]
+                rows.append((kk, vv))
+        elif kind == "delete":
+            dead = set(payload)
+            rows[:] = [r for r in rows if r[0] not in dead]
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.lists(op, min_size=1, max_size=7))
+    def run(ops):
+        base = [(int(kk), int(kk) * 3) for kk in range(8)]
+        oracle = list(base)
+        engines = {}
+        for mode in ("gspmd", "shard_map", "kernel"):
+            sess = _session(mode)
+            sess.create_dataset(
+                "H", Table({"k": np.array([r[0] for r in base], np.int32),
+                            "v": np.array([r[1] for r in base], np.int32)}),
+                dataverse="d", primary="k")
+            engines[mode] = (sess, Feed(sess, "H", "d", flush_rows=10**9,
+                                        policy=DEFERRED))
+        for kind, payload in ops:
+            if kind in ("push", "upsert"):
+                batch = {"k": np.array([r[0] for r in payload], np.int32),
+                         "v": np.array([r[1] for r in payload], np.int32)}
+                for _, feed in engines.values():
+                    getattr(feed, kind)({c: a.copy()
+                                         for c, a in batch.items()})
+            elif kind == "delete":
+                for _, feed in engines.values():
+                    feed.delete(np.array(payload, np.int32))
+            else:
+                for _, feed in engines.values():
+                    getattr(feed, kind)()
+            if kind in ("push", "upsert", "delete"):
+                oracle_apply(oracle, kind, payload)
+        for _, feed in engines.values():
+            feed.flush()
+        # newest-wins oracle: multiset of surviving (k, v) pairs
+        want = sorted(oracle)
+        results = {}
+        for mode, (sess, feed) in engines.items():
+            df = AFrame("d", "H", session=sess)
+            got = df.sort_values("k").collect()
+            pairs = sorted(zip(got["k"].tolist(), got["v"].tolist()))
+            assert pairs == want, (mode, pairs, want)
+            results[mode] = {
+                "count_lo": len(df[df["k"] <= 10]),
+                "group": df.groupby("k").agg({"v": "max"})
+                if want else None,
+                "sum": df["v"].sum(),
+            }
+            feed.compact()
+            got2 = df.sort_values("k").collect()
+            assert sorted(zip(got2["k"].tolist(),
+                              got2["v"].tolist())) == want, mode
+        for mode in ("shard_map", "kernel"):
+            for key in results["gspmd"]:
+                _assert_same(results[mode][key], results["gspmd"][key],
+                             f"{mode}:{key}")
+
+    run()
+
+
+def test_open_dataset_mutations_roundtrip():
+    """Open (schema-on-read) datasets widen keys to f32; anti-matter probes
+    compare in the widened dtype and stay consistent across compaction."""
+    n = 300
+    k = np.arange(n, dtype=np.int32)
+    sess = Session()
+    sess.create_dataset("O", Table({"k": k, "v": (k * 2).astype(np.int32)}),
+                        dataverse="d", closed=False, primary="k")
+    feed = Feed(sess, "O", "d", flush_rows=10**9, policy=DEFERRED)
+    feed.upsert({"k": np.array([10], np.int32), "v": np.array([9999], np.int32)})
+    feed.delete(np.array([20, 21], np.int32))
+    feed.flush()
+    df = AFrame("d", "O", session=sess)
+    before = (len(df), df["v"].sum(), df["v"].max())
+    assert before[0] == n - 2
+    feed.compact()
+    after = (len(df), df["v"].sum(), df["v"].max())
+    assert before == after
