@@ -24,6 +24,11 @@ vs. upsert-heavy vs. delete-heavy workloads (anti-matter records through
 ``Feed.upsert``/``Feed.delete``), each with deferred and compact-every-flush
 policies — sustained mutation ops/sec, post-flush query freshness, and an
 uncompacted == compacted consistency check per cell.
+
+A **block_skip sweep** measures the second pruning level: selective range
+predicates over a clustered (sorted, unindexed) column, with bind-time
+block zone-map skipping on vs. off — latency plus blocks touched, which
+must scale with the predicate's block footprint, not the dataset.
 """
 from __future__ import annotations
 
@@ -150,6 +155,67 @@ def _selectivity_sweep(sess: Session, df: AFrame, base_rows: int,
     return sweep
 
 
+def _block_skip_sweep(size: str, repeats: int = 5) -> list[dict]:
+    """Intra-run block skipping (the second pruning level): a clustered
+    dataset (rows sorted by the primary key, a time-ordered ``unique2``-like
+    column with no secondary index) takes selective range predicates of
+    decreasing selectivity, with the bind-time block zone-map test on vs.
+    off. Reports latency plus the blocks-touched accounting from the
+    physical plan — the blocks scanned must shrink proportionally to the
+    predicate's block footprint. Runs in kernel mode: the filter_count grid
+    is driven through the surviving-block list."""
+    base_rows, _, _ = SIZES[size]
+    n = max(base_rows, 8 * 4096)  # at least 8 zone blocks
+    ids = np.arange(n, dtype=np.int32)
+    rng = np.random.default_rng(11)
+    table_cols = {"id": ids, "ts": ids.copy(),
+                  "val": rng.integers(0, 100, n).astype(np.int32)}
+    from repro.engine.table import Table
+
+    sess = Session(mode="kernel", enable_index=False)
+    sess.create_dataset("Clustered", Table(table_cols), dataverse="bench",
+                        primary="id")
+    df = AFrame("bench", "Clustered", session=sess)
+    n_blocks = -(-n // 4096)
+    rows = []
+    for label, span_blocks in (("1-block", 1),
+                               ("10pct", max(n_blocks // 10, 1)),
+                               ("50pct", max(n_blocks // 2, 1))):
+        lo = 4096  # start on a block boundary past block 0
+        hi = min(lo + span_blocks * 4096 - 1, n - 1)
+        cell: dict = {"size": size, "variant": "block_skip",
+                      "selectivity": label, "n_rows": n,
+                      "blocks_total": n_blocks}
+        for skip in (True, False):
+            sess.enable_block_skip = skip
+            tag = "skipped" if skip else "unskipped"
+            want = hi - lo + 1
+            got = len(df[(df["ts"] >= lo) & (df["ts"] <= hi)])  # warm/compile
+            assert got == want, (got, want)
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                len(df[(df["ts"] >= lo) & (df["ts"] <= hi)])
+                times.append(time.perf_counter() - t0)
+            rep = sess.last_prune_report
+            cell[tag] = {
+                "query_median_s": round(float(np.median(times)), 5),
+                "blocks_scanned": int(rep["blocks_scanned"]),
+                "blocks_skipped": int(rep["blocks_skipped"]),
+            }
+        sess.enable_block_skip = True
+        s, u = cell["skipped"], cell["unskipped"]
+        cell["query_speedup"] = round(
+            u["query_median_s"] / max(s["query_median_s"], 1e-9), 2)
+        print(f"  {size:>2} block_skip {label:<8} blocks "
+              f"{u['blocks_scanned']} -> {s['blocks_scanned']} "
+              f"of {n_blocks}  query {u['query_median_s']*1e3:.2f} -> "
+              f"{s['query_median_s']*1e3:.2f} ms "
+              f"({cell['query_speedup']}x)")
+        rows.append(cell)
+    return rows
+
+
 # mutation mix per workload: fractions of batches issued as (push, upsert,
 # delete); deletes target previously-ingested keys, upserts overwrite them.
 MUTATION_WORKLOADS = {
@@ -261,6 +327,7 @@ def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[d
         print(f"  {size:>2} deferred-compaction ingest speedup: {speedup:.1f}x")
         rows.append({"size": size, "variant": "speedup",
                      "ingest_speedup": round(speedup, 2)})
+        rows.extend(_block_skip_sweep(size))
         rows.extend(_mutation_sweep(size))
     if out_path is not None:
         out_path.write_text(json.dumps(rows, indent=2) + "\n")

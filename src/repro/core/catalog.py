@@ -32,11 +32,11 @@ class IndexInfo:
     # each row-sharded like the base table.
     sorted_keys: Optional[object] = None
     row_ids: Optional[object] = None
-    # per-ZONE_BLOCK min/max of sorted_keys, built in the same fused program
-    # as the sort. The run-level envelope (= the column's lo/hi stats) drives
-    # query-time zone-map RUN pruning in the physical planner; feeding the
-    # per-block values into the filter kernel for intra-run block skipping is
-    # still a ROADMAP item.
+    # per-ZONE_BLOCK min/max of sorted_keys (index order), built in the same
+    # fused program as the sort. The run-level envelope (= the column's lo/hi
+    # stats) drives query-time zone-map RUN pruning in the physical planner.
+    # Intra-component BLOCK skipping uses Dataset.block_zones instead — zone
+    # maps over the *storage* order, which is what the filter kernel streams.
     zone_min: Optional[object] = None
     zone_max: Optional[object] = None
 
@@ -69,11 +69,20 @@ class Dataset:
     # visible rows, not raw storage.
     anti_rows: int = 0                       # tombstones this component holds
     anti_keys_arr: Optional[object] = None   # sorted device array of anti keys
+    host_anti_keys: Optional[object] = None  # host copy of the same (point
+    #                                          lookups probe it without a
+    #                                          device->host transfer)
     annihilated_rows: int = 0                # own matter shadowed by newer anti
     annihilated_keys: set = dataclasses.field(default_factory=set)
     host_keys: Optional[object] = None       # host copy of the sorted matter
     #                                          primary keys (clustered order)
     level: int = 0                           # LSM level (leveled compaction)
+    # Intra-component zone maps (core/stats.py BlockZones): per-ZONE_BLOCK
+    # [min, max] of every integer column over the stored row layout,
+    # harvested at load (session.create_dataset/persist) and flush/compaction
+    # (lsm.make_run). The run-level envelope lives in the column stats; these
+    # per-block values feed kernel-grid block skipping.
+    block_zones: Optional[object] = None
 
     @property
     def num_live_rows(self) -> int:

@@ -45,8 +45,13 @@ class LoweringStrategy:
     """Single-program lowering: plain jnp over (possibly sharded) arrays —
     under jit, XLA GSPMD inserts any needed collectives."""
 
-    def __init__(self, kernel_backend: Optional[str] = None):
+    def __init__(self, kernel_backend: Optional[str] = None,
+                 kernel_interpret: Optional[bool] = None):
         self.kernel_backend = kernel_backend
+        # None = auto-detect per kernels/ops: compiled Pallas on TPU,
+        # interpret mode elsewhere; a Session(kernel_interpret=...) override
+        # forces one or the other (debugging / TPU bring-up).
+        self.kernel_interpret = kernel_interpret
 
     def count(self, mask):
         return jnp.sum(mask, dtype=jnp.int32)
@@ -63,15 +68,21 @@ class LoweringStrategy:
     def group_agg(self, env, mask, key, lo, num_groups, aggs):
         return physical.group_agg(env, mask, key, lo, num_groups, aggs)
 
-    def kernel_group_agg(self, gid, values, num_groups, n, op):
+    def kernel_group_agg(self, gid, values, num_groups, n, op,
+                         block_ids: Optional[tuple] = None):
         from repro.kernels import ops
         return ops.segment_agg(values, gid, num_groups, n, op=op,
-                               backend=self.kernel_backend)
+                               backend=self.kernel_backend,
+                               block_ids=block_ids,
+                               interpret=self.kernel_interpret)
 
-    def kernel_filter_count(self, mat, bounds):
+    def kernel_filter_count(self, mat, bounds,
+                            block_ids: Optional[tuple] = None):
         from repro.kernels import ops
         return ops.filter_count(mat, bounds, mat.shape[1],
-                                backend=self.kernel_backend)
+                                backend=self.kernel_backend,
+                                block_ids=block_ids,
+                                interpret=self.kernel_interpret)
 
     def index_count(self, ix_keys, valid, lo, hi):
         from repro.engine.index import index_count_local
@@ -110,8 +121,9 @@ class ShardMapStrategy(LoweringStrategy):
     per-shard inside shard_map with an explicit psum/pmax/gather merge
     (engine/distributed.py)."""
 
-    def __init__(self, mesh, data_axes, kernel_backend: Optional[str] = None):
-        super().__init__(kernel_backend)
+    def __init__(self, mesh, data_axes, kernel_backend: Optional[str] = None,
+                 kernel_interpret: Optional[bool] = None):
+        super().__init__(kernel_backend, kernel_interpret)
         self.mesh, self.data_axes = mesh, data_axes
 
     def count(self, mask):
@@ -141,16 +153,22 @@ class ShardMapStrategy(LoweringStrategy):
         out[key] = out.pop("__key__")
         return out, gmask
 
-    def kernel_group_agg(self, gid, values, num_groups, n, op):
+    def kernel_group_agg(self, gid, values, num_groups, n, op,
+                         block_ids: Optional[tuple] = None):
         from repro.engine import distributed as D
         return D.dist_kernel_group_agg(self.mesh, self.data_axes, gid, values,
                                        num_groups, op=op,
-                                       backend=self.kernel_backend)
+                                       backend=self.kernel_backend,
+                                       block_ids=block_ids,
+                                       interpret=self.kernel_interpret)
 
-    def kernel_filter_count(self, mat, bounds):
+    def kernel_filter_count(self, mat, bounds,
+                            block_ids: Optional[tuple] = None):
         from repro.engine import distributed as D
         return D.dist_kernel_filter_count(self.mesh, self.data_axes, mat,
-                                          bounds, backend=self.kernel_backend)
+                                          bounds, backend=self.kernel_backend,
+                                          block_ids=block_ids,
+                                          interpret=self.kernel_interpret)
 
     def index_count(self, ix_keys, valid, lo, hi):
         from repro.engine import distributed as D
@@ -180,8 +198,9 @@ def make_strategy(ctx: "ExecContext") -> LoweringStrategy:
     collective-placement strategy. Operator choice already happened in the
     planner."""
     if ctx.mode in ("shard_map", "kernel") and ctx.mesh is not None:
-        return ShardMapStrategy(ctx.mesh, ctx.data_axes, ctx.kernel_backend)
-    return LoweringStrategy(ctx.kernel_backend)
+        return ShardMapStrategy(ctx.mesh, ctx.data_axes, ctx.kernel_backend,
+                                ctx.kernel_interpret)
+    return LoweringStrategy(ctx.kernel_backend, ctx.kernel_interpret)
 
 
 @dataclasses.dataclass
@@ -191,6 +210,7 @@ class ExecContext:
     data_axes: tuple = ("data",)
     mode: str = "gspmd"         # gspmd | shard_map | kernel
     kernel_backend: Optional[str] = None  # kernels/ops dispatch: None|xla|pallas
+    kernel_interpret: Optional[bool] = None  # None = auto (TPU compiled)
     strategy: Optional[LoweringStrategy] = None
 
     def __post_init__(self):
@@ -251,7 +271,8 @@ def compile_physical(logical, phys: PH.PhysOp, ctx: ExecContext) -> CompiledQuer
 
 
 def compile_plan(opt_plan, ctx: ExecContext, *, enable_index: bool = True,
-                 enable_prune: bool = True) -> CompiledQuery:
+                 enable_prune: bool = True,
+                 enable_block_skip: bool = True) -> CompiledQuery:
     """Convenience one-shot path (``Session.persist``, tests): cost-plan the
     optimized logical plan — pruning decided from its own literal values —
     then lower. The knobs mirror the Session's planner settings."""
@@ -263,8 +284,12 @@ def compile_plan(opt_plan, ctx: ExecContext, *, enable_index: bool = True,
     raw_lits = ordered_lits(P.all_exprs(opt_plan))
     decisions = NO_PRUNE
     if enable_prune:
+        from repro.core.stats import single_shard
+
         pruner = build_pruner(opt_plan, ctx.catalog, raw_lits)
-        decisions = pruner.decide([l.value for l in raw_lits])
+        decisions = pruner.decide(
+            [l.value for l in raw_lits],
+            block_skip=enable_block_skip and single_shard(ctx.mesh))
     phys = plan_physical(opt_plan, ctx.catalog, mode=ctx.mode,
                          decisions=decisions, enable_index=enable_index)
     return compile_physical(opt_plan, phys, ctx)
@@ -301,6 +326,20 @@ def _shadowed(tables: dict, keys, shadow_sources) -> "jax.Array":
     return hit
 
 
+def _block_gather(blocks: Optional[tuple], zone_block: int):
+    """Static-slice gather of the surviving row blocks (ascending ids keep
+    the original row order). None = identity. Used by the generic stream
+    path — the gspmd/shard_map analogue of driving the kernel grid through
+    the block-id list."""
+    if blocks is None:
+        return lambda col: col
+
+    def sel(col):
+        parts = [col[b * zone_block:(b + 1) * zone_block] for b in blocks]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return sel
+
+
 def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
     """Returns fn(tables, params) -> (env, mask). Filters never compact
     (selection-vector execution; DESIGN.md §2)."""
@@ -308,11 +347,15 @@ def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
         key = f"{node.dataverse}.{node.dataset}"
         open_cast = node.open_cast
         shadow, key_col = node.shadow_sources, node.key_col
+        sel = _block_gather(node.block_ids, node.zone_block)
 
         def fn(tables, params):
             env, mask = _env_of(tables[key], open_cast)
+            env = {k: sel(v) for k, v in env.items()}
+            mask = sel(mask)
             if shadow:
-                mask = mask & ~_shadowed(tables, tables[key][key_col], shadow)
+                mask = mask & ~_shadowed(tables, sel(tables[key][key_col]),
+                                         shadow)
             return env, mask
         return fn
 
@@ -450,6 +493,7 @@ def _lower_kernel_segment_agg(node: PH.KernelSegmentAgg, ctx: ExecContext,
     exactness; count/sum/mean fuse into a single (BLOCK, C) value tile
     (col 0 counts, cols 1.. sum the value columns)."""
     key, lo, num_groups = node.key, node.lo, node.num_groups
+    comp_blocks = node.comp_blocks or tuple(None for _ in comps)
     vcols: list[str] = []   # distinct sum-family value columns, first-use order
     xcols: dict[str, list[str]] = {"max": [], "min": []}
     for _, op, col in aggs:
@@ -458,15 +502,21 @@ def _lower_kernel_segment_agg(node: PH.KernelSegmentAgg, ctx: ExecContext,
         elif op in ("max", "min") and col not in xcols[op]:
             xcols[op].append(col)
 
-    def launch(gid, cols_f32, n, op):
+    def launch(gid, cols_f32, n, op, block_ids):
         values = jnp.stack(cols_f32, axis=1)  # (n, C)
-        return ctx.strategy.kernel_group_agg(gid, values, num_groups, n, op)
+        return ctx.strategy.kernel_group_agg(gid, values, num_groups, n, op,
+                                             block_ids=block_ids)
 
     def fn(tables, params):
         sums = maxs = mins = None
         key_dtype = val_dtypes = None
-        for comp in comps:
+        for comp, blk in zip(comps, comp_blocks):
             env, mask = comp(tables, params)
+            # blk = (surviving zone-block ids, zone block size), hoisted off
+            # the component's TableScan: the stream stays full-length and the
+            # segment_agg grid itself skips pruned tiles (rows there are
+            # already masked out by the filter the list came from).
+            block_ids = blk[0] if blk is not None else None
             key_col = env[key]
             key_dtype = key_col.dtype
             val_dtypes = {c: env[c].dtype for _, _, c in aggs if c}
@@ -476,15 +526,17 @@ def _lower_kernel_segment_agg(node: PH.KernelSegmentAgg, ctx: ExecContext,
             n = mask.shape[0]
             tiles = [jnp.ones(mask.shape, jnp.float32)]
             tiles += [env[c].astype(jnp.float32) for c in vcols]
-            part = launch(gid, tiles, n, "sum")
+            part = launch(gid, tiles, n, "sum", block_ids)
             sums = part if sums is None else sums + part
             if xcols["max"]:
                 part = launch(gid, [env[c].astype(jnp.float32)
-                                    for c in xcols["max"]], n, "max")
+                                    for c in xcols["max"]], n, "max",
+                              block_ids)
                 maxs = part if maxs is None else jnp.maximum(maxs, part)
             if xcols["min"]:
                 part = launch(gid, [env[c].astype(jnp.float32)
-                                    for c in xcols["min"]], n, "min")
+                                    for c in xcols["min"]], n, "min",
+                              block_ids)
                 mins = part if mins is None else jnp.minimum(mins, part)
         counts = sums[:, 0].astype(jnp.int32)
         out = {key: jnp.arange(lo, lo + num_groups, dtype=key_dtype)}
@@ -592,10 +644,13 @@ def _lower_kernel_range_count(node: PH.KernelRangeCount, ctx: ExecContext) -> Ca
     when the base table carries a ``__valid__`` padding column it folds in as
     one extra kernel row with bounds (1, 1). Newer components' anti-matter
     folds into the SAME row: the matter mask (valid ∧ not-shadowed) is the
-    subtract-at-merge term, evaluated by the kernel itself."""
+    subtract-at-merge term, evaluated by the kernel itself. ``block_ids``
+    (bind-time block zone-map survivors) drive the kernel grid: skipped
+    tiles are never fetched."""
     key = f"{node.dataverse}.{node.dataset}"
     cols, los, his, has_valid = node.cols, node.los, node.his, node.has_valid
     shadow, key_col = node.shadow_sources, node.key_col
+    block_ids = node.block_ids
 
     def fn(tables, params):
         t = tables[key]
@@ -613,7 +668,8 @@ def _lower_kernel_range_count(node: PH.KernelRangeCount, ctx: ExecContext) -> Ca
             hi_vals.append(jnp.int32(1))
         mat = jnp.stack(rows)
         bounds = jnp.stack([jnp.stack(lo_vals), jnp.stack(hi_vals)], axis=1)
-        cnt = ctx.strategy.kernel_filter_count(mat, bounds)
+        cnt = ctx.strategy.kernel_filter_count(mat, bounds,
+                                               block_ids=block_ids)
         return {"count": cnt.astype(jnp.int32)}
     return fn
 

@@ -268,6 +268,30 @@ class AFrame:
         return new
 
     # -- actions -----------------------------------------------------------------------
+    def get(self, key) -> Optional[dict[str, np.ndarray]]:
+        """Point lookup by primary key — ``df.get(42)`` resolves the
+        equality predicate to per-component binary searches over the
+        clustered key copy (newest-wins across LSM components, anti-matter
+        aware), bypassing query compilation and kernel launches entirely.
+        Returns the row(s) as ``{column: array}`` or None when the key is
+        absent or deleted. Only valid on a bare dataset frame (no pending
+        filters/projections — those need the query path)."""
+        if not isinstance(self._plan, P.Scan):
+            raise ValueError(
+                "get() is a primary-key point lookup on the base dataset; "
+                "this frame carries pending operations — use a filter query")
+        return self._session.point_lookup(self._plan.dataverse,
+                                          self._plan.dataset, key)
+
+    def explain_get(self, key) -> str:
+        """The PointLookup plan ``get(key)`` executes, rendered like
+        ``explain()`` (per-component probe/skip counts and the newest-wins
+        resolution)."""
+        if not isinstance(self._plan, P.Scan):
+            raise ValueError("explain_get() needs a bare dataset frame")
+        return self._session.explain_lookup(self._plan.dataverse,
+                                            self._plan.dataset, key)
+
     def head(self, n: int = 5) -> dict[str, np.ndarray]:
         return self._session.execute(P.Limit(self._plan, n))
 

@@ -59,7 +59,28 @@ def optimize(root: P.Plan, catalog: Catalog | None = None, *,
         prev_fp = fp
     if enable_pushdown and catalog is not None:
         node = _prune_columns(node, catalog)
-    return node
+    return _uniquify(node, set())
+
+
+def _uniquify(node: P.Plan, seen: set[int]) -> P.Plan:
+    """Make the optimized plan a proper TREE. User plans are DAGs: derived
+    frames share the base frame's Scan object, and a self-join shares whole
+    subtrees — but the physical planner keys per-occurrence state (scan
+    ordinals, per-scan pruning constraints) by object identity, so a node
+    reachable twice would alias two branches' predicates onto one scan.
+    Clone every re-encountered node (copy-on-write; Expr objects stay
+    shared — literal slots are bound by Expr identity on purpose)."""
+    import copy
+
+    clone = copy.copy(node) if id(node) in seen else node
+    seen.add(id(clone))
+    kids = tuple(_uniquify(c, seen) for c in clone.children)
+    if kids != tuple(clone.children):
+        if clone is node:  # never mutate a node the raw plan still owns
+            clone = copy.copy(node)
+            seen.add(id(clone))
+        clone.children = kids
+    return clone
 
 
 def _expand_feeds(node: P.Plan, catalog: Catalog) -> P.Plan:

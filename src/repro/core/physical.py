@@ -121,15 +121,56 @@ def _shadow_fp(shadow_sources) -> str:
     return "|".join(f"{dv}.{name}" for dv, name in shadow_sources)
 
 
+def _blocks_fp(block_ids) -> str:
+    # Surviving-block lists are STATIC plan structure (baked into the gather
+    # slices / kernel grid), so they must participate in the executable-dedup
+    # fingerprint — two bindings with different surviving blocks can never
+    # share a compiled program.
+    return "all" if block_ids is None else ",".join(map(str, block_ids))
+
+
+class _BlockSkip:
+    """Mixin state for operators that can skip zone-map-pruned blocks.
+
+    ``block_ids`` is the static ascending tuple of surviving block indices
+    (None = scan everything); ``zone_block`` the block size in rows;
+    ``blocks_total`` the component's physical block count (0 when the
+    component has no block zone maps). ``blocks_scanned`` reports the blocks
+    the operator actually reads — it can differ from ``len(block_ids)``
+    only when a parent hoisted the list into its own kernel grid
+    (KernelSegmentAgg)."""
+
+    block_ids: Optional[tuple] = None
+    zone_block: int = 0
+    blocks_total: int = 0
+    blocks_scanned: int = 0
+
+    def set_blocks(self, block_ids, zone_block: int, total: int) -> None:
+        self.block_ids = tuple(block_ids) if block_ids is not None else None
+        self.zone_block = int(zone_block)
+        self.blocks_total = int(total)
+        self.blocks_scanned = total if block_ids is None else len(block_ids)
+
+    def block_note(self) -> str:
+        skipped = self.blocks_total - self.blocks_scanned
+        return (f"zone maps: {self.blocks_scanned}/{self.blocks_total} "
+                f"block(s) scanned, {skipped} skipped")
+
+
 # -- stream operators (produce (env, mask)) ---------------------------------
 
 
-class TableScan(PhysOp):
+class TableScan(PhysOp, _BlockSkip):
     """Full component scan. ``shadow_sources`` are the newer LSM components
     whose anti-matter annihilates into this one: the lowering subtracts the
     shadowed rows from the stream mask (a sorted-probe per source on the
     ``key_col`` primary key), so every operator above sees only visible
-    matter — in all three execution modes."""
+    matter — in all three execution modes.
+
+    With ``block_ids`` set (bind-time block zone-map test) the lowering
+    streams only the surviving row blocks — sound because the planner only
+    sets the list when every conjunct it derives from is applied above this
+    scan, so skipped blocks provably contribute no passing rows."""
 
     def __init__(self, dataverse: str, dataset: str, open_cast: bool = False,
                  key_col: Optional[str] = None,
@@ -144,11 +185,14 @@ class TableScan(PhysOp):
 
     def fingerprint(self):
         return (f"p:scan({self.dataverse}.{self.dataset},{int(self.open_cast)},"
-                f"{self.key_col},{_shadow_fp(self.shadow_sources)})")
+                f"{self.key_col},{_shadow_fp(self.shadow_sources)},"
+                f"blk:{_blocks_fp(self.block_ids)})")
 
     def label(self):
         out = f"TableScan {self.dataverse}.{self.dataset}" + \
             (" [open: cast-per-access]" if self.open_cast else "")
+        if self.blocks_total and self.blocks_scanned < self.blocks_total:
+            out += f" [blocks {self.blocks_scanned}/{self.blocks_total}]"
         if self.shadow_sources:
             out += (f" ⊖ anti-matter of {len(self.shadow_sources)} newer "
                     f"component(s)")
@@ -339,7 +383,14 @@ class KernelSegmentAgg(PhysOp):
     """Group-by lowered onto the segment_agg Pallas kernel: one fused
     one-hot-matmul launch per component for the sum family (+1 per extreme
     family), partials merged with +/max/min. Children are the per-LSM-
-    component streams. Chosen only under a static f32-exactness proof."""
+    component streams. Chosen only under a static f32-exactness proof.
+
+    ``comp_blocks[i]`` is the i-th component's surviving-block list
+    (zone-block units; None = all blocks), HOISTED off that component's
+    TableScan by the planner so the segment_agg grid itself skips pruned
+    tiles instead of the stream gathering a compacted copy first."""
+
+    comp_blocks: tuple = ()
 
     def __init__(self, comps: Sequence[PhysOp], key: str, lo: int,
                  num_groups: int, aggs):
@@ -350,8 +401,10 @@ class KernelSegmentAgg(PhysOp):
     def fingerprint(self):
         a = ",".join(s.fingerprint() for s in self.aggs)
         inner = ",".join(c.fingerprint() for c in self.children)
+        blk = ";".join(_blocks_fp(b) for b in self.comp_blocks) \
+            if self.comp_blocks else "all"
         return (f"p:ksegagg({self.key},{self.lo},{self.num_groups},[{a}],"
-                f"{inner})")
+                f"blk:{blk},{inner})")
 
     def label(self):
         return (f"KernelSegmentAgg {self.key} G={self.num_groups} "
@@ -462,12 +515,17 @@ class SubtractScalars(PhysOp):
         return f"SubtractScalars [{', '.join(self.names)}] [anti-matter]"
 
 
-class KernelRangeCount(PhysOp):
+class KernelRangeCount(PhysOp, _BlockSkip):
     """COUNT of conjunctive inclusive ranges over integer columns lowered
     onto the filter_count Pallas kernel: one (k, n) tile pass, bounds as a
     (k, 2) runtime operand, no mask column in HBM. With shadow sources the
     matter/visibility mask folds in as ONE extra kernel row with bounds
-    (1, 1) — the kernel itself performs the subtract-at-merge."""
+    (1, 1) — the kernel itself performs the subtract-at-merge.
+
+    ``block_ids`` drives the kernel grid through surviving blocks only
+    (scalar-prefetched index_map): grid size = surviving blocks, skipped
+    tiles are never fetched, and the count stays bit-identical because a
+    skipped block's zone span proves no row satisfies the conjuncts."""
 
     def __init__(self, dataverse: str, dataset: str, cols: Sequence[str],
                  los: Sequence[Expr], his: Sequence[Expr], has_valid: bool,
@@ -493,11 +551,14 @@ class KernelRangeCount(PhysOp):
     def fingerprint(self):
         return (f"p:krangecount({self.dataverse}.{self.dataset},"
                 f"[{','.join(self.cols)}],{int(self.has_valid)},"
-                f"{self.key_col},{_shadow_fp(self.shadow_sources)})")
+                f"{self.key_col},{_shadow_fp(self.shadow_sources)},"
+                f"blk:{_blocks_fp(self.block_ids)})")
 
     def label(self):
         out = (f"KernelRangeCount {self.dataverse}.{self.dataset} "
                f"[{', '.join(self.cols)}] [filter_count kernel]")
+        if self.blocks_total and self.blocks_scanned < self.blocks_total:
+            out += f" [blocks {self.blocks_scanned}/{self.blocks_total}]"
         if self.shadow_sources:
             out += " [matter-mask row folded]"
         return out
@@ -564,6 +625,36 @@ class MergeScalars(PhysOp):
                 f"{len(self.pruned)} pruned]")
 
 
+class PointLookup(PhysOp):
+    """Primary-key point lookup — the one access path that bypasses query
+    compilation entirely: per-component host binary searches over the
+    clustered key copy, walked newest → oldest so anti-matter resolves
+    without any subtraction arithmetic (the first component owning the key
+    decides: fresh matter wins, a tombstone kills every older occurrence).
+    Components whose key zone span misses the probe are skipped without a
+    search. Rendered by ``explain`` like every other physical operator."""
+
+    def __init__(self, dataverse: str, dataset: str, key_col: str,
+                 components: int, probed: int, skipped: int,
+                 found_in: Optional[str] = None,
+                 tombstoned_by: Optional[str] = None):
+        self.dataverse, self.dataset, self.key_col = dataverse, dataset, key_col
+        self.components = components
+        self.probed, self.skipped = probed, skipped
+        self.found_in = found_in
+        self.tombstoned_by = tombstoned_by
+
+    def fingerprint(self):
+        return (f"p:pointlookup({self.dataverse}.{self.dataset},"
+                f"{self.key_col})")
+
+    def label(self):
+        return (f"PointLookup {self.dataverse}.{self.dataset} on "
+                f"{self.key_col} [newest-wins, {self.probed} of "
+                f"{self.components} component(s) probed, "
+                f"{self.skipped} span-skipped]")
+
+
 # -- explain rendering --------------------------------------------------------
 
 
@@ -599,10 +690,19 @@ def format_plan(root: PhysOp) -> str:
 
 def prune_report(root: PhysOp) -> dict:
     """Aggregate pruning metrics over a physical plan (benchmarks / CI smoke
-    read this): component counts and physical rows touched vs. skipped."""
+    read this): component counts, physical rows touched vs. skipped, and the
+    intra-component block tally of the second pruning level."""
     components = pruned = 0
     rows_pruned = tombstones_retained = 0
+    blocks_total = blocks_scanned = 0
+    compaction_recommended = False
     for node in walk(root):
+        if getattr(node, "compaction_recommended", False):
+            compaction_recommended = True
+        bt = getattr(node, "blocks_total", 0)
+        if bt:
+            blocks_total += bt
+            blocks_scanned += getattr(node, "blocks_scanned", bt)
         p = getattr(node, "pruned", None)
         if p is None:
             continue
@@ -615,4 +715,7 @@ def prune_report(root: PhysOp) -> dict:
     return {"components": components, "pruned": pruned,
             "rows_pruned": rows_pruned, "rows_touched": rows_touched,
             "tombstones_retained": tombstones_retained,
+            "blocks_total": blocks_total, "blocks_scanned": blocks_scanned,
+            "blocks_skipped": blocks_total - blocks_scanned,
+            "compaction_recommended": compaction_recommended,
             "total_cost": root.total_cost()}

@@ -70,6 +70,13 @@ DEFAULT_EQ_SELECTIVITY = 0.1
 DEFAULT_RANGE_SELECTIVITY = 0.33
 _F32_EXACT = 1 << 24   # ints in [-2^24, 2^24] are exact in float32
 
+# Read-amplification thresholds (the mutation follow-up): a query over a fed
+# dataset pays one access-path probe per component plus one batched probe per
+# retained tombstone. When either grows past these bounds the per-query tax
+# exceeds what one compaction would amortize — explain() says so.
+READ_AMP_COMPONENTS = 6        # components probed per query
+READ_AMP_TOMBSTONE_FRAC = 0.25  # tombstones / visible rows
+
 
 def _conjunct_selectivity(c: Expr, stats: TableStats) -> float:
     """Deterministic textbook selectivity from stats alone (literal values
@@ -130,6 +137,23 @@ class _Constraint:
             return lo >= v
         return False
 
+    def block_keep(self, spans: np.ndarray, v) -> np.ndarray:
+        """Vectorized per-block form of (not excludes): ``spans`` is the
+        (n_blocks, 2) [lo, hi] zone-map array; returns the boolean keep mask.
+        Empty blocks carry the [max, min] sentinel and fail every test."""
+        lo, hi = spans[:, 0], spans[:, 1]
+        if self.op == "==":
+            return (lo <= v) & (v <= hi)
+        if self.op == ">=":
+            return hi >= v
+        if self.op == ">":
+            return hi > v
+        if self.op == "<=":
+            return lo <= v
+        if self.op == "<":
+            return lo < v
+        return np.ones(spans.shape[0], bool)
+
     def bound_repr(self, v) -> tuple:
         return {"==": (v, v), ">=": (v, "+∞"), ">": (f">{v}", "+∞"),
                 "<=": ("-∞", v), "<": ("-∞", f"<{v}")}[self.op]
@@ -154,15 +178,37 @@ class _UnionDesc:
     comps: list[_CompDesc]
 
 
+@dataclasses.dataclass
+class _ScanDesc:
+    """Block-skip opportunity for one Scan site: its component's per-block
+    zone maps plus the provenance-proven ``col <op> lit`` conjuncts applied
+    above it. The second level of the pruning hierarchy — run-level pruning
+    drops whole components, this refines what survives down to blocks."""
+
+    ordinal: int                 # scan ordinal (walk order over the opt plan)
+    address: str
+    n_blocks: int
+    zone_block: int
+    spans: dict                  # column -> (n_blocks, 2) int64 zone array
+    constraints: list[_Constraint]
+
+
 class PruneDecisions:
     """Bind-time pruning outcome: per union ordinal, the surviving component
-    indices and the zone-map rationale for each dropped run. ``signature``
-    keys the Session's third cache level."""
+    indices and the zone-map rationale for each dropped run; per scan
+    ordinal, the surviving block-id list of the intra-component refinement.
+    ``signature`` keys the Session's third cache level — block lists are in
+    it because they are static plan structure (kernel grids / gather slices
+    bake them in)."""
 
-    def __init__(self, by_union: dict[int, tuple[tuple, tuple]]):
+    def __init__(self, by_union: dict[int, tuple[tuple, tuple]],
+                 blocks: Optional[dict] = None):
         self.by_union = by_union
-        self.signature = tuple(sorted(
-            (k, tuple(surv)) for k, (surv, _) in by_union.items()))
+        self.blocks = blocks or {}
+        self.signature = (
+            tuple(sorted((k, tuple(surv))
+                         for k, (surv, _) in by_union.items())),
+            tuple(sorted(self.blocks.items())))
 
     def surviving(self, ordinal: int, n: int) -> tuple:
         if ordinal not in self.by_union:
@@ -174,23 +220,30 @@ class PruneDecisions:
             return ()
         return self.by_union[ordinal][1]
 
+    def block_ids(self, scan_ordinal: int) -> Optional[tuple]:
+        return self.blocks.get(scan_ordinal)
+
 
 NO_PRUNE = PruneDecisions({})
 
 
 class Pruner:
     """Extracted once per (optimized plan, stats epoch); ``decide`` is the
-    cheap per-execution pass (pure interval arithmetic on python scalars)."""
+    cheap per-execution pass (pure interval arithmetic on python scalars,
+    plus one O(n_blocks) vector test per constrained scan)."""
 
-    def __init__(self, unions: list[_UnionDesc]):
+    def __init__(self, unions: list[_UnionDesc],
+                 scans: Optional[list[_ScanDesc]] = None):
         self.unions = unions
+        self.scans = scans or []
 
     @property
     def has_prunable(self) -> bool:
         return any(c.prunable and c.constraints for u in self.unions
                    for c in u.comps)
 
-    def decide(self, raw_values: list) -> PruneDecisions:
+    def decide(self, raw_values: list,
+               block_skip: bool = True) -> PruneDecisions:
         by_union: dict[int, tuple[tuple, tuple]] = {}
         for u in self.unions:
             surviving: list[int] = []
@@ -223,7 +276,30 @@ class Pruner:
                 surviving = [0]
                 pruned = [r for r in pruned if r.address != u.comps[0].address]
             by_union[u.ordinal] = (tuple(surviving), tuple(pruned))
-        return PruneDecisions(by_union)
+        blocks: dict[int, tuple] = {}
+        if block_skip:
+            for d in self.scans:
+                keep = np.ones(d.n_blocks, bool)
+                applied = False
+                for con in d.constraints:
+                    spans = d.spans.get(con.column)
+                    if spans is None:
+                        continue
+                    v = con.value(raw_values)
+                    if not isinstance(v, (int, float, np.integer,
+                                          np.floating)):
+                        continue
+                    applied = True
+                    keep &= con.block_keep(spans, v)
+                if not applied or keep.all():
+                    continue
+                ids = tuple(int(b) for b in np.nonzero(keep)[0])
+                # keep at least one block: a zero-size kernel grid never
+                # initializes its accumulator, and downstream static shapes
+                # need >= 1 row. An extra surviving block never changes the
+                # result — its rows simply fail the predicate.
+                blocks[d.ordinal] = ids if ids else (0,)
+        return PruneDecisions(by_union, blocks)
 
 
 def _origin_column(node: P.Plan, name: str) -> Optional[str]:
@@ -232,6 +308,8 @@ def _origin_column(node: P.Plan, name: str) -> Optional[str]:
     name is computed (UDF/arith) or shadowed — a predicate on such a column
     must never be matched against catalog spans by name (``df["k"] =
     df["v"]`` rebinds the name k to v's values; k's stored span is a lie)."""
+    from repro.core.window import Window
+
     if isinstance(node, P.Scan):
         return name
     if isinstance(node, P.Project):
@@ -241,6 +319,8 @@ def _origin_column(node: P.Plan, name: str) -> Optional[str]:
                     return _origin_column(node.children[0], e.name)
                 return None
         return None
+    if isinstance(node, Window) and name == node.out_name:
+        return None  # computed analytic column shadows any stored namesake
     if len(node.children) == 1:  # filter/limit/sort/window pass through
         return _origin_column(node.children[0], name)
     return None
@@ -264,10 +344,59 @@ def _union_ordinals(opt: P.Plan) -> dict[int, int]:
     return out
 
 
+def _scan_ordinals(opt: P.Plan) -> dict[int, int]:
+    """Scan nodes numbered in walk order — the block-skip decisions are
+    keyed by these, and build_pruner / plan_physical walk the same plan
+    object so the numbering agrees."""
+    out: dict[int, int] = {}
+    for node in P.walk(opt):
+        if isinstance(node, P.Scan):
+            out[id(node)] = len(out)
+    return out
+
+
+def _scan_constraints(opt: P.Plan, lit_ref) -> dict[int, list[_Constraint]]:
+    """Provenance-proven ``col <op> lit`` conjuncts per Scan site: a
+    Filter/FilterCount contributes its conjuncts to the Scan it reaches
+    through ROW-WISE nodes only (more Filters, Projects — renames resolved
+    by ``_origin_column``; a rebound name never constrains the stored
+    column). Anything positional between the filter and the scan (Limit,
+    TopK, Sort+Limit, Window, a union, a join) breaks the chain: those
+    operators consume rows by position, so pruning rows the *later* filter
+    would drop could change which rows they emit."""
+    out: dict[int, list[_Constraint]] = {}
+    for node in P.walk(opt):
+        pred = getattr(node, "predicate", None)
+        if not isinstance(node, (P.Filter, P.FilterCount)) or pred is None:
+            continue
+        cur = node.children[0]
+        while isinstance(cur, (P.Filter, P.Project)):
+            cur = cur.children[0]
+        if not isinstance(cur, P.Scan):
+            continue
+        scan = cur
+        for c in _split_conjuncts(pred):
+            if not isinstance(c, Compare):
+                continue
+            l, r = c.children
+            if not (isinstance(l, Col) and isinstance(r, Lit)) \
+                    or c.op not in ("==", ">=", ">", "<=", "<"):
+                continue
+            origin = _origin_column(node.children[0], l.name)
+            if origin is not None:
+                out.setdefault(id(scan), []).append(
+                    _Constraint(origin, c.op, lit_ref(r)))
+    return out
+
+
 def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list) -> Pruner:
     """Walk the optimized plan's LSM unions and describe every component's
     prune opportunity: its zone spans plus the ``col <op> lit`` conjuncts
-    (from the pushed-down per-component filters) that bound it."""
+    (from the pushed-down per-component filters) that bound it. A second
+    pass describes every constrained Scan's *block-level* opportunity (the
+    per-ZONE_BLOCK zone maps harvested at load/flush time) — including
+    scans of plain, non-fed datasets, which have no run to prune but whole
+    kernel tiles to skip."""
     raw_index = {id(l): i for i, l in enumerate(raw_lits)}
 
     def lit_ref(lit: Lit) -> tuple:
@@ -278,6 +407,7 @@ def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list) -> Pruner:
             return ("raw", raw_index[id(src)])
         return ("const", lit.value)
 
+    per_scan = _scan_constraints(opt, lit_ref)
     unions: list[_UnionDesc] = []
     ordinals = _union_ordinals(opt)
     for node in P.walk(opt):
@@ -297,31 +427,33 @@ def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list) -> Pruner:
                 continue
             spans = {name: cs.span for name, cs in stats.columns.items()
                      if cs.span is not None and not cs.is_string}
-            constraints: list[_Constraint] = []
-            for n in P.walk(child):
-                pred = getattr(n, "predicate", None)
-                if not isinstance(n, (P.Filter, P.FilterCount)) or pred is None:
-                    continue
-                for c in _split_conjuncts(pred):
-                    if not isinstance(c, Compare):
-                        continue
-                    l, r = c.children
-                    if not (isinstance(l, Col) and isinstance(r, Lit)) \
-                            or c.op not in ("==", ">=", ">", "<=", "<"):
-                        continue
-                    # trace the stream name to its STORED column: a Project
-                    # may have rebound it (df["k"] = df["v"]), in which case
-                    # the stored k's zone span says nothing about this
-                    # predicate — only provenance-proven constraints prune.
-                    origin = _origin_column(n.children[0], l.name)
-                    if origin is not None and origin in spans:
-                        constraints.append(_Constraint(origin, c.op,
-                                                       lit_ref(r)))
+            constraints = [c for c in per_scan.get(id(scan), ())
+                           if c.column in spans]
             comps.append(_CompDesc(stats.address, stats.rows, spans,
                                    constraints, prunable=True,
                                    tombstones=stats.tombstones))
         unions.append(_UnionDesc(ordinals[id(node)], comps))
-    return Pruner(unions)
+    scan_descs: list[_ScanDesc] = []
+    scan_ords = _scan_ordinals(opt)
+    for node in P.walk(opt):
+        if not isinstance(node, P.Scan):
+            continue
+        cons = per_scan.get(id(node))
+        if not cons:
+            continue
+        try:
+            stats = harvest(catalog.get(node.dataverse, node.dataset))
+        except KeyError:
+            continue
+        bz = stats.block_zones
+        if bz is None or bz.n_blocks <= 1:
+            continue  # a single block can never be skipped
+        usable = [c for c in cons if c.column in bz.spans]
+        if usable:
+            scan_descs.append(_ScanDesc(scan_ords[id(node)], stats.address,
+                                        bz.n_blocks, bz.block, dict(bz.spans),
+                                        usable))
+    return Pruner(unions, scan_descs)
 
 
 # -- the planner -------------------------------------------------------------
@@ -335,12 +467,21 @@ class _PlannerCtx:
         self.decisions = decisions
         self.enable_index = enable_index
         self.ordinals: dict[int, int] = {}
+        self.scan_ordinals: dict[int, int] = {}
 
     def stats(self, dataverse: str, dataset: str) -> Optional[TableStats]:
         try:
             return harvest(self.catalog.get(dataverse, dataset))
         except KeyError:
             return None
+
+    def scan_blocks(self, scan: P.Plan) -> Optional[tuple]:
+        """Surviving block ids of the bind-time block zone-map test for this
+        Scan site (None = no skipping)."""
+        ordinal = self.scan_ordinals.get(id(scan))
+        if ordinal is None:
+            return None
+        return self.decisions.block_ids(ordinal)
 
     @property
     def kernels(self) -> bool:
@@ -352,9 +493,10 @@ def plan_physical(opt: P.Plan, catalog: Catalog, *, mode: str = "gspmd",
                   enable_index: bool = True) -> PH.PhysOp:
     """Logical (optimized) plan → costed physical plan. ``decisions`` is the
     bind-time pruning outcome; the returned plan reads only surviving
-    components."""
+    components, and only their surviving blocks."""
     ctx = _PlannerCtx(catalog, mode, decisions, enable_index)
     ctx.ordinals = _union_ordinals(opt)
+    ctx.scan_ordinals = _scan_ordinals(opt)
     return _plan_terminal(opt, ctx)
 
 
@@ -402,10 +544,25 @@ def _plan_scan(node: P.Scan, ctx: _PlannerCtx) -> PH.PhysOp:
         out.est_rows = stats.rows
         out.rows_touched = stats.padded_rows
         out.cost = stats.padded_rows * C_ROW_SCAN + n_anti * C_TOMBSTONE
+        bz = stats.block_zones
+        blocks = ctx.scan_blocks(node)
+        if bz is not None:
+            out.set_blocks(blocks, bz.block, bz.n_blocks)
+        if blocks is not None and bz is not None:
+            # discount the scan by the surviving fraction: the lowering
+            # streams only these blocks (skipped blocks provably hold no
+            # rows passing the conjuncts the list was derived from).
+            frac = len(blocks) / bz.n_blocks
+            out.rows_touched = min(stats.padded_rows,
+                                   len(blocks) * bz.block)
+            out.est_rows = max(stats.rows * frac, 1)
+            out.cost = out.rows_touched * C_ROW_SCAN + n_anti * C_TOMBSTONE
+            out.note = out.block_note()
     if shadow:
-        out.note = (f"newest-wins: {n_anti} tombstone(s) in "
-                    f"{len(shadow)} newer component(s) subtract from this "
-                    f"scan's mask")
+        note = (f"newest-wins: {n_anti} tombstone(s) in "
+                f"{len(shadow)} newer component(s) subtract from this "
+                f"scan's mask")
+        out.note = (out.note + " — " if out.note else "") + note
     return out
 
 
@@ -542,6 +699,34 @@ def _plan_stream(node: P.Plan, ctx: _PlannerCtx) -> PH.PhysOp:
     raise NotImplementedError(f"no physical plan for {type(node).__name__}")
 
 
+def _charge_read_amp(ctx: _PlannerCtx, out: PH.PhysOp, kids: list) -> None:
+    """The read-amplification cost term (mutation follow-up): every query
+    over a fed dataset pays one access-path probe per surviving component
+    plus one batched searchsorted probe per resident tombstone. The per-
+    component per-tombstone charges already live on the scans; this charges
+    the *union-level* probing tax and flags when a compaction would pay for
+    itself within a handful of queries."""
+    probes = 0
+    tombstones = visible = 0
+    for k in kids:
+        st = _leaf_stats(k, ctx)
+        if st is None:
+            continue
+        probes += 1
+        tombstones += st.tombstones
+        visible += st.rows
+    tombstones += sum(p.tombstones for p in getattr(out, "pruned", ()))
+    out.cost += probes * C_PROBE
+    amp = probes > READ_AMP_COMPONENTS or (
+        visible > 0 and tombstones / visible > READ_AMP_TOMBSTONE_FRAC)
+    if amp:
+        out.compaction_recommended = True
+        note = (f"read amplification: {probes} component probe(s), "
+                f"{tombstones} tombstone(s) subtract per query — "
+                f"compaction recommended")
+        out.note = (out.note + " — " if out.note else "") + note
+
+
 def _plan_union_runs(node: P.UnionRuns, ctx: _PlannerCtx) -> PH.PhysOp:
     ordinal = ctx.ordinals.get(id(node), -1)
     surviving = ctx.decisions.surviving(ordinal, len(node.children))
@@ -553,6 +738,7 @@ def _plan_union_runs(node: P.UnionRuns, ctx: _PlannerCtx) -> PH.PhysOp:
     if pruned:
         out.note = (f"zone maps pruned {len(pruned)}/{len(node.children)} "
                     f"components ({sum(p.rows for p in pruned):,} rows skipped)")
+    _charge_read_amp(ctx, out, kids)
     return out
 
 
@@ -638,6 +824,7 @@ def _plan_terminal(node: P.Plan, ctx: _PlannerCtx) -> PH.PhysOp:
             out.note = (f"zone maps pruned {len(pruned)}/{len(node.children)} "
                         f"components "
                         f"({sum(p.rows for p in pruned):,} rows skipped)")
+        _charge_read_amp(ctx, out, kids)
         return out
 
     if isinstance(node, P.FilterCount):
@@ -733,12 +920,24 @@ def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
                 if krc is not None:
                     krc.est_rows = max(stats.rows * sel, 1)
                     krc.rows_touched = stats.padded_rows
+                    notes = []
+                    if krc.block_ids is not None:
+                        # the kernel grid visits only surviving blocks: the
+                        # launch cost scales with blocks scanned, not total.
+                        krc.rows_touched = min(
+                            stats.padded_rows,
+                            len(krc.block_ids) * krc.zone_block)
+                        krc.est_rows = max(
+                            krc.est_rows * len(krc.block_ids)
+                            / max(krc.blocks_total, 1), 1)
+                        notes.append(krc.block_note())
                     krc.cost = C_KERNEL_LAUNCH \
-                        + stats.padded_rows * C_ROW_KERNEL \
+                        + krc.rows_touched * C_ROW_KERNEL \
                         + n_anti * C_TOMBSTONE
                     if shadow:
-                        krc.note = (f"matter mask folds {n_anti} newer "
-                                    f"tombstone(s) into one kernel row")
+                        notes.append(f"matter mask folds {n_anti} newer "
+                                     f"tombstone(s) into one kernel row")
+                    krc.note = " — ".join(notes)
                     candidates.append(krc)
 
     generic = PH.MaskCount(_plan_stream(child, ctx), pred)
@@ -802,9 +1001,13 @@ def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
         his.append(hi)
     ds = ctx.catalog.get(scan.dataverse, scan.dataset)
     has_valid = "__valid__" in ds.table.columns
-    return PH.KernelRangeCount(scan.dataverse, scan.dataset, cols, los, his,
-                               has_valid, key_col=key_col,
-                               shadow_sources=shadow_sources)
+    out = PH.KernelRangeCount(scan.dataverse, scan.dataset, cols, los, his,
+                              has_valid, key_col=key_col,
+                              shadow_sources=shadow_sources)
+    bz = stats.block_zones
+    if bz is not None:
+        out.set_blocks(ctx.scan_blocks(scan), bz.block, bz.n_blocks)
+    return out
 
 
 def _plan_join_count(lnode: P.Plan, rnode: P.Plan, left_on: str, right_on: str,
@@ -947,9 +1150,32 @@ def _plan_groupagg(node: P.GroupAgg, ctx: _PlannerCtx) -> PH.PhysOp:
         if isinstance(child, PH.PrunedUnionRuns):
             out.pruned = child.pruned
             out.note = child.note
+        # hoist each component's surviving-block list off its TableScan into
+        # the segment_agg grid itself: the stream then feeds full-length
+        # columns (no gather copy) and the kernel's index_map skips pruned
+        # tiles — rows in skipped blocks are already masked out by the
+        # filter the list was derived from.
+        comp_blocks: list = []
+        skipped = total = 0
+        for c in comps:
+            scans = [s for s in PH.walk(c) if isinstance(s, PH.TableScan)
+                     and s.block_ids is not None]
+            if len(scans) == 1:
+                s = scans[0]
+                comp_blocks.append((s.block_ids, s.zone_block))
+                skipped += s.blocks_total - len(s.block_ids)
+                total += s.blocks_total
+                s.block_ids = None  # the kernel grid skips, not the stream
+            else:
+                comp_blocks.append(None)
+        out.comp_blocks = tuple(comp_blocks)
         out.est_rows = num_groups
         out.cost = sum(c.est_rows for c in comps) * C_ROW_KERNEL \
             + C_KERNEL_LAUNCH * len(comps)
+        if skipped:
+            out.note = (out.note + " — " if out.note else "") + \
+                (f"zone maps: {total - skipped}/{total} block(s) in the "
+                 f"segment_agg grid(s), {skipped} skipped")
         out.note = (out.note + " — " if out.note else "") + \
             "f32 exactness proven from stats: segment_agg kernel"
         return out

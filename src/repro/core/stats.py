@@ -13,7 +13,9 @@ component the engine owns:
   * **materialized views** — group counts and key domain of the
     incrementally-maintained state.
 
-Every harvest is O(metadata): nothing touches device arrays. The catalog
+Every harvest is O(metadata): nothing touches device arrays. (The per-block
+``BlockZones`` referenced by a harvest are computed O(rows) ONCE at
+load/flush/compaction time and merely handed through here.) The catalog
 carries a ``stats_epoch`` bumped on any event that changes what statistics
 describe (DDL, feed flush, compaction) — compiled plans are keyed by the
 epoch, so a stale executable can never read a dropped LSM component.
@@ -26,6 +28,49 @@ from typing import Mapping, Optional
 import numpy as np
 
 from repro.core.catalog import INTERNAL_COLUMNS, Catalog, Dataset
+
+# Zone-map block granularity: one zone block per filter_count kernel tile —
+# literally the kernel's BLOCK, imported so the equality is structural
+# (kernels/ops.py re-exports it for the kernel-side grid expansion).
+from repro.kernels.filter_count import BLOCK as ZONE_BLOCK_ROWS
+
+
+def single_shard(mesh) -> bool:
+    """Block-skip eligibility: surviving-block lists are expressed over the
+    GLOBAL row layout, which per-shard kernel grids and gathers only match
+    when there is exactly one shard. The same predicate gates the harvest
+    (no point building zones a session can never consult) and the bind-time
+    decision."""
+    return mesh is None or mesh.devices.size == 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockZones:
+    """Intra-component zone maps: per-``ZONE_BLOCK_ROWS`` [min, max] of each
+    integer column over the component's physical row layout (matter only).
+    Harvested once at load / flush / compaction; the bind-time block-skip
+    test intersects bound predicate intervals with these spans to compact
+    the kernel grid down to surviving blocks."""
+
+    block: int
+    n_blocks: int
+    spans: Mapping[str, "object"]  # column -> (n_blocks, 2) int64 ndarray
+
+    def span_of(self, column: str):
+        return self.spans.get(column)
+
+
+def harvest_block_zones(table) -> Optional[BlockZones]:
+    """Compute a table's per-block zone maps (None when no integer column
+    exists or the table is empty). O(rows) at load/flush time — never at
+    query time."""
+    from repro.engine.table import compute_block_zones
+
+    spans = compute_block_zones(table, ZONE_BLOCK_ROWS)
+    if not spans:
+        return None
+    nb = int(next(iter(spans.values())).shape[0])
+    return BlockZones(ZONE_BLOCK_ROWS, nb, spans)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +118,7 @@ class TableStats:
     kind: str = "dataset"        # dataset | run | view
     tombstones: int = 0
     shadowed: int = 0
+    block_zones: Optional[BlockZones] = None  # intra-component zone maps
 
     def column(self, name: str) -> Optional[ColumnStats]:
         return self.columns.get(name)
@@ -108,7 +154,8 @@ def harvest(ds: Dataset) -> TableStats:
                       columns=cols,
                       kind="run" if "@" in ds.name else "dataset",
                       tombstones=ds.anti_rows,
-                      shadowed=ds.annihilated_rows)
+                      shadowed=ds.annihilated_rows,
+                      block_zones=ds.block_zones)
 
 
 def component_stats(catalog: Catalog, dataverse: str, name: str) -> TableStats:

@@ -263,17 +263,27 @@ def hash_repartition_counts(mesh: Mesh, data_axes, lkey, lmask, rkey, rmask,
 
 
 def dist_kernel_filter_count(mesh: Mesh, data_axes, cols_mat: jax.Array,
-                             bounds: jax.Array, backend=None) -> jax.Array:
+                             bounds: jax.Array, backend=None,
+                             block_ids=None, interpret=None) -> jax.Array:
     """cols_mat: (k, n) int32 predicate tile, row-sharded on axis 1; bounds:
     (k, 2) replicated runtime params. Each shard runs filter_count over its
     local tile (any padding rows arrive pre-folded as a mask row with bounds
-    (1, 1)); merge is one 4-byte psum."""
+    (1, 1)); merge is one 4-byte psum.
+
+    ``block_ids`` are zone-block survivors over the GLOBAL row layout; the
+    planner only emits them on single-shard meshes (local == global), where
+    the per-shard kernel grid skips pruned tiles exactly like the
+    undistributed launch."""
     from repro.kernels import ops
 
     dp = _dp(data_axes)
+    if block_ids is not None:
+        nsh = int(np.prod([mesh.shape[a] for a in data_axes]))
+        assert nsh == 1, "block skipping requires a single-shard mesh"
 
     def local(cm, b):
-        c = ops.filter_count(cm, b, cm.shape[1], backend=backend)
+        c = ops.filter_count(cm, b, cm.shape[1], backend=backend,
+                             block_ids=block_ids, interpret=interpret)
         return jax.lax.psum(c, data_axes)
 
     return _smap(mesh, data_axes, local, (P(None, dp), P(None, None)), P())(
@@ -282,18 +292,24 @@ def dist_kernel_filter_count(mesh: Mesh, data_axes, cols_mat: jax.Array,
 
 def dist_kernel_group_agg(mesh: Mesh, data_axes, gids: jax.Array,
                           values: jax.Array, num_groups: int, op: str = "sum",
-                          backend=None) -> jax.Array:
+                          backend=None, block_ids=None,
+                          interpret=None) -> jax.Array:
     """gids: (n,) int32 (-1 for dead rows); values: (n, C) f32. Shard-local
     one-hot segment reductions, minimal-collective merge (psum for sums,
-    pmax/pmin for extremes) -> replicated (G, C)."""
+    pmax/pmin for extremes) -> replicated (G, C). ``block_ids`` as in
+    :func:`dist_kernel_filter_count` — single-shard meshes only."""
     from repro.kernels import ops
 
     dp = _dp(data_axes)
     merge = {"sum": jax.lax.psum, "max": jax.lax.pmax, "min": jax.lax.pmin}[op]
+    if block_ids is not None:
+        nsh = int(np.prod([mesh.shape[a] for a in data_axes]))
+        assert nsh == 1, "block skipping requires a single-shard mesh"
 
     def local(g, v):
         out = ops.segment_agg(v, g, num_groups, v.shape[0], op=op,
-                              backend=backend)
+                              backend=backend, block_ids=block_ids,
+                              interpret=interpret)
         return merge(out, data_axes)
 
     return _smap(mesh, data_axes, local, (P(dp), P(dp, None)), P(None, None))(

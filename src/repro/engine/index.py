@@ -7,8 +7,10 @@ per-NC local indexes) so every probe is a vectorized ``searchsorted``:
   * range COUNT   — two binary searches per shard + psum (index-only query)
   * range + LIMIT — gather k row-ids from the sorted run (no scan)
   * equi-join     — the build side is pre-sorted: merge-join without sorting
-Zone maps (per-block min/max) ride along for block skipping in the Pallas
-filter kernel.
+Zone maps (per-block min/max of the sorted keys) ride along; the filter
+kernel's block skipping uses the storage-order zone maps on
+``Dataset.block_zones`` (engine/table.py ``compute_block_zones``) instead,
+since that is the layout its grid streams.
 """
 from __future__ import annotations
 

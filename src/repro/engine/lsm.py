@@ -161,12 +161,21 @@ def make_run(session, base: Dataset, table: Table,
     table = pad_to_block(table, RUN_BLOCK)
     if session.mesh is not None:
         table = table.shard(session.mesh, session.data_axes)
+    from repro.core.stats import harvest_block_zones, single_shard
     run = Dataset(name=f"{base.name}@run{len(base.runs)}",
                   dataverse=base.dataverse, table=table, closed=base.closed,
                   live_rows=live, anti_rows=n_anti,
                   anti_keys_arr=None if anti_sorted is None
                   else jnp.asarray(anti_sorted),
-                  host_keys=host_keys)
+                  host_anti_keys=anti_sorted,
+                  host_keys=host_keys,
+                  # intra-run zone maps, harvested in the same flush pass
+                  # that builds the sorted indexes (matter rows only: anti
+                  # rows and block padding never widen a span). Multi-shard
+                  # sessions skip the harvest: they can never consult it,
+                  # and the flush path must stay O(batch) device work.
+                  block_zones=harvest_block_zones(table)
+                  if single_shard(session.mesh) else None)
     if primary is not None:
         run.indexes["primary"] = session._build_index(table, primary.column,
                                                       "primary")

@@ -48,19 +48,26 @@ class Session:
     def __init__(self, mesh: Optional[Mesh] = None, mode: str = "auto",
                  data_axes: tuple[str, ...] = ("data",),
                  enable_index: bool = True, enable_pushdown: bool = True,
-                 enable_prune: bool = True,
-                 kernel_backend: Optional[str] = None):
+                 enable_prune: bool = True, enable_block_skip: bool = True,
+                 kernel_backend: Optional[str] = None,
+                 kernel_interpret: Optional[bool] = None):
         """mode: 'auto' (shard_map when a mesh is given), 'gspmd',
         'shard_map', or 'kernel' (the cost-based planner lowers fusable plan
         shapes onto the Pallas relational kernels; anything uncovered falls
         back to the gspmd / shard_map lowering).
 
         ``enable_prune`` turns bind-time zone-map run pruning on/off (off is
-        only useful for benchmarking the pruning win).
+        only useful for benchmarking the pruning win); ``enable_block_skip``
+        does the same for the intra-component block level (the surviving
+        blocks of a predicate-constrained scan — it only takes effect on
+        single-shard executions, where a block list over the global layout
+        is also valid per shard).
 
         ``kernel_backend`` feeds the kernels/ops dispatch: 'pallas' forces
         the Pallas kernels (interpret mode off-TPU), 'xla' the jnp twins;
-        None picks pallas on TPU and the ops default elsewhere."""
+        None picks pallas on TPU and the ops default elsewhere.
+        ``kernel_interpret`` overrides the Pallas interpret auto-detection
+        (None = compiled on TPU, interpret elsewhere)."""
         self.catalog = Catalog()
         self.mesh = mesh
         if mode == "auto":
@@ -78,10 +85,12 @@ class Session:
                 and jax.default_backend() == "tpu":
             kernel_backend = "pallas"
         self.kernel_backend = kernel_backend
+        self.kernel_interpret = kernel_interpret
         self.data_axes = data_axes
         self.enable_index = enable_index
         self.enable_pushdown = enable_pushdown
         self.enable_prune = enable_prune
+        self.enable_block_skip = enable_block_skip
         # Three-level plan cache:
         #   1. raw (pre-optimization) fingerprint → _PlanEntry, valid for one
         #      stats epoch: repeated query shapes skip the optimizer and the
@@ -134,8 +143,11 @@ class Session:
             host_keys = np.asarray(table.columns[primary])
         if self.mesh is not None:
             table = table.shard(self.mesh, self.data_axes)
+        from repro.core.stats import harvest_block_zones, single_shard
         ds = Dataset(name=name, dataverse=dataverse, table=table, closed=closed,
-                     host_keys=host_keys)
+                     host_keys=host_keys,
+                     block_zones=harvest_block_zones(table)
+                     if single_shard(self.mesh) else None)
         if primary is not None:
             ds.indexes["primary"] = self._build_index(table, primary, "primary")
         for col in indexes:
@@ -246,12 +258,105 @@ class Session:
 
         return recompute
 
+    # -- point lookups (the one path that bypasses compilation) -------------
+
+    def point_lookup(self, dataverse: str, dataset: str, key):
+        """Primary-key point lookup: per-component host binary searches over
+        the clustered key copies, walked newest → oldest — the first
+        component owning the key decides (fresh matter wins, a tombstone
+        kills every older occurrence; an upsert run carries both, and its
+        matter is checked first because its anti set applies to strictly
+        older components only). No kernel launch, no compile, no plan-cache
+        traffic: O(components × log rows).
+
+        Returns the matching row(s) as ``{column: np.ndarray}`` or None
+        (absent or deleted). ``last_physical`` / ``last_prune_report``
+        reflect the lookup so ``explain``-style readers see a PointLookup
+        node."""
+        from repro.core import physical as PH
+        from repro.core.catalog import INTERNAL_COLUMNS
+
+        t0 = time.perf_counter()
+        ds = self.catalog.get(dataverse, dataset)
+        primary = ds.primary_index
+        if primary is None:
+            raise ValueError(
+                f"point lookup needs a primary key on {dataverse}.{dataset} "
+                "(create the dataset with primary=<column>)")
+        comps = [ds] + list(ds.runs)
+        probed = skipped = 0
+        found_in = tombstoned_by = None
+        result = None
+        for comp in reversed(comps):  # newest component wins
+            hk = comp.host_keys
+            if hk is not None and len(hk):
+                # zone short-circuit: the clustered copy is sorted, so its
+                # ends ARE the key span — a miss costs two comparisons.
+                if key < hk[0] or key > hk[-1]:
+                    skipped += 1
+                else:
+                    probed += 1
+                    lo = int(np.searchsorted(hk, key, side="left"))
+                    hi = int(np.searchsorted(hk, key, side="right"))
+                    if hi > lo:
+                        # matter prefix is clustered by the primary key:
+                        # index-space positions are table row positions
+                        result = {
+                            c: np.asarray(v[lo:hi])
+                            for c, v in comp.table.columns.items()
+                            if c not in INTERNAL_COLUMNS
+                            and not c.startswith("__ix")}
+                        found_in = f"{comp.dataverse}.{comp.name}"
+                        break
+            if comp.anti_rows:
+                ak = comp.host_anti_keys if comp.host_anti_keys is not None \
+                    else np.asarray(comp.anti_keys_arr)
+                pos = int(np.searchsorted(ak, key))
+                if pos < len(ak) and ak[pos] == key:
+                    tombstoned_by = f"{comp.dataverse}.{comp.name}"
+                    break  # deleted: nothing older is visible
+        node = PH.PointLookup(dataverse, dataset, primary.column,
+                              components=len(comps), probed=probed,
+                              skipped=skipped, found_in=found_in,
+                              tombstoned_by=tombstoned_by)
+        node.est_rows = 0 if result is None else len(next(iter(result.values())))
+        node.cost = probed * 2.0  # binary-search pairs; never a scan
+        if tombstoned_by is not None:
+            node.note = (f"key is anti-matter in {tombstoned_by} — deleted, "
+                         f"older occurrences invisible")
+        elif found_in is not None:
+            node.note = f"resolved in {found_in} (newest component with the key)"
+        else:
+            node.note = "key absent from every component span"
+        self.last_physical = node
+        from repro.core.physical import prune_report
+        self.last_prune_report = prune_report(node)
+        self.timings["last_point_lookup"] = time.perf_counter() - t0
+        self.stats["point_lookups"] = self.stats.get("point_lookups", 0) + 1
+        return result
+
+    def explain_lookup(self, dataverse: str, dataset: str, key) -> str:
+        """The PointLookup plan for ``get(key)``, rendered like explain()."""
+        from repro.core.physical import format_plan
+
+        self.point_lookup(dataverse, dataset, key)
+        return format_plan(self.last_physical)
+
     # -- query execution -------------------------------------------------------
 
     def exec_context(self) -> ExecContext:
         return ExecContext(catalog=self.catalog, mesh=self.mesh,
                            data_axes=self.data_axes, mode=self.mode,
-                           kernel_backend=self.kernel_backend)
+                           kernel_backend=self.kernel_backend,
+                           kernel_interpret=self.kernel_interpret)
+
+    def _block_skip(self) -> bool:
+        """Block skipping is a single-shard decision (stats.single_shard):
+        the surviving-block list is expressed over the global row layout,
+        which per-shard grids and gathers only match with one shard."""
+        from repro.core.stats import single_shard
+
+        return self.enable_block_skip and single_shard(self.mesh)
 
     def _optimize(self, plan: P.Plan) -> P.Plan:
         self.stats["optimizes"] += 1
@@ -279,7 +384,8 @@ class Session:
         from repro.core.expr import ordered_lits
         from repro.core.physical_planner import NO_PRUNE
 
-        decisions = e.pruner.decide([l.value for l in raw_lits]) \
+        decisions = e.pruner.decide([l.value for l in raw_lits],
+                                    block_skip=self._block_skip()) \
             if self.enable_prune else NO_PRUNE
         var = e.variants.get(decisions.signature)
         if var is not None:
@@ -353,7 +459,8 @@ class Session:
 
         raw_lits = ordered_lits(P.all_exprs(plan))
         e = self._plan_entry(plan, plan.fingerprint(), raw_lits)
-        decisions = e.pruner.decide([l.value for l in raw_lits]) \
+        decisions = e.pruner.decide([l.value for l in raw_lits],
+                                    block_skip=self._block_skip()) \
             if self.enable_prune else None
         from repro.core.physical_planner import NO_PRUNE
         phys = plan_physical(e.opt, self.catalog, mode=self.mode,
@@ -375,7 +482,10 @@ class Session:
         cols = dict(env)
         cols["__valid__"] = mask
         table = _collect_stats(Table(cols, num_rows=int(mask.shape[0])))
-        ds = Dataset(name=name, dataverse=dataverse, table=table, closed=True)
+        from repro.core.stats import harvest_block_zones, single_shard
+        ds = Dataset(name=name, dataverse=dataverse, table=table, closed=True,
+                     block_zones=harvest_block_zones(table)
+                     if single_shard(self.mesh) else None)
         self.catalog.register(ds)
         self._invalidate_plans()
         return ds

@@ -117,6 +117,46 @@ class Table:
         return jnp.ones((self.num_rows,), dtype=jnp.bool_)
 
 
+def compute_block_zones(table: Table, block: int) -> dict[str, np.ndarray]:
+    """Per-block [min, max] zone maps over the table's *physical* row layout
+    — one (n_blocks, 2) int64 array per 1-D integer column, min/max taken
+    over matter rows only (padding and anti-matter rows carry the
+    [int64.max, int64.min] empty-span sentinel, so they never widen a span
+    and an all-dead block is prunable under ANY constraint).
+
+    This is the intra-component half of the zone-map hierarchy: the
+    column-level lo/hi stats (the run's *zone span*) gate run pruning, and
+    these per-block values gate block skipping inside the kernel grid. The
+    block size is ``stats.ZONE_BLOCK_ROWS`` — one zone block per
+    filter_count kernel tile."""
+    n = len(table)
+    if n == 0:
+        return {}
+    matter = np.asarray(table.valid)
+    anti = table.columns.get("__antimatter__")
+    if anti is not None:
+        matter = matter & ~np.asarray(anti)
+    nb = -(-n // block)
+    pad = nb * block - n
+    i64 = np.iinfo(np.int64)
+    out: dict[str, np.ndarray] = {}
+    for name, col in table.columns.items():
+        if name in ("__valid__", "__antimatter__") or name.startswith("__ix"):
+            continue
+        a = np.asarray(col)
+        if a.ndim != 1 or not np.issubdtype(a.dtype, np.integer):
+            continue
+        v = a.astype(np.int64)
+        lo = np.where(matter, v, i64.max)
+        hi = np.where(matter, v, i64.min)
+        if pad:
+            lo = np.concatenate([lo, np.full(pad, i64.max)])
+            hi = np.concatenate([hi, np.full(pad, i64.min)])
+        out[name] = np.stack([lo.reshape(nb, block).min(axis=1),
+                              hi.reshape(nb, block).max(axis=1)], axis=1)
+    return out
+
+
 def pad_to_block(table: Table, block: int) -> Table:
     """Pad rows up to a multiple of ``block`` with a ``__valid__`` mask (the
     device-resident LSM runs are block-padded so kernel grids and shard

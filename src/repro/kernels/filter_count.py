@@ -6,6 +6,15 @@ a popcount into a (1,1) SMEM-style accumulator. Predicate *constants* arrive
 as a (k, 2) operand so randomized benchmark literals reuse the compiled
 kernel. This is the engine's answer to "SELECT COUNT(*) WHERE ..." — no
 intermediate mask column ever touches HBM.
+
+**Block skipping**: ``block_ids`` (a static tuple of surviving block
+indices, produced by the planner's bind-time zone-map test) drives the grid
+through the ``index_map`` — the id list rides in as a scalar-prefetch
+operand (``PrefetchScalarGridSpec``), the grid size is the number of
+*surviving* blocks, not the total, and the index_map fetches each step's
+physical tile by id, so pruned tiles are never DMA'd out of HBM. The kernel
+reads the same scalar ref to rebuild the row-index base for the ``n_valid``
+edge check, keeping results bit-identical to the unskipped launch.
 """
 from __future__ import annotations
 
@@ -14,8 +23,22 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 4096
+
+
+def _body(bounds_ref, nvalid_ref, cols_ref, out_ref, base):
+    """Shared predicate/accumulate body; ``base`` is the first physical row
+    index of this step's tile."""
+    cols = cols_ref[...]  # (k, BLOCK) int32
+    k, b = cols.shape
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    ok = idx < nvalid_ref[0, 0]
+    lo = bounds_ref[:, 0][:, None]
+    hi = bounds_ref[:, 1][:, None]
+    ok = ok & jnp.all((cols >= lo) & (cols <= hi), axis=0, keepdims=True)
+    out_ref[0, 0] += jnp.sum(ok.astype(jnp.int32))
 
 
 def _kernel(bounds_ref, nvalid_ref, cols_ref, out_ref):
@@ -25,37 +48,82 @@ def _kernel(bounds_ref, nvalid_ref, cols_ref, out_ref):
     def _init():
         out_ref[0, 0] = jnp.int32(0)
 
-    cols = cols_ref[...]  # (k, BLOCK) int32
-    k, b = cols.shape
-    base = step * b
-    idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
-    ok = idx < nvalid_ref[0, 0]
-    lo = bounds_ref[:, 0][:, None]
-    hi = bounds_ref[:, 1][:, None]
-    ok = ok & jnp.all((cols >= lo) & (cols <= hi), axis=0, keepdims=True)
-    out_ref[0, 0] += jnp.sum(ok.astype(jnp.int32))
+    _body(bounds_ref, nvalid_ref, cols_ref, out_ref,
+          step * cols_ref.shape[1])
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _kernel_ids(ids_ref, bounds_ref, nvalid_ref, cols_ref, out_ref):
+    """Block-skipping variant: the grid enumerates surviving blocks; the
+    scalar-prefetched id list yields each step's physical block id so the
+    validity base is exact."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[0, 0] = jnp.int32(0)
+
+    _body(bounds_ref, nvalid_ref, cols_ref, out_ref,
+          ids_ref[step] * cols_ref.shape[1])
+
+
+def _resolve_interpret(interpret):
+    # None = auto: compiled Pallas on real TPUs, interpret mode elsewhere
+    # (the kernels' semantics are validated everywhere, compiled where the
+    # hardware exists).
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "block_ids"))
 def filter_count(cols: jax.Array, bounds: jax.Array, n_valid,
-                 *, block: int = BLOCK, interpret: bool = True) -> jax.Array:
-    """cols: (k, n) int32; bounds: (k, 2); n_valid scalar. -> int32 count."""
+                 *, block: int = BLOCK, interpret: bool | None = None,
+                 block_ids: tuple | None = None) -> jax.Array:
+    """cols: (k, n) int32; bounds: (k, 2); n_valid scalar. -> int32 count.
+
+    ``block_ids``: optional static tuple of surviving block indices (units
+    of ``block`` rows over the unpadded layout); the grid visits only those
+    tiles. Skipped blocks provably contain no matching rows, so the count
+    is bit-identical to the full launch."""
+    interpret = _resolve_interpret(interpret)
     k, n = cols.shape
     pad = (-n) % block
     if pad:
         cols = jnp.pad(cols, ((0, 0), (0, pad)))
     nb = cols.shape[1] // block
-    out = pl.pallas_call(
-        _kernel,
-        grid=(nb,),
+    args = [bounds.astype(jnp.int32),
+            jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
+            cols.astype(jnp.int32)]
+    if block_ids is None:
+        out = pl.pallas_call(
+            _kernel,
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((k, 2), lambda i: (0, 0)),      # bounds: resident
+                pl.BlockSpec((1, 1), lambda i: (0, 0)),      # n_valid scalar
+                pl.BlockSpec((k, block), lambda i: (0, i)),  # column tile
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),  # accumulator
+            out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            interpret=interpret,
+        )(*args)
+        return out[0, 0]
+    assert all(0 <= b < nb for b in block_ids), (block_ids, nb)
+    # grid = surviving blocks; the scalar-prefetched id list feeds the
+    # index_map, so pruned tiles are never fetched at all.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(len(block_ids),),
         in_specs=[
-            pl.BlockSpec((k, 2), lambda i: (0, 0)),          # bounds: resident
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # n_valid scalar
-            pl.BlockSpec((k, block), lambda i: (0, i)),      # column tile
+            pl.BlockSpec((k, 2), lambda i, ids: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, ids: (0, 0)),
+            pl.BlockSpec((k, block), lambda i, ids: (0, ids[i])),
         ],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),    # accumulator
+        out_specs=pl.BlockSpec((1, 1), lambda i, ids: (0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel_ids,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
         interpret=interpret,
-    )(bounds.astype(jnp.int32), jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
-      cols.astype(jnp.int32))
+    )(jnp.asarray(block_ids, jnp.int32), *args)
     return out[0, 0]

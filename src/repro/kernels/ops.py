@@ -56,25 +56,63 @@ def _use_pallas(backend: Optional[str]) -> bool:
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    from repro.kernels.filter_count import _resolve_interpret
+    return _resolve_interpret(None)
 
 
 # -- relational kernels ------------------------------------------------------------
 
-def filter_count(cols, bounds, n_valid, backend: Optional[str] = None):
+# Zone-map block size the planner's block-skip lists are expressed in: the
+# filter_count kernel's own tile. segment_agg's smaller BLOCK is bridged by
+# _expand_block_ids below (one zone block = several kernel blocks).
+from repro.kernels.filter_count import BLOCK as ZONE_BLOCK_ROWS
+
+
+def _expand_block_ids(block_ids, zone_block: int, block: int,
+                      n: int) -> tuple:
+    """Re-express zone-block ids in units of a kernel's own (smaller or
+    equal) block size, clipped to the kernel's padded block count."""
+    if block_ids is None:
+        return None
+    assert zone_block % block == 0, (zone_block, block)
+    r = zone_block // block
+    nb = -(-n // block)
+    out = tuple(j for b in block_ids
+                for j in range(b * r, min((b + 1) * r, nb)))
+    assert out, (block_ids, zone_block, block, n)  # layout mismatch otherwise
+    return out
+
+
+def filter_count(cols, bounds, n_valid, backend: Optional[str] = None,
+                 block_ids: Optional[tuple] = None,
+                 interpret: Optional[bool] = None):
     _tick("filter_count")
+    from repro.kernels.filter_count import BLOCK as _FC_BLOCK
+    ids = _expand_block_ids(block_ids, ZONE_BLOCK_ROWS, _FC_BLOCK,
+                            cols.shape[1])
     if _use_pallas(backend):
-        return _filter_count(cols, bounds, n_valid, interpret=_interpret())
-    return ref.filter_count(cols, bounds, n_valid)
+        return _filter_count(cols, bounds, n_valid, block_ids=ids,
+                             interpret=_interpret() if interpret is None
+                             else interpret)
+    return ref.filter_count(cols, bounds, n_valid, block_ids=ids,
+                            block=_FC_BLOCK)
 
 
 def segment_agg(values, gids, num_groups, n_valid, op: str = "sum",
-                backend: Optional[str] = None):
+                backend: Optional[str] = None,
+                block_ids: Optional[tuple] = None,
+                interpret: Optional[bool] = None):
     _tick("segment_agg")
+    from repro.kernels.segment_agg import BLOCK as _SA_BLOCK
+    ids = _expand_block_ids(block_ids, ZONE_BLOCK_ROWS, _SA_BLOCK,
+                            values.shape[0])
     if _use_pallas(backend):
         return _segment_agg(values, gids, num_groups, n_valid, op=op,
-                            interpret=_interpret())
-    return ref.segment_agg(values, gids, num_groups, n_valid, op)
+                            block_ids=ids,
+                            interpret=_interpret() if interpret is None
+                            else interpret)
+    return ref.segment_agg(values, gids, num_groups, n_valid, op,
+                           block_ids=ids, block=_SA_BLOCK)
 
 
 def sort_join_keys(keys, mask, presorted: bool = False):

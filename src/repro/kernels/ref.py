@@ -11,21 +11,47 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def filter_count(cols: jax.Array, bounds: jax.Array, n_valid) -> jax.Array:
+def _block_select(n: int, block: int, block_ids) -> np.ndarray:
+    """Original row indices of the listed blocks (static: block_ids is a
+    Python tuple) — the XLA twins' analogue of driving the Pallas grid
+    through surviving blocks only."""
+    return np.concatenate([np.arange(b * block, min((b + 1) * block, n))
+                           for b in block_ids])
+
+
+def filter_count(cols: jax.Array, bounds: jax.Array, n_valid,
+                 block_ids=None, block: int = 4096) -> jax.Array:
     """cols: (k, n) int32; bounds: (k, 2) int32 [lo, hi] inclusive.
-    Count of rows i < n_valid with AND_k (lo_k <= cols[k, i] <= hi_k)."""
+    Count of rows i < n_valid with AND_k (lo_k <= cols[k, i] <= hi_k).
+    ``block_ids`` restricts the pass to the listed row blocks (zone-map
+    block skipping); the original row index still gates ``n_valid``."""
     k, n = cols.shape
-    m = jnp.arange(n) < n_valid
+    if block_ids is not None:
+        sel = _block_select(n, block, block_ids)
+        cols = cols[:, sel]
+        m = jnp.asarray(sel) < n_valid
+    else:
+        m = jnp.arange(n) < n_valid
     ok = jnp.all((cols >= bounds[:, :1]) & (cols <= bounds[:, 1:2]), axis=0)
     return jnp.sum(ok & m, dtype=jnp.int32)
 
 
 def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int,
-                n_valid, op: str = "sum") -> jax.Array:
+                n_valid, op: str = "sum",
+                block_ids=None, block: int = 2048) -> jax.Array:
     """values: (n, c) f32; gids: (n,) int32. Per-group column ``op``-reductions
-    (G, c); empty groups hold the identity (0 / -inf / +inf)."""
+    (G, c); empty groups hold the identity (0 / -inf / +inf). ``block_ids``
+    restricts the reduction to the listed row blocks."""
     n = values.shape[0]
-    m = (jnp.arange(n) < n_valid) & (gids >= 0) & (gids < num_groups)
+    if block_ids is not None:
+        sel = _block_select(n, block, block_ids)
+        values = values[sel]
+        gids = gids[sel]
+        idx = jnp.asarray(sel)
+        n = len(sel)
+    else:
+        idx = jnp.arange(n)
+    m = (idx < n_valid) & (gids >= 0) & (gids < num_groups)
     safe = jnp.where(m, gids, num_groups)
     if op == "sum":
         v = jnp.where(m[:, None], values, 0.0)

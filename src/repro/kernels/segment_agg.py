@@ -13,6 +13,12 @@ no efficient random-access memory path.
 matmul, but the same blocked revisit pattern keeps the (G, C) accumulator in
 VMEM). max/min feed group extremes for the kernel execution mode and the
 incrementally-maintained views of the streaming ingestion subsystem.
+
+``block_ids`` drives the grid through only the listed blocks (zone-map
+block skipping): the id list rides in as a scalar-prefetch operand feeding
+the index_map, and the kernel reads the same ref to rebuild the ``n_valid``
+base — skipped blocks hold no live rows for this launch's mask, so partials
+are bit-identical.
 """
 from __future__ import annotations
 
@@ -21,24 +27,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 2048
 
 _INIT = {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}
 
 
-def _kernel(op, nvalid_ref, gid_ref, val_ref, out_ref):
-    step = pl.program_id(0)
-
-    @pl.when(step == 0)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref, _INIT[op])
-
+def _body(op, nvalid_ref, gid_ref, val_ref, out_ref, base):
     gids = gid_ref[0, :]  # (BLOCK,)
     vals = val_ref[...]   # (BLOCK, C)
     b = gids.shape[0]
     G = out_ref.shape[0]
-    base = step * b
     live = (base + jax.lax.broadcasted_iota(jnp.int32, (b,), 0)) < nvalid_ref[0, 0]
     live = live & (gids >= 0) & (gids < G)
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (G, b), 0) == gids[None, :])
@@ -55,31 +55,85 @@ def _kernel(op, nvalid_ref, gid_ref, val_ref, out_ref):
             out_ref[...] = jnp.minimum(out_ref[...], jnp.min(cand, axis=1))
 
 
+def _kernel(op, nvalid_ref, gid_ref, val_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _INIT[op])
+
+    _body(op, nvalid_ref, gid_ref, val_ref, out_ref,
+          step * gid_ref.shape[1])
+
+
+def _kernel_ids(op, ids_ref, nvalid_ref, gid_ref, val_ref, out_ref):
+    """Block-skipping variant: grid over surviving blocks only; the scalar-
+    prefetched id list rebuilds the validity base per step."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _INIT[op])
+
+    _body(op, nvalid_ref, gid_ref, val_ref, out_ref,
+          ids_ref[step] * gid_ref.shape[1])
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("num_groups", "op", "block", "interpret"))
+                   static_argnames=("num_groups", "op", "block", "interpret",
+                                    "block_ids"))
 def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int, n_valid,
                 *, op: str = "sum", block: int = BLOCK,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None,
+                block_ids: tuple | None = None) -> jax.Array:
     """values: (n, c) f32; gids: (n,) int32 -> (num_groups, c) per-group
     ``op``-reductions. Groups with no live member hold the identity
-    (0 / -inf / +inf) — callers mask by count."""
+    (0 / -inf / +inf) — callers mask by count.
+
+    ``interpret=None`` auto-detects: compiled Pallas on TPU, interpret mode
+    elsewhere. ``block_ids`` (static tuple, units of ``block`` rows) makes
+    the grid visit only the listed blocks — sound whenever every live row
+    with gid ≥ 0 lives in a listed block."""
     assert op in _INIT, op
+    from repro.kernels.filter_count import _resolve_interpret
+    interpret = _resolve_interpret(interpret)
     n, c = values.shape
     pad = (-n) % block
     if pad:
         values = jnp.pad(values, ((0, pad), (0, 0)))
         gids = jnp.pad(gids, (0, pad))
     nb = values.shape[0] // block
-    return pl.pallas_call(
-        functools.partial(_kernel, op),
-        grid=(nb,),
+    args = [jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
+            gids.astype(jnp.int32).reshape(1, -1), values]
+    if block_ids is None:
+        return pl.pallas_call(
+            functools.partial(_kernel, op),
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                pl.BlockSpec((1, block), lambda i: (0, i)),
+                pl.BlockSpec((block, c), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((num_groups, c), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((num_groups, c), jnp.float32),
+            interpret=interpret,
+        )(*args)
+    assert all(0 <= b < nb for b in block_ids), (block_ids, nb)
+    # grid = surviving blocks; the scalar-prefetched id list feeds the
+    # index_map, so pruned tiles are never fetched at all.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(len(block_ids),),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, block), lambda i: (0, i)),
-            pl.BlockSpec((block, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, ids: (0, 0)),
+            pl.BlockSpec((1, block), lambda i, ids: (0, ids[i])),
+            pl.BlockSpec((block, c), lambda i, ids: (ids[i], 0)),
         ],
-        out_specs=pl.BlockSpec((num_groups, c), lambda i: (0, 0)),
+        out_specs=pl.BlockSpec((num_groups, c), lambda i, ids: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_ids, op),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_groups, c), jnp.float32),
         interpret=interpret,
-    )(jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
-      gids.astype(jnp.int32).reshape(1, -1), values)
+    )(jnp.asarray(block_ids, jnp.int32), *args)
