@@ -29,11 +29,22 @@ A **block_skip sweep** measures the second pruning level: selective range
 predicates over a clustered (sorted, unindexed) column, with bind-time
 block zone-map skipping on vs. off — latency plus blocks touched, which
 must scale with the predicate's block footprint, not the dataset.
+
+A **concurrent-serving sweep** replays the stream with a reader thread
+(its own Session on the SHARED catalog) hammering an indexed range count
+the whole time, under two serving modes: ``synchronous`` (merges run
+inline on the writer) vs ``background`` (a BackgroundCompactor thread,
+write-stall backpressure only past the hard run cap). Reported per cell:
+reader p50/p99/max latency, per-batch writer latency p50/p99, and
+write-stall seconds. The reader p99 of the background cell is asserted
+under a hard cap — the "no query ever blocks on a running compaction"
+guarantee, enforced where it would regress first.
 """
 from __future__ import annotations
 
 import json
 import pathlib
+import threading
 import time
 
 import numpy as np
@@ -216,6 +227,107 @@ def _block_skip_sweep(size: str, repeats: int = 5) -> list[dict]:
     return rows
 
 
+# Hard cap on the background cell's reader tail latency: generously above a
+# post-flush recompile, far below an O(base) merge a blocked reader would eat.
+READER_P99_CAP_S = 2.0
+
+
+def _serving_cell(size: str, serving: str) -> dict:
+    """One concurrent-serving cell: writer replays the stream while a reader
+    thread on the shared catalog runs an indexed range count continuously."""
+    base_rows, n_batches, batch_rows = SIZES[size]
+    sess = Session()
+    sess.create_dataset("Serve", wisconsin.generate(base_rows, seed=7),
+                        dataverse="bench", indexes=["onePercent"],
+                        primary="unique2")
+    # real triggers, small cap: compaction fires repeatedly during the replay
+    policy = lsm.CompactionPolicy(size_ratio=1.0, max_runs=4)
+    reader = Session(catalog=sess.catalog)
+    rdf = AFrame("bench", "Serve", session=reader)
+    len(rdf[(rdf["onePercent"] >= 10) & (rdf["onePercent"] <= 30)])  # warm
+
+    stop = threading.Event()
+    lat: list[float] = []
+
+    def read_loop():
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            len(rdf[(rdf["onePercent"] >= 10) & (rdf["onePercent"] <= 30)])
+            lat.append(time.perf_counter() - t0)
+
+    bc = (lsm.BackgroundCompactor(sess, policy=policy)
+          if serving == "background" else None)
+    feed = Feed(sess, "Serve", "bench", flush_rows=batch_rows,
+                policy=policy, compactor=bc)
+    batches = _stream(base_rows, n_batches, batch_rows)
+    t = threading.Thread(target=read_loop, daemon=True)
+    t.start()
+    write_lat = []
+    t_all = time.perf_counter()
+    try:
+        for rows in batches:
+            t0 = time.perf_counter()
+            feed.push(rows)  # flush_rows == batch_rows: flushes synchronously
+            write_lat.append(time.perf_counter() - t0)
+        if bc is not None:
+            bc.wait_idle(60.0)
+        ingest_s = time.perf_counter() - t_all
+    finally:
+        stop.set()
+        t.join(timeout=30.0)
+        if bc is not None:
+            bc.close()
+    lat_arr = np.asarray(lat) if lat else np.asarray([0.0])
+    cell = {
+        "size": size,
+        "variant": f"serving:{serving}",
+        "serving": serving,
+        "rows": n_batches * batch_rows,
+        "ingest_s": round(ingest_s, 4),
+        "rows_per_s": round(n_batches * batch_rows / ingest_s, 1),
+        "writer_batch_p50_s": round(float(np.median(write_lat)), 4),
+        "writer_batch_p99_s": round(float(np.percentile(write_lat, 99)), 4),
+        "reader_queries": len(lat),
+        "reader_p50_s": round(float(np.median(lat_arr)), 5),
+        "reader_p99_s": round(float(np.percentile(lat_arr, 99)), 5),
+        "reader_max_s": round(float(lat_arr.max()), 5),
+        "write_stalls": feed.stats.get("stalls", 0),
+        "write_stall_s": round(feed.stats.get("stall_s", 0.0), 4),
+        "compactions": feed.stats["compactions"] + (
+            bc.stats["compactions"] + bc.stats["level_merges"]
+            if bc is not None else 0),
+        "final_runs": len(sess.catalog.get("bench", "Serve").runs),
+    }
+    if serving == "background":
+        assert cell["reader_p99_s"] < READER_P99_CAP_S, (
+            f"reader p99 {cell['reader_p99_s']}s breaches the no-block cap "
+            f"({READER_P99_CAP_S}s) — a query waited on compaction")
+    return cell
+
+
+def _serving_sweep(size: str) -> list[dict]:
+    rows = []
+    per = {}
+    for serving in ("synchronous", "background"):
+        r = _serving_cell(size, serving)
+        per[serving] = r
+        rows.append(r)
+        print(f"  {size:>2} serving:{serving:<12} "
+              f"reader p50 {r['reader_p50_s']*1e3:6.1f} ms  "
+              f"p99 {r['reader_p99_s']*1e3:7.1f} ms  "
+              f"writer batch p99 {r['writer_batch_p99_s']*1e3:7.1f} ms  "
+              f"stall {r['write_stall_s']*1e3:6.1f} ms  "
+              f"({r['reader_queries']} reads, "
+              f"{r['compactions']} compactions)")
+    speedup = (per["synchronous"]["writer_batch_p99_s"]
+               / max(per["background"]["writer_batch_p99_s"], 1e-9))
+    rows.append({"size": size, "variant": "serving:speedup",
+                 "writer_p99_speedup": round(speedup, 2)})
+    print(f"  {size:>2} background-compaction writer p99 speedup: "
+          f"{speedup:.1f}x")
+    return rows
+
+
 # mutation mix per workload: fractions of batches issued as (push, upsert,
 # delete); deletes target previously-ingested keys, upserts overwrite them.
 MUTATION_WORKLOADS = {
@@ -329,6 +441,7 @@ def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[d
                      "ingest_speedup": round(speedup, 2)})
         rows.extend(_block_skip_sweep(size))
         rows.extend(_mutation_sweep(size))
+        rows.extend(_serving_sweep(size))
     if out_path is not None:
         out_path.write_text(json.dumps(rows, indent=2) + "\n")
         print(f"ingest benchmark -> {out_path}")

@@ -3,12 +3,36 @@
 A ``Dataset`` owns a row-sharded :class:`~repro.engine.table.Table` plus any
 indexes. ``closed`` datasets have a declared schema (typed dense columns);
 ``open`` datasets simulate schema-on-read: values are stored widened
-(float64/boxed) and every access pays a cast — this models the paper's
-open-vs-closed datatype cost difference ("AFrame" vs "AFrame Schema").
+(float32 for numeric lanes) and every access pays a cast — this models the
+paper's open-vs-closed datatype cost difference ("AFrame" vs "AFrame
+Schema").
+
+Concurrency model (snapshot-isolated serving):
+
+  * every dataset's component set — the base table plus its LSM runs — is
+    described by an immutable, **LSN-stamped** :class:`Manifest`. Mutating
+    the component set (feed flush, leveled merge, full compaction) never
+    edits a manifest in place: the writer builds fresh components off the
+    hot path and **publishes** a new manifest under the catalog lock, then
+    the old manifest is **retired**. The swap is a single reference
+    assignment — readers either see the old set or the new set, never a
+    half-merged one (AsterixDB's LSM discipline; gnitz's LSN-only
+    atomicity).
+  * readers never take the writer path: :meth:`Catalog.snapshot` captures
+    the current manifest of every dataset (O(datasets) metadata, no device
+    work) and **pins** them. A query plans, compiles, and executes entirely
+    against its pinned :class:`Snapshot`, so a concurrent flush/compaction
+    can never change what a bound plan reads. Retired manifests stay alive
+    while pinned (publish-then-retire); release drops the pin.
+  * component addresses are **stable ids**: a run is ``"<ds>@run<uid>"``
+    where ``uid`` is a per-dataset monotone counter assigned at flush time
+    and never reused — a compaction that folds neighbours does not shift
+    the address of a surviving run (list positions did; uids don't).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional
 
 import jax.numpy as jnp
@@ -41,7 +65,9 @@ class IndexInfo:
     zone_max: Optional[object] = None
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)  # identity semantics: components are
+#                                   compared/looked-up by object identity
+#                                   (manifest CAS validation), never by value
 class Dataset:
     name: str
     dataverse: str
@@ -49,14 +75,11 @@ class Dataset:
     closed: bool = True  # closed datatype == schema provided
     # First-class, always-present index inventory (never getattr-defaulted):
     # planner and compiler read it through core/stats.py TableStats — the one
-    # source of truth for access-path availability.
+    # source of truth for access-path availability. The *inventory* (which
+    # columns, which kinds) is hard metadata; the payloads (sorted keys, row
+    # ids, zone arrays) are SOFT state, rebuildable from the table columns
+    # (engine/lsm.py recover()).
     indexes: dict[str, IndexInfo] = dataclasses.field(default_factory=dict)
-    # LSM components (engine/lsm.py): each run is itself a Dataset holding a
-    # device-resident flush (padded + sharded, own indexes/zone maps). Runs
-    # are addressed as "<name>@run<i>" and never appear in catalog.names();
-    # queries over a fed dataset execute as base ∪ runs (UnionRuns plan node)
-    # until compaction folds them back into ``table``.
-    runs: list["Dataset"] = dataclasses.field(default_factory=list)
     live_rows: Optional[int] = None  # matter-row count (None -> len(table))
     # -- anti-matter (delete/upsert) bookkeeping ----------------------------
     # A mutated run carries tombstones: its table holds anti-matter rows
@@ -66,7 +89,9 @@ class Dataset:
     # THIS component's matter shadowed by strictly-newer components' anti-
     # matter (maintained at flush time, O(tombstones·log n)); the stats
     # layer discounts them so cost estimates and compaction triggers see
-    # visible rows, not raw storage.
+    # visible rows, not raw storage. All of it is soft state: query-time
+    # visibility always derives from the bound manifest's anti arrays, and
+    # recover() replays the bookkeeping from the hard rows.
     anti_rows: int = 0                       # tombstones this component holds
     anti_keys_arr: Optional[object] = None   # sorted device array of anti keys
     host_anti_keys: Optional[object] = None  # host copy of the same (point
@@ -83,6 +108,24 @@ class Dataset:
     # (lsm.make_run). The run-level envelope lives in the column stats; these
     # per-block values feed kernel-grid block skipping.
     block_zones: Optional[object] = None
+    # Stable component id: runs get a per-dataset monotone uid at flush time
+    # (never reused for the dataset's lifetime) and are addressed as
+    # "<name>@run<uid>"; -1 for base datasets.
+    uid: int = -1
+    # The current manifest for a *registered base* dataset (None for run
+    # components). Swapped atomically by Catalog.publish — never mutated.
+    manifest: Optional["Manifest"] = None
+
+    @property
+    def runs(self) -> list["Dataset"]:
+        """The dataset's CURRENT LSM components (live manifest view).
+
+        Read-only: the returned list is a copy — mutating it changes
+        nothing. Writers publish a new manifest (``Catalog.publish``);
+        readers bind a pinned ``Snapshot`` instead of this property."""
+        if self.manifest is None:
+            return []
+        return list(self.manifest.runs)
 
     @property
     def num_live_rows(self) -> int:
@@ -105,49 +148,220 @@ class Dataset:
         return None
 
 
+@dataclasses.dataclass
+class Manifest:
+    """One immutable, LSN-stamped description of a dataset's component set:
+    the base plus the ordered run list (oldest → newest; newest-wins
+    visibility is this order). ``lsn`` is the catalog-global log sequence
+    number of the publish that created it — strictly monotone, so manifests
+    totally order and the plan cache can key on it.
+
+    A manifest is never edited after publish. ``retired`` flips (under the
+    catalog lock) when a newer manifest supersedes it; ``pins`` counts live
+    snapshots still bound to it — a retired-but-pinned manifest keeps its
+    components reachable for exactly the readers that bound it
+    (publish-then-retire)."""
+
+    lsn: int
+    base: Dataset
+    runs: tuple = ()
+    retired: bool = False
+    pins: int = 0
+
+    @property
+    def components(self) -> tuple:
+        """(base, run_0, ..., run_n) — oldest to newest."""
+        return (self.base,) + tuple(self.runs)
+
+
+def _resolve_run(manifest: Manifest, dataverse: str, base_name: str,
+                 comp: str) -> Dataset:
+    """Resolve a stable-id component address suffix ("run<uid>") against one
+    manifest. Raises KeyError for malformed suffixes, unknown uids, and
+    retired (compacted-away) components alike — the address names a
+    component that this manifest does not serve."""
+    if comp.startswith("run"):
+        try:
+            uid = int(comp[3:])
+        except ValueError:
+            raise KeyError(
+                f"malformed LSM component address {dataverse}.{base_name}"
+                f"@{comp}: expected '@run<uid>'") from None
+        for r in manifest.runs:
+            if r.uid == uid:
+                return r
+    raise KeyError(f"unknown LSM component {dataverse}.{base_name}@{comp}")
+
+
+class Snapshot:
+    """An immutable, pinned view of the catalog at one LSN: every dataset's
+    manifest as of :meth:`Catalog.snapshot`. Duck-types the *read* surface
+    of the catalog (``get`` / ``components`` / ``manifest`` / ``names`` /
+    ``stats_epoch``), so the optimizer, pruner, physical planner, compiler,
+    and ``CompiledQuery.gather_tables`` bind against pinned components
+    without knowing they hold a snapshot — a concurrent flush or background
+    compaction can never change what a bound plan reads.
+
+    Pins are released with :meth:`release` (or the context-manager exit);
+    until then every captured manifest — retired or not — keeps its
+    components alive."""
+
+    def __init__(self, catalog: "Catalog", manifests: dict,
+                 stats_epoch: int, lsn: int):
+        self._catalog = catalog
+        self._manifests = manifests  # (dataverse, name) -> Manifest
+        self.stats_epoch = stats_epoch
+        self.lsn = lsn
+        self._released = False
+
+    def manifest(self, dataverse: str, name: str) -> Manifest:
+        key = (dataverse, name)
+        if key not in self._manifests:
+            raise KeyError(f"unknown dataset {dataverse}.{name}")
+        return self._manifests[key]
+
+    def components(self, dataverse: str, name: str) -> tuple:
+        return self.manifest(dataverse, name).components
+
+    def get(self, dataverse: str, name: str) -> Dataset:
+        if "@" in name:  # stable component address: "<dataset>@run<uid>"
+            base_name, _, comp = name.partition("@")
+            return _resolve_run(self.manifest(dataverse, base_name),
+                                dataverse, base_name, comp)
+        return self.manifest(dataverse, name).base
+
+    def names(self) -> list[str]:
+        return [f"{dv}.{n}" for dv, n in self._manifests]
+
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        with self._catalog._lock:
+            for m in self._manifests.values():
+                m.pins -= 1
+
+    def __enter__(self) -> "Snapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
 class Catalog:
     def __init__(self):
         self._datasets: dict[tuple[str, str], Dataset] = {}
         # Monotone statistics epoch: bumped on every event that changes what
         # the catalog statistics describe (DDL, feed flush, compaction).
-        # Compiled plans are keyed by the epoch (Session's plan cache), so a
-        # stale executable can never read a dropped LSM component.
+        # Compiled plans are keyed by (epoch, LSN) — the Session's plan
+        # cache — so a stale executable can never read a retired component.
         self.stats_epoch: int = 0
+        # Catalog-global log sequence number: bumped by every manifest
+        # publish. The single point of atomicity for storage state — a
+        # reader's snapshot is "everything at LSN <= n".
+        self.lsn: int = 0
+        # One lock serializes writers (manifest publishes, DDL) and makes
+        # snapshot capture consistent. Readers hold it only for the
+        # O(datasets) metadata capture — never across planning or execution,
+        # so no query ever blocks on a running compaction.
+        self._lock = threading.RLock()
+        self._run_uids: dict[tuple[str, str], int] = {}
+
+    @property
+    def lock(self) -> threading.RLock:
+        return self._lock
 
     def bump_stats_epoch(self) -> int:
-        self.stats_epoch += 1
-        return self.stats_epoch
+        with self._lock:
+            self.stats_epoch += 1
+            return self.stats_epoch
+
+    def next_run_uid(self, dataverse: str, name: str) -> int:
+        """Allocate the next stable run uid for a dataset. Uids are per
+        dataset, monotone, and never reused — a full compaction resets the
+        run list but not the counter, so a stale address can never alias a
+        different, newer run."""
+        with self._lock:
+            key = (dataverse, name)
+            uid = self._run_uids.get(key, 0)
+            self._run_uids[key] = uid + 1
+            return uid
 
     def register(self, ds: Dataset) -> Dataset:
-        self._datasets[(ds.dataverse, ds.name)] = ds
-        self.bump_stats_epoch()
-        return ds
+        """DDL entry point: register a fresh base dataset under an initial
+        one-component manifest."""
+        return self.publish(ds.dataverse, ds.name, ds, ())
+
+    def publish(self, dataverse: str, name: str, base: Dataset,
+                runs) -> Manifest:
+        """Atomically swap a dataset's manifest (publish-then-retire): stamp
+        the next LSN, install the new manifest, retire the old one. The old
+        manifest object is untouched beyond the ``retired`` flag — snapshots
+        that pinned it keep reading exactly the component set they bound."""
+        with self._lock:
+            key = (dataverse, name)
+            old = self._datasets.get(key)
+            # capture before the swap: flushes republish the SAME base
+            # Dataset object, so old.manifest is unreachable afterwards
+            old_manifest = old.manifest if old is not None else None
+            self.lsn += 1
+            m = Manifest(self.lsn, base, tuple(runs))
+            base.manifest = m
+            self._datasets[key] = base
+            if old_manifest is not None and old_manifest is not m:
+                old_manifest.retired = True
+            self.bump_stats_epoch()
+            return m
+
+    def manifest(self, dataverse: str, name: str) -> Manifest:
+        key = (dataverse, name)
+        if key not in self._datasets:
+            raise KeyError(f"unknown dataset {dataverse}.{name}")
+        return self._datasets[key].manifest
+
+    def components(self, dataverse: str, name: str) -> tuple:
+        """(base, *runs) of the dataset's CURRENT manifest. Readers that
+        need a stable view across multiple calls use snapshot() instead."""
+        return self.manifest(dataverse, name).components
+
+    def snapshot(self) -> Snapshot:
+        """Capture and pin the current manifest of every dataset — the
+        read-side entry point of snapshot isolation. O(datasets), metadata
+        only; the caller releases the snapshot when its bound plan is done."""
+        with self._lock:
+            manifests = {k: ds.manifest for k, ds in self._datasets.items()}
+            for m in manifests.values():
+                m.pins += 1
+            return Snapshot(self, manifests, self.stats_epoch, self.lsn)
 
     def get(self, dataverse: str, name: str) -> Dataset:
-        if "@" in name:  # LSM component address: "<dataset>@run<i>"
+        if "@" in name:  # stable component address: "<dataset>@run<uid>"
             base_name, _, comp = name.partition("@")
-            ds = self.get(dataverse, base_name)
-            if comp.startswith("run"):
-                i = int(comp[3:])
-                if i < len(ds.runs):
-                    return ds.runs[i]
-            raise KeyError(f"unknown LSM component {dataverse}.{name}")
+            return _resolve_run(self.manifest(dataverse, base_name),
+                                dataverse, base_name, comp)
         key = (dataverse, name)
         if key not in self._datasets:
             raise KeyError(f"unknown dataset {dataverse}.{name}")
         return self._datasets[key]
 
     def drop(self, dataverse: str, name: str) -> None:
-        if self._datasets.pop((dataverse, name), None) is not None:
-            self.bump_stats_epoch()
+        with self._lock:
+            ds = self._datasets.pop((dataverse, name), None)
+            if ds is not None:
+                if ds.manifest is not None:
+                    ds.manifest.retired = True
+                self.bump_stats_epoch()
 
     def names(self) -> list[str]:
         return [f"{dv}.{n}" for dv, n in self._datasets]
 
 
 def open_widen(table: Table) -> Table:
-    """Simulate an *open* datatype: numeric columns stored as float64 with a
-    per-access cast cost; schema-on-read (paper's open ADM datatype)."""
+    """Simulate an *open* datatype: integer columns stored as float32 with a
+    per-access cast cost; schema-on-read (the paper's open ADM datatype).
+    float32 — not a wider float — is deliberate: it is the TPU-native lane
+    dtype, and the cost being modelled is the cast itself, not extra
+    precision (tests/test_manifest.py pins the dtype)."""
     cols = {}
     meta = {}
     for name, col in table.columns.items():

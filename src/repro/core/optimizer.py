@@ -87,21 +87,23 @@ def _expand_feeds(node: P.Plan, catalog: Catalog) -> P.Plan:
     """Single top-down pass replacing every Scan of a dataset that has LSM
     runs with UnionRuns(Scan(base), Scan(run_0), ...). Component Scans keep
     the plain dataset name for the base (it resolves to the base table only;
-    runs live beside it) and "<name>@run<i>" for each run, so fingerprints
-    change whenever the run set does."""
+    runs live beside it) and each run's stable "<name>@run<uid>" address, so
+    fingerprints change whenever the run set does. ``catalog`` may be a
+    pinned Snapshot — the component set then reflects exactly the bound
+    manifest."""
     if isinstance(node, P.Scan):
         if "@" in node.dataset:
             return node
         try:
-            ds = catalog.get(node.dataverse, node.dataset)
+            comps = catalog.components(node.dataverse, node.dataset)
         except KeyError:
             return node
-        if not ds.runs:
+        runs = comps[1:]
+        if not runs:
             return node
-        comps: list[P.Plan] = [node]
-        comps += [P.Scan(f"{node.dataset}@run{i}", node.dataverse)
-                  for i in range(len(ds.runs))]
-        return P.UnionRuns(comps)
+        plans: list[P.Plan] = [node]
+        plans += [P.Scan(r.name, node.dataverse) for r in runs]
+        return P.UnionRuns(plans)
     kids = tuple(_expand_feeds(c, catalog) for c in node.children)
     return _with_children(node, kids) if kids != node.children else node
 

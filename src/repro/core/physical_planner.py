@@ -515,19 +515,25 @@ def _component_shadow(ctx: _PlannerCtx, dataverse: str, dataset: str):
     base < run0 < run1 < …, and only newer anti-matter annihilates."""
     base_name = dataset.split("@")[0]
     try:
-        base = ctx.catalog.get(dataverse, base_name)
+        comps = ctx.catalog.components(dataverse, base_name)
     except KeyError:
         return None, (), 0
-    primary = base.primary_index
-    if primary is None or not base.runs:
+    primary = comps[0].primary_index
+    if primary is None or len(comps) == 1:
         return (primary.column if primary is not None else None), (), 0
-    ordinal = 0 if "@" not in dataset \
-        else int(dataset.split("@run", 1)[1]) + 1
+    # locate this component by its stable address IN the bound manifest's
+    # order — uids are creation-ordered, not positional, so "newer than"
+    # is a position property of the pinned component tuple
+    names = [c.name for c in comps]
+    try:
+        ordinal = names.index(dataset) if "@" in dataset else 0
+    except ValueError:  # address not served by this manifest
+        return primary.column, (), 0
     sources: list[tuple[str, str]] = []
     total = 0
-    for i, r in enumerate(base.runs):
-        if i + 1 > ordinal and r.anti_rows:
-            sources.append((dataverse, f"{base_name}@run{i}"))
+    for r in comps[ordinal + 1:]:
+        if r.anti_rows:
+            sources.append((dataverse, r.name))
             total += r.anti_rows
     return primary.column, tuple(sources), total
 

@@ -39,18 +39,32 @@ from repro.engine.table import Table
 class Feed:
     def __init__(self, session, dataset: str, dataverse: str = "Default",
                  flush_rows: int = 4096,
-                 policy: Optional[lsm.CompactionPolicy] = None):
+                 policy: Optional[lsm.CompactionPolicy] = None,
+                 compactor: Optional["lsm.BackgroundCompactor"] = None,
+                 stall_runs: Optional[int] = None,
+                 stall_timeout_s: float = 5.0):
+        """``compactor`` moves compaction off the ingest hot path: flushes
+        notify the background worker instead of merging inline, and the
+        write-stall policy backpressures THIS writer — never readers — when
+        more than ``stall_runs`` components pile up (default: 2× the
+        policy's ``max_runs``), waiting up to ``stall_timeout_s`` for the
+        worker to catch up."""
         self.session = session
         self.dataset = dataset
         self.dataverse = dataverse
         self.flush_rows = flush_rows
         self.policy = policy if policy is not None else lsm.CompactionPolicy()
+        self.compactor = compactor
+        self.stall_runs = stall_runs if stall_runs is not None \
+            else max(2 * self.policy.max_runs, 4)
+        self.stall_timeout_s = stall_timeout_s
         self._buffer: list[tuple[str, object]] = []  # (kind, payload)
         self._buffered = 0
         self.stats = {"ingested": 0, "flushes": 0, "compactions": 0,
                       "runs": 0, "run_rows": 0,
                       "upserts": 0, "deletes": 0, "tombstones": 0,
-                      "tombstones_flushed": 0, "level_merges": 0}
+                      "tombstones_flushed": 0, "level_merges": 0,
+                      "stalls": 0, "stall_s": 0.0}
 
     # -- ingest ------------------------------------------------------------
 
@@ -121,29 +135,65 @@ class Feed:
             return
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         key_col = ds.primary_index.column if ds.primary_index is not None else None
+        # the buffer is the flush's write-ahead state: it is dropped only
+        # AFTER the manifest publish succeeds, so a crash at the "flush" or
+        # "pre-swap" fault point loses nothing — re-flushing replays the
+        # exact same batch (normalization is pure)
+        lsm._fault(self.session, "flush")
         cols, anti_keys = _normalize_buffer(self._buffer, ds.table, key_col)
-        self._buffer.clear()
-        self._buffered = 0
         if not len(next(iter(cols.values()))) and anti_keys is None:
+            self._buffer.clear()
+            self._buffered = 0
             return
         run = lsm.make_run(self.session, ds, Table(cols), anti_keys=anti_keys)
         retracted = lsm.register_run(self.session, ds, run)
+        self._buffer.clear()
+        self._buffered = 0
         self.session.refresh_views(self.dataverse, self.dataset, cols,
                                    retracted)
         self.stats["flushes"] += 1
-        self.stats["runs"] = len(ds.runs)
-        self.stats["run_rows"] = sum(r.num_live_rows for r in ds.runs)
-        self.stats["tombstones"] = sum(r.anti_rows for r in ds.runs)
+        self._refresh_run_stats()
         if anti_keys is not None:  # post-normalization: actually flushed
             self.stats["tombstones_flushed"] += len(anti_keys)
         self._apply_policy()
 
+    def drop_buffer(self) -> None:
+        """Discard the buffered (un-flushed) batches. Crash recovery uses
+        this after a post-swap fault: the manifest already committed the
+        flush, so replaying the buffer would double-apply it."""
+        self._buffer.clear()
+        self._buffered = 0
+
+    def _refresh_run_stats(self) -> None:
+        runs = self.session.catalog.get(self.dataverse, self.dataset).runs
+        self.stats["runs"] = len(runs)
+        self.stats["run_rows"] = sum(r.num_live_rows for r in runs)
+        self.stats["tombstones"] = sum(r.anti_rows for r in runs)
+
     def _apply_policy(self) -> None:
         """Run the compaction policy to quiescence: leveled merges may
-        cascade (an L0 fold can overflow L1), the full fold ends it."""
-        ds = self.session.catalog.get(self.dataverse, self.dataset)
+        cascade (an L0 fold can overflow L1), the full fold ends it.
+
+        With a background compactor attached, this only notifies the worker
+        — plus write-stall backpressure: when runs pile past the hard cap
+        (the worker is behind), THIS writer blocks until the count drops or
+        the stall timeout expires. Readers never block either way."""
+        if self.compactor is not None:
+            self.compactor.notify(self.dataverse, self.dataset)
+            runs = self.session.catalog.get(self.dataverse,
+                                            self.dataset).runs
+            if self.stall_runs and len(runs) >= self.stall_runs:
+                waited = self.compactor.wait_below(
+                    self.dataverse, self.dataset, self.stall_runs,
+                    self.stall_timeout_s)
+                self.stats["stalls"] += 1
+                self.stats["stall_s"] += waited
+                self._refresh_run_stats()
+            return
         for _ in range(16):
-            actions = self.policy.plan(ds)
+            m = self.session.catalog.manifest(self.dataverse, self.dataset)
+            ds = m.base
+            actions = self.policy.plan(lsm._ManifestView(ds, m))
             if not actions:
                 return
             act = actions[0]
@@ -151,11 +201,9 @@ class Feed:
                 self.compact()
                 return
             _, start, end, level = act
-            lsm.merge_runs(self.session, ds, start, end, level)
+            lsm.merge_runs(self.session, ds, start, end, level, manifest=m)
             self.stats["level_merges"] += 1
-            self.stats["runs"] = len(ds.runs)
-            self.stats["run_rows"] = sum(r.num_live_rows for r in ds.runs)
-            self.stats["tombstones"] = sum(r.anti_rows for r in ds.runs)
+            self._refresh_run_stats()
 
     def compact(self) -> None:
         """Merge base ∪ runs into a fresh base (single newest-wins merge +

@@ -41,17 +41,50 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import threading
+import time
 from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import plan as P
-from repro.core.catalog import INTERNAL_COLUMNS, Dataset, open_widen
+from repro.core.catalog import INTERNAL_COLUMNS, Dataset, Manifest, open_widen
 from repro.engine.table import ColumnMeta, Table, pad_to_block
+from repro.runtime.fault import StorageFault
 
 RUN_BLOCK = 1024      # runs are padded to this row multiple
 _F32_EXACT = 1 << 24  # every int in [-2^24, 2^24] is exactly representable
+
+
+class ManifestConflict(RuntimeError):
+    """A merge built off one manifest lost the CAS at publish time: a
+    concurrent publish (flush or another merge) invalidated the component
+    segment it planned against. The built components are discarded; the
+    caller replans against the current manifest and retries."""
+
+
+def _fault(session, point: str) -> None:
+    """Consult the session's storage FaultPlan (runtime/fault.py) at one
+    named crash point; raises StorageFault on a scheduled arrival."""
+    plan = getattr(session, "fault_plan", None)
+    if plan is not None:
+        plan.check(point)
+
+
+class _ManifestView:
+    """A Dataset proxy bound to one captured manifest: ``runs`` is the
+    pinned run list, every other attribute delegates to the base. Compaction
+    policies plan against this view, so their decision and the CAS-validated
+    merge both reference the same component set even while writers keep
+    publishing."""
+
+    def __init__(self, base: Dataset, manifest: Manifest):
+        self._base = base
+        self.runs = list(manifest.runs)
+
+    def __getattr__(self, item):
+        return getattr(self._base, item)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,7 +195,10 @@ def make_run(session, base: Dataset, table: Table,
     if session.mesh is not None:
         table = table.shard(session.mesh, session.data_axes)
     from repro.core.stats import harvest_block_zones, single_shard
-    run = Dataset(name=f"{base.name}@run{len(base.runs)}",
+    # stable component id: a per-dataset monotone uid, never reused — the
+    # run keeps this address for life, compactions around it notwithstanding
+    uid = session.catalog.next_run_uid(base.dataverse, base.name)
+    run = Dataset(name=f"{base.name}@run{uid}", uid=uid,
                   dataverse=base.dataverse, table=table, closed=base.closed,
                   live_rows=live, anti_rows=n_anti,
                   anti_keys_arr=None if anti_sorted is None
@@ -211,36 +247,51 @@ def _append_anti_rows(table: Table, key_col: str,
 
 
 def register_run(session, base: Dataset, run: Dataset) -> Optional[dict]:
-    """Attach the run and bump the catalog's statistics epoch: the LSM
-    component set is baked into optimized plans (UnionRuns fans out per
-    component) and every level of the Session plan cache is keyed by the
-    epoch, so cached executables for the old component set become
-    unreachable — queries rebind against base ∪ runs including this one.
+    """Publish the run: one atomic manifest swap under the catalog lock
+    (publish-then-retire — the swap bumps the LSN and statistics epoch, so
+    every level of the Session plan cache, keyed on (epoch, LSN), rebinds
+    and a cached executable for the old component set becomes unreachable).
+    Snapshots pinned on the old manifest keep reading exactly the old
+    component set.
 
-    When the run carries anti-matter, every older component's annihilation
+    The publish happens FIRST, then the soft-state bookkeeping: when the
+    run carries anti-matter, every older component's annihilation
     bookkeeping updates (O(tombstones · log component) host searches over
     the clustered key copies); when a materialized view is registered over
     the dataset, the newly annihilated rows are also gathered and returned
-    for its retraction — without a view the gather is skipped entirely."""
-    base.runs.append(run)
-    retracted = None
-    if run.anti_rows:
-        gather = any((v.dataverse, v.dataset) == (base.dataverse, base.name)
-                     for v in getattr(session, "views", {}).values())
-        retracted = _annihilate_older(base, run, gather=gather)
-    session.catalog.bump_stats_epoch()
+    for its retraction — without a view the gather is skipped entirely. A
+    crash between publish and bookkeeping (the "post-swap" fault point)
+    leaves the manifest committed and only soft state stale — recover()
+    replays the bookkeeping from the hard rows."""
+    cat = session.catalog
+    with cat.lock:
+        # re-read the CURRENT manifest: the base the caller fetched may have
+        # been swapped by a concurrent background compaction since
+        cur = cat.manifest(base.dataverse, base.name)
+        older = cur.components
+        _fault(session, "pre-swap")
+        cat.publish(base.dataverse, base.name, cur.base,
+                    tuple(cur.runs) + (run,))
+        _fault(session, "post-swap")
+        retracted = None
+        if run.anti_rows:
+            gather = any((v.dataverse, v.dataset) == (base.dataverse, base.name)
+                         for v in getattr(session, "views", {}).values())
+            retracted = _annihilate_older(older, run, gather=gather)
     return retracted
 
 
-def _annihilate_older(base: Dataset, run: Dataset,
+def _annihilate_older(older, run: Dataset,
                       gather: bool = True) -> Optional[dict]:
-    """Apply one new run's anti-key set to every strictly older component:
-    count (and, with ``gather``, collect) the matter rows it newly shadows.
-    A key a previous tombstone already covered is skipped — its matter was
-    discounted then, so nothing double-subtracts."""
+    """Apply one new run's anti-key set to the strictly older components
+    ``older``: count (and, with ``gather``, collect) the matter rows it
+    newly shadows. A key a previous tombstone already covered is skipped —
+    its matter was discounted then, so nothing double-subtracts. Callers
+    hold the catalog lock: the bookkeeping sets this mutates are read (and
+    copied) under the same lock by merges and stats."""
     anti_set = set(np.asarray(run.anti_keys_arr).tolist())
     gathered: list[dict[str, np.ndarray]] = []
-    for comp in [base] + base.runs[:-1]:
+    for comp in older:
         new = anti_set - comp.annihilated_keys
         if not new or comp.host_keys is None or not len(comp.host_keys):
             continue
@@ -276,24 +327,30 @@ def _annihilate_older(base: Dataset, run: Dataset,
             for k in names}
 
 
-def host_visible_mask(comp: Dataset, key_col: Optional[str]) -> np.ndarray:
+def host_visible_mask(comp: Dataset, key_col: Optional[str],
+                      annihilated: Optional[set] = None) -> np.ndarray:
     """Host-side visibility of one component's physical rows: valid matter
     (anti rows and padding are ``__valid__`` False) minus rows newer
-    components' anti-matter annihilated."""
+    components' anti-matter annihilated. ``annihilated`` overrides the
+    component's live kill-set with a copy captured under the catalog lock —
+    merges pass it so a concurrent flush mutating the live set mid-build
+    cannot race the mask (the flushed tombstones are reconciled at swap
+    time instead)."""
     mask = np.asarray(comp.table.valid).copy()
     anti = comp.table.columns.get("__antimatter__")
     if anti is not None:
         mask &= ~np.asarray(anti)
-    if comp.annihilated_keys and key_col is not None:
+    kill_set = comp.annihilated_keys if annihilated is None else annihilated
+    if kill_set and key_col is not None:
         keys = np.asarray(comp.table.columns[key_col])
-        kill = np.fromiter(comp.annihilated_keys, dtype=keys.dtype,
-                           count=len(comp.annihilated_keys))
+        kill = np.fromiter(kill_set, dtype=keys.dtype, count=len(kill_set))
         mask &= ~np.isin(keys, kill)
     return mask
 
 
-def _visible_columns(comp: Dataset, key_col: Optional[str]) -> dict[str, np.ndarray]:
-    mask = host_visible_mask(comp, key_col)
+def _visible_columns(comp: Dataset, key_col: Optional[str],
+                     annihilated: Optional[set] = None) -> dict[str, np.ndarray]:
+    mask = host_visible_mask(comp, key_col, annihilated)
     return {k: np.asarray(v)[mask] for k, v in comp.table.columns.items()
             if k not in INTERNAL_COLUMNS}
 
@@ -321,7 +378,7 @@ def _merge_meta(metas: list[ColumnMeta], total_rows: int) -> ColumnMeta:
     return ColumnMeta(base.dtype, lo, hi, distinct, base.is_string, False)
 
 
-def compact(session, ds: Dataset) -> Dataset:
+def compact(session, ds: Dataset, manifest: Optional[Manifest] = None) -> Dataset:
     """Fold base ∪ runs into a fresh base with a key-ordered newest-
     component-wins merge: each component contributes only the matter no
     newer component's anti-matter annihilated (upserted rows survive once,
@@ -329,55 +386,347 @@ def compact(session, ds: Dataset) -> Dataset:
     for them to annihilate — and the primary re-sort restores the clustered
     key order. One host merge, one re-shard, one index rebuild. Component
     stats merge so the catalog bounds stay truthful for the new key/value
-    domains the runs introduced."""
-    key_col = ds.primary_index.column if ds.primary_index is not None else None
-    comps = [ds] + list(ds.runs)
-    parts = [_visible_columns(c, key_col) for c in comps]
+    domains the runs introduced.
+
+    Concurrency: the merge plans against ``manifest`` (default: the current
+    one), builds the new base entirely OFF the catalog lock, and commits
+    with a CAS-validated atomic swap — if a concurrent publish changed the
+    base or reordered the merged segment, raises :class:`ManifestConflict`
+    (nothing published; the caller replans and retries). Runs flushed while
+    the merge was building survive the swap untouched and their anti keys
+    are reconciled against the fresh base at swap time."""
+    cat = session.catalog
+    dv, name = ds.dataverse, ds.name
+    with cat.lock:
+        m0 = manifest if manifest is not None else cat.manifest(dv, name)
+        comps = m0.components
+        # copy the kill-sets under the lock: a concurrent flush mutates the
+        # live sets, and the swap-time reconciliation below covers exactly
+        # the tombstones that land after this point
+        kills = [set(c.annihilated_keys) for c in comps]
+    key_col = m0.base.primary_index.column \
+        if m0.base.primary_index is not None else None
+    parts = [_visible_columns(c, key_col, kills[i])
+             for i, c in enumerate(comps)]
     names = list(parts[0])
     merged = {k: np.concatenate([p[k] for p in parts], axis=0) for k in names}
     total = len(next(iter(merged.values()))) if names else 0
     metas = [c.table.meta for c in comps]
     meta = {k: _merge_meta([mm[k] for mm in metas], total) for k in names}
-    secondary = [ix.column for ix in ds.indexes.values() if ix.kind == "secondary"]
-    return session.create_dataset(ds.name, Table(merged, meta),
-                                  dataverse=ds.dataverse, closed=ds.closed,
-                                  indexes=secondary, primary=key_col)
+    secondary = [ix.column for ix in m0.base.indexes.values()
+                 if ix.kind == "secondary"]
+    _fault(session, "mid-merge")
+    new_base = session._build_dataset(name, Table(merged, meta), dataverse=dv,
+                                      closed=m0.base.closed,
+                                      indexes=secondary, primary=key_col)
+    with cat.lock:
+        cur = cat.manifest(dv, name)
+        if cur.base is not m0.base \
+                or tuple(cur.runs[:len(m0.runs)]) != tuple(m0.runs):
+            raise ManifestConflict(
+                f"{dv}.{name}: component set changed under a full "
+                f"compaction (planned at lsn {m0.lsn}, now {cur.lsn})")
+        newer = cur.runs[len(m0.runs):]  # flushed while the merge built
+        _fault(session, "pre-swap")
+        cat.publish(dv, name, new_base, newer)
+        _fault(session, "post-swap")
+        # reconcile: the surviving newer runs' tombstones still shadow
+        # matter now living in the fresh base — replay their bookkeeping
+        for r in newer:
+            if r.anti_rows:
+                _annihilate_older((new_base,), r, gather=False)
+    return new_base
 
 
-def merge_runs(session, ds: Dataset, start: int, end: int, level: int) -> Dataset:
+def merge_runs(session, ds: Dataset, start: int, end: int, level: int,
+               manifest: Optional[Manifest] = None) -> Dataset:
     """Leveled-compaction step: fold the contiguous run segment
-    ``runs[start:end]`` into ONE run at ``level`` — O(segment), never
-    touching the base. Newest-wins inside the segment is already encoded in
-    each member's annihilation bookkeeping (a member's matter shadowed by
-    any newer component — inside or outside the segment — is dropped here),
-    and the merged run keeps the union of member anti-key sets: older
-    components still need them to subtract at query time."""
-    members = ds.runs[start:end]
-    key_col = ds.primary_index.column if ds.primary_index is not None else None
-    parts = [_visible_columns(c, key_col) for c in members]
+    ``runs[start:end]`` of ``manifest`` (default: the current one) into ONE
+    run at ``level`` — O(segment), never touching the base. Newest-wins
+    inside the segment is already encoded in each member's annihilation
+    bookkeeping (a member's matter shadowed by any newer component — inside
+    or outside the segment — is dropped here), and the merged run keeps the
+    union of member anti-key sets: older components still need them to
+    subtract at query time.
+
+    Concurrency mirrors :func:`compact`: build off-lock against kill-set
+    copies, CAS-validate that the member segment is still intact (by
+    component identity), publish one new manifest with the merged run in
+    the segment's slot — its stable uid is fresh; surviving neighbours keep
+    their addresses. Anti keys of runs flushed mid-build reconcile against
+    the merged run at swap time."""
+    cat = session.catalog
+    dv, name = ds.dataverse, ds.name
+    with cat.lock:
+        m0 = manifest if manifest is not None else cat.manifest(dv, name)
+        members = tuple(m0.runs[start:end])
+        kills = [set(m.annihilated_keys) for m in members]
+    key_col = m0.base.primary_index.column \
+        if m0.base.primary_index is not None else None
+    parts = [_visible_columns(c, key_col, kills[i])
+             for i, c in enumerate(members)]
     names = list(parts[0])
     merged_cols = {k: np.concatenate([p[k] for p in parts], axis=0)
                    for k in names}
     anti_parts = [np.asarray(m.anti_keys_arr) for m in members
                   if m.anti_rows]
     anti_union = np.unique(np.concatenate(anti_parts)) if anti_parts else None
-    del ds.runs[start:end]  # make_run names the new run by its slot
-    tail = ds.runs[start:]
-    del ds.runs[start:]
-    run = make_run(session, ds, Table(merged_cols), anti_keys=anti_union)
+    _fault(session, "mid-merge")
+    run = make_run(session, m0.base, Table(merged_cols), anti_keys=anti_union)
     run.level = level
-    # matter annihilated by newer-than-segment components was dropped above;
-    # seed the bookkeeping so their anti keys are never re-counted.
-    for newer in tail:
-        if newer.anti_rows:
-            run.annihilated_keys |= set(
-                np.asarray(newer.anti_keys_arr).tolist())
-    ds.runs.append(run)
-    ds.runs.extend(tail)
-    for i, r in enumerate(ds.runs):
-        r.name = f"{ds.name}@run{i}"
-    session.catalog.bump_stats_epoch()
+    with cat.lock:
+        cur = cat.manifest(dv, name)
+        if cur.base is not m0.base:
+            raise ManifestConflict(
+                f"{dv}.{name}: base swapped under a level merge "
+                f"(planned at lsn {m0.lsn}, now {cur.lsn})")
+        try:
+            s = cur.runs.index(members[0])  # identity: Dataset eq is id-based
+        except ValueError:
+            s = -1
+        if s < 0 or tuple(cur.runs[s:s + len(members)]) != members:
+            raise ManifestConflict(
+                f"{dv}.{name}: merged run segment no longer contiguous "
+                f"(planned at lsn {m0.lsn}, now {cur.lsn})")
+        tail = cur.runs[s + len(members):]
+        # matter annihilated by newer-than-segment components known at build
+        # time was dropped above; tombstones that landed mid-build replay
+        # here (occurrence-counted, so stats stay truthful either way)
+        for newer in tail:
+            if newer.anti_rows:
+                _annihilate_older((run,), newer, gather=False)
+        _fault(session, "pre-swap")
+        cat.publish(dv, name, cur.base, cur.runs[:s] + (run,) + tail)
+        _fault(session, "post-swap")
     return run
+
+
+# -- background compaction ---------------------------------------------------
+
+
+class BackgroundCompactor:
+    """Runs the compaction policies (size-ratio, leveled, read-amplification
+    — the same triggers the synchronous path uses) on a worker thread, off
+    the ingest hot path. Writers call :meth:`notify` after each flush; the
+    worker drains notified datasets to policy quiescence.
+
+    Every merge builds fresh components entirely OFF the catalog lock and
+    commits with one CAS-validated atomic manifest swap, so:
+
+      * readers never block — a query's snapshot capture takes the lock for
+        O(datasets) metadata only, and a running merge holds the lock only
+        for the swap itself;
+      * a concurrent flush that invalidates the planned segment raises
+        :class:`ManifestConflict` — the worker replans against the current
+        manifest and retries with exponential backoff, bounded by
+        ``max_retries`` consecutive failures per dataset;
+      * an injected :class:`~repro.runtime.fault.StorageFault` aborts the
+        attempt identically: hard state is untouched (the swap never
+        happened, or happened atomically), so the retry rebuilds from
+        intact components.
+
+    Writers needing backpressure (Feed's write stall) call
+    :meth:`wait_below`, which sleeps on the worker's progress condition
+    until the dataset's run count drops under the cap."""
+
+    def __init__(self, session, policy: Optional[CompactionPolicy] = None,
+                 max_retries: int = 5, backoff_s: float = 0.002):
+        self.session = session
+        self.policy = policy if policy is not None else CompactionPolicy()
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.stats = {"level_merges": 0, "compactions": 0, "conflicts": 0,
+                      "retries": 0, "faults": 0, "giveups": 0, "errors": 0}
+        self._cv = threading.Condition()
+        self._pending: set[tuple[str, str]] = set()
+        self._inflight = 0
+        self._stop = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="lsm-background-compactor")
+        self._thread.start()
+
+    # -- control -----------------------------------------------------------
+
+    def notify(self, dataverse: str, name: str) -> None:
+        """Mark a dataset dirty (a flush just published); returns at once."""
+        with self._cv:
+            self._pending.add((dataverse, name))
+            self._cv.notify_all()
+
+    def wait_idle(self, timeout: float = 30.0) -> bool:
+        """Block until the worker has drained every notification (tests and
+        benchmarks use this as a barrier). True if it went idle in time."""
+        deadline = time.perf_counter() + timeout
+        with self._cv:
+            while self._pending or self._inflight:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(min(remaining, 0.05))
+        return True
+
+    def wait_below(self, dataverse: str, name: str, cap: int,
+                   timeout: float) -> float:
+        """Write-stall backpressure: block until the dataset's run count
+        drops below ``cap`` (or timeout). Returns seconds stalled."""
+        t0 = time.perf_counter()
+        with self._cv:
+            while not self._stop:
+                try:
+                    n = len(self.session.catalog.manifest(dataverse, name).runs)
+                except KeyError:
+                    break
+                if n < cap:
+                    break
+                remaining = timeout - (time.perf_counter() - t0)
+                if remaining <= 0:
+                    break
+                self._cv.wait(min(remaining, 0.05))
+        return time.perf_counter() - t0
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=30.0)
+
+    def __enter__(self) -> "BackgroundCompactor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker ------------------------------------------------------------
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._stop:
+                    self._cv.wait()
+                if self._stop:
+                    return
+                key = self._pending.pop()
+                self._inflight += 1
+            try:
+                self._drain(key)
+            finally:
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+
+    def _drain(self, key: tuple[str, str]) -> None:
+        """Run the policy to quiescence for one dataset: each iteration
+        replans against the CURRENT manifest (a lost CAS or injected fault
+        backs off and replans; merges may cascade across levels)."""
+        cat = self.session.catalog
+        failures = 0
+        delay = self.backoff_s
+        while not self._stop:
+            try:
+                base = cat.get(*key)
+            except KeyError:
+                return  # dataset dropped
+            m = base.manifest
+            actions = self.policy.plan(_ManifestView(base, m))
+            if not actions:
+                return
+            act = actions[0]
+            try:
+                if act[0] == "full":
+                    compact(self.session, base, manifest=m)
+                    self.stats["compactions"] += 1
+                else:
+                    _, s, e, level = act
+                    merge_runs(self.session, base, s, e, level, manifest=m)
+                    self.stats["level_merges"] += 1
+                failures = 0
+                delay = self.backoff_s
+            except ManifestConflict:
+                self.stats["conflicts"] += 1
+                failures += 1
+            except StorageFault:
+                self.stats["faults"] += 1
+                failures += 1
+            except Exception:  # pragma: no cover - defensive: keep serving
+                self.stats["errors"] += 1
+                return
+            finally:
+                with self._cv:
+                    self._cv.notify_all()  # progress signal for stalled writers
+            if failures:
+                if failures > self.max_retries:
+                    self.stats["giveups"] += 1
+                    return  # dataset stays serveable, just under-compacted
+                self.stats["retries"] += 1
+                time.sleep(delay)
+                delay *= 2
+
+
+# -- crash recovery: rebuild soft state from hard state -----------------------
+
+
+def recover(session, dataverse: str, name: str) -> None:
+    """Crash recovery: rebuild every component's SOFT state from its HARD
+    state — the split the fault-injection tests assert.
+
+    Hard state (survives an injected crash at any fault point): each
+    component's columnar table — matter rows, anti-matter rows with the
+    ``__antimatter__`` flag and the key column, the ``__valid__`` mask —
+    plus the manifest itself (swapped atomically: after a crash it is
+    either the old or the new one, never half of each) and the index
+    INVENTORY (which columns, which kinds).
+
+    Soft state (rebuilt here): index payloads (sorted keys / row ids / zone
+    arrays), block zone maps, host-side clustered-key and anti-key copies,
+    the annihilation bookkeeping (replayed newest-wins in manifest order),
+    and materialized-view partials (reseeded from visible rows)."""
+    cat = session.catalog
+    with cat.lock:
+        m = cat.manifest(dataverse, name)
+    for comp in m.components:
+        _rebuild_soft(session, comp)
+    with cat.lock:
+        for i, run in enumerate(m.runs):
+            if run.anti_rows:
+                _annihilate_older((m.base,) + tuple(m.runs[:i]), run,
+                                  gather=False)
+        cat.bump_stats_epoch()
+    session.reseed_views(dataverse, name)
+
+
+def _rebuild_soft(session, comp: Dataset) -> None:
+    """Rebuild one component's soft state from its table columns: the same
+    passes create_dataset/make_run run at build time, so the rebuilt state
+    is bit-identical to the pre-crash state."""
+    from repro.core.stats import harvest_block_zones, single_shard
+
+    t = comp.table
+    valid = np.asarray(t.valid)
+    anti_col = t.columns.get("__antimatter__")
+    anti_mask = np.asarray(anti_col) if anti_col is not None \
+        else np.zeros(t.num_rows, bool)
+    comp.live_rows = int(valid.sum())
+    comp.annihilated_rows = 0
+    comp.annihilated_keys = set()
+    primary_col = None
+    for ix in comp.indexes.values():
+        if ix.kind == "primary":
+            primary_col = ix.column
+    comp.anti_rows = int(anti_mask.sum())
+    if comp.anti_rows and primary_col is not None:
+        anti_sorted = np.sort(np.asarray(t.columns[primary_col])[anti_mask])
+        comp.anti_keys_arr = jnp.asarray(anti_sorted)
+        comp.host_anti_keys = anti_sorted
+    else:
+        comp.anti_keys_arr = None
+        comp.host_anti_keys = None
+    if primary_col is not None:
+        # matter prefix is clustered: masking preserves the sorted order
+        comp.host_keys = np.asarray(t.columns[primary_col])[valid]
+    comp.block_zones = harvest_block_zones(t) \
+        if single_shard(session.mesh) else None
+    for key, ix in list(comp.indexes.items()):
+        comp.indexes[key] = session._build_index(t, ix.column, ix.kind)
 
 
 # -- incrementally-maintained materialized views ----------------------------
@@ -448,6 +797,16 @@ class MaterializedView:
                    list(plan.aggs), predicate)
 
     # -- state ------------------------------------------------------------
+
+    def reset(self) -> None:
+        """Drop the materialized partials (view state is SOFT state):
+        recovery reseeds from the dataset's visible rows, exactly like
+        create_view's initial seed."""
+        self.lo = None
+        self._counts = None
+        self._sums, self._maxs, self._mins = {}, {}, {}
+        self._key_dtype = None
+        self._dtypes = {}
 
     def _ensure_domain(self, klo: int, khi: int) -> None:
         if self._counts is None:

@@ -32,11 +32,13 @@ from jax.sharding import PartitionSpec as PS
 
 @dataclasses.dataclass
 class _PlanEntry:
-    """One raw-fingerprint plan-cache entry, valid for a single statistics
-    epoch. ``variants`` is the third cache level: prune signature →
-    (executable, literal binding)."""
+    """One raw-fingerprint plan-cache entry, valid for a single
+    (statistics epoch, manifest LSN) pair — a publish bumps both, so a
+    stale entry can never resolve a retired component. ``variants`` is the
+    third cache level: prune signature → (executable, literal binding)."""
 
     epoch: int
+    lsn: int
     opt: P.Plan                  # optimized logical plan
     opt_fp: str
     raw_lits0: list              # the entry-creation call's literals (binding anchors)
@@ -50,7 +52,9 @@ class Session:
                  enable_index: bool = True, enable_pushdown: bool = True,
                  enable_prune: bool = True, enable_block_skip: bool = True,
                  kernel_backend: Optional[str] = None,
-                 kernel_interpret: Optional[bool] = None):
+                 kernel_interpret: Optional[bool] = None,
+                 catalog: Optional[Catalog] = None,
+                 fault_plan: Optional[object] = None):
         """mode: 'auto' (shard_map when a mesh is given), 'gspmd',
         'shard_map', or 'kernel' (the cost-based planner lowers fusable plan
         shapes onto the Pallas relational kernels; anything uncovered falls
@@ -67,8 +71,15 @@ class Session:
         the Pallas kernels (interpret mode off-TPU), 'xla' the jnp twins;
         None picks pallas on TPU and the ops default elsewhere.
         ``kernel_interpret`` overrides the Pallas interpret auto-detection
-        (None = compiled on TPU, interpret elsewhere)."""
-        self.catalog = Catalog()
+        (None = compiled on TPU, interpret elsewhere).
+
+        ``catalog`` shares another session's catalog (concurrent serving:
+        reader sessions bind snapshots of a writer session's datasets; each
+        session keeps its own plan caches). ``fault_plan`` arms the storage
+        fault points (runtime/fault.py FaultPlan) for crash-consistency
+        tests."""
+        self.catalog = catalog if catalog is not None else Catalog()
+        self.fault_plan = fault_plan
         self.mesh = mesh
         if mode == "auto":
             mode = "shard_map" if mesh is not None and mesh.devices.size > 1 else "gspmd"
@@ -127,6 +138,21 @@ class Session:
         ``primary`` sorts the stored table by that column (clustered);
         ``indexes`` build secondary sorted indexes per shard."""
         t0 = time.perf_counter()
+        ds = self._build_dataset(name, table, dataverse=dataverse,
+                                 closed=closed, indexes=indexes,
+                                 primary=primary)
+        self.catalog.register(ds)
+        self._invalidate_plans()
+        self.timings[f"create:{dataverse}.{name}"] = time.perf_counter() - t0
+        return ds
+
+    def _build_dataset(self, name: str, table: Table, dataverse: str = "Default",
+                       closed: bool = True, indexes: Sequence[str] = (),
+                       primary: Optional[str] = None) -> Dataset:
+        """Build (stats → widen → cluster → shard → index) WITHOUT touching
+        the catalog: background compaction builds replacement bases off the
+        hot path and publishes them separately with one atomic manifest
+        swap."""
         table = _collect_stats(table)  # DBMS-style stats on load
         if not closed:
             table = open_widen(table)
@@ -152,9 +178,6 @@ class Session:
             ds.indexes["primary"] = self._build_index(table, primary, "primary")
         for col in indexes:
             ds.indexes[f"ix_{col}"] = self._build_index(table, col, "secondary")
-        self.catalog.register(ds)
-        self._invalidate_plans()
-        self.timings[f"create:{dataverse}.{name}"] = time.perf_counter() - t0
         return ds
 
     def _invalidate_plans(self) -> None:
@@ -181,20 +204,43 @@ class Session:
         filtered — dataset scan. The view is seeded from the dataset's
         current contents (base ∪ runs) and from then on refreshed
         *incrementally* from each feed flush's delta batch."""
-        from repro.engine.lsm import MaterializedView, host_visible_mask
+        from repro.engine.lsm import MaterializedView
 
         plan = getattr(frame_or_plan, "_plan", frame_or_plan)
         view = MaterializedView.from_plan(name, plan)
-        ds = self.catalog.get(view.dataverse, view.dataset)
-        key_col = ds.primary_index.column if ds.primary_index is not None else None
-        for comp in [ds] + list(ds.runs):
+        with self.catalog.snapshot() as snap:
+            self._seed_view(view, snap.components(view.dataverse,
+                                                  view.dataset))
+        self.views[name] = view
+        return view
+
+    def _seed_view(self, view, comps) -> None:
+        """Seed (or reseed) one view from a pinned component tuple."""
+        from repro.engine.lsm import host_visible_mask
+
+        base = comps[0]
+        key_col = base.primary_index.column \
+            if base.primary_index is not None else None
+        for comp in comps:
             cols = {k: np.asarray(v) for k, v in comp.table.columns.items()
                     if k not in INTERNAL_COLUMNS}
             # seed from VISIBLE rows only: anti rows are __valid__ False, and
             # matter newer components already annihilated must not count
             view.apply_delta(cols, host_visible_mask(comp, key_col))
-        self.views[name] = view
-        return view
+
+    def reseed_views(self, dataverse: str, dataset: str) -> None:
+        """Rebuild every view over the dataset from scratch (crash recovery:
+        view partials are soft state — lsm.recover calls this after the
+        component-level rebuild)."""
+        targets = [v for v in self.views.values()
+                   if (v.dataverse, v.dataset) == (dataverse, dataset)]
+        if not targets:
+            return
+        with self.catalog.snapshot() as snap:
+            comps = snap.components(dataverse, dataset)
+            for view in targets:
+                view.reset()
+                self._seed_view(view, comps)
 
     def read_view(self, name: str) -> dict:
         """The materialized result — no query execution, dashboard-latency."""
@@ -228,18 +274,23 @@ class Session:
         def recompute(op: str, column: str, group_keys: np.ndarray) -> np.ndarray:
             import jax.numpy as jnp
 
-            ds = self.catalog.get(view.dataverse, view.dataset)
-            key_col = ds.primary_index.column \
-                if ds.primary_index is not None else None
-            keys_parts, vals_parts = [], []
-            for comp in [ds] + list(ds.runs):
-                mask = host_visible_mask(comp, key_col)
-                if view.predicate is not None:
-                    env = {k: jnp.asarray(v)
-                           for k, v in comp.table.columns.items()}
-                    mask &= np.asarray(view.predicate.evaluate(env, []), bool)
-                keys_parts.append(np.asarray(comp.table.columns[view.key])[mask])
-                vals_parts.append(np.asarray(comp.table.columns[column])[mask])
+            with self.catalog.snapshot() as snap:
+                comps = snap.components(view.dataverse, view.dataset)
+                ds = comps[0]
+                key_col = ds.primary_index.column \
+                    if ds.primary_index is not None else None
+                keys_parts, vals_parts = [], []
+                for comp in comps:
+                    mask = host_visible_mask(comp, key_col)
+                    if view.predicate is not None:
+                        env = {k: jnp.asarray(v)
+                               for k, v in comp.table.columns.items()}
+                        mask &= np.asarray(view.predicate.evaluate(env, []),
+                                           bool)
+                    keys_parts.append(
+                        np.asarray(comp.table.columns[view.key])[mask])
+                    vals_parts.append(
+                        np.asarray(comp.table.columns[column])[mask])
             keys = np.concatenate(keys_parts)
             vals = np.concatenate(vals_parts).astype(np.float64)
             # one sort, then a binary-searched slice per affected group —
@@ -277,13 +328,14 @@ class Session:
         from repro.core.catalog import INTERNAL_COLUMNS
 
         t0 = time.perf_counter()
-        ds = self.catalog.get(dataverse, dataset)
+        with self.catalog.snapshot() as snap:
+            comps = list(snap.components(dataverse, dataset))
+        ds = comps[0]
         primary = ds.primary_index
         if primary is None:
             raise ValueError(
                 f"point lookup needs a primary key on {dataverse}.{dataset} "
                 "(create the dataset with primary=<column>)")
-        comps = [ds] + list(ds.runs)
         probed = skipped = 0
         found_in = tombstoned_by = None
         result = None
@@ -344,8 +396,13 @@ class Session:
 
     # -- query execution -------------------------------------------------------
 
-    def exec_context(self) -> ExecContext:
-        return ExecContext(catalog=self.catalog, mesh=self.mesh,
+    def exec_context(self, catalog=None) -> ExecContext:
+        """``catalog`` is any catalog-read-surface object — execution passes
+        the query's pinned Snapshot so compile-time component reads (shadow
+        probe constants, leaf tables) bind against the snapshot, not the
+        moving catalog."""
+        return ExecContext(catalog=catalog if catalog is not None
+                           else self.catalog, mesh=self.mesh,
                            data_axes=self.data_axes, mode=self.mode,
                            kernel_backend=self.kernel_backend,
                            kernel_interpret=self.kernel_interpret)
@@ -358,29 +415,33 @@ class Session:
 
         return self.enable_block_skip and single_shard(self.mesh)
 
-    def _optimize(self, plan: P.Plan) -> P.Plan:
+    def _optimize(self, plan: P.Plan, catalog) -> P.Plan:
         self.stats["optimizes"] += 1
-        return optimize(plan, self.catalog,
+        return optimize(plan, catalog,
                         enable_pushdown=self.enable_pushdown)
 
-    def _plan_entry(self, plan: P.Plan, raw_fp: str, raw_lits: list) -> _PlanEntry:
-        """Level 1: optimized plan + pruner per (raw fingerprint, epoch)."""
-        epoch = self.catalog.stats_epoch
+    def _plan_entry(self, plan: P.Plan, raw_fp: str, raw_lits: list,
+                    snap) -> _PlanEntry:
+        """Level 1: optimized plan + pruner per (raw fingerprint, epoch,
+        LSN) — optimization, pruner construction, and stats all bind the
+        pinned snapshot."""
         e = self._plans.get(raw_fp)
-        if e is not None and e.epoch == epoch:
+        if e is not None and (e.epoch, e.lsn) == (snap.stats_epoch, snap.lsn):
             return e
-        if e is not None:  # stale epoch: sweep dead executables with it
+        if e is not None:  # stale epoch/LSN: sweep dead executables with it
             self._compiled = {k: v for k, v in self._compiled.items()
-                              if k[1] == epoch}
-        opt = self._optimize(plan)
-        e = _PlanEntry(epoch, opt, opt.fingerprint(), list(raw_lits),
-                       build_pruner(opt, self.catalog, raw_lits))
+                              if k[1:] == (snap.stats_epoch, snap.lsn)}
+        opt = self._optimize(plan, snap)
+        e = _PlanEntry(snap.stats_epoch, snap.lsn, opt, opt.fingerprint(),
+                       list(raw_lits), build_pruner(opt, snap, raw_lits))
         self._plans[raw_fp] = e
         return e
 
-    def _variant(self, e: _PlanEntry, raw_lits: list):
+    def _variant(self, e: _PlanEntry, raw_lits: list, snap):
         """Levels 2+3: prune signature → (executable, binding); executables
-        dedup'd across logical shapes by physical fingerprint."""
+        dedup'd across logical shapes by physical fingerprint, keyed on the
+        snapshot's (epoch, LSN) so a stale executable can never read a
+        retired component."""
         from repro.core.expr import ordered_lits
         from repro.core.physical_planner import NO_PRUNE
 
@@ -391,14 +452,14 @@ class Session:
         if var is not None:
             self.stats["hits"] += 1
             return var
-        phys = plan_physical(e.opt, self.catalog, mode=self.mode,
+        phys = plan_physical(e.opt, snap, mode=self.mode,
                              decisions=decisions,
                              enable_index=self.enable_index)
         self.stats["plans"] += 1
-        key = (phys.fingerprint(), e.epoch)
+        key = (phys.fingerprint(), e.epoch, e.lsn)
         cq = self._compiled.get(key)
         if cq is None:
-            cq = compile_physical(e.opt, phys, self.exec_context())
+            cq = compile_physical(e.opt, phys, self.exec_context(snap))
             self._compiled[key] = cq
             self.stats["compiles"] += 1
         else:
@@ -426,6 +487,12 @@ class Session:
         pruning (pure interval arithmetic), and — when the surviving-run set
         is unchanged — binds straight into the cached executable's param
         slots: no optimizer pass, no planner pass, no re-compile.
+
+        Snapshot isolation: the query pins one immutable catalog snapshot
+        up front and optimizes, prunes, compiles, and executes entirely
+        against it — a concurrent flush or background compaction publishing
+        mid-query cannot change what this plan reads (it binds the NEXT
+        query, which captures a fresh snapshot).
         """
         from repro.core.expr import ordered_lits
         from repro.core.physical import prune_report
@@ -433,11 +500,12 @@ class Session:
         t0 = time.perf_counter()
         raw_fp = plan.fingerprint()
         raw_lits = ordered_lits(P.all_exprs(plan))
-        e = self._plan_entry(plan, raw_fp, raw_lits)
-        cq, binding = self._variant(e, raw_lits)
-        params = _bind_params(binding, raw_lits)
-        out = cq.run(self.catalog, params=params)
-        out = jax.block_until_ready(out)
+        with self.catalog.snapshot() as snap:
+            e = self._plan_entry(plan, raw_fp, raw_lits, snap)
+            cq, binding = self._variant(e, raw_lits, snap)
+            params = _bind_params(binding, raw_lits)
+            out = cq.run(snap, params=params)
+            out = jax.block_until_ready(out)
         self.timings["last_execute"] = time.perf_counter() - t0
         self.last_optimized = e.opt
         self.last_physical = cq.physical
@@ -458,24 +526,26 @@ class Session:
         from repro.core.physical import format_plan
 
         raw_lits = ordered_lits(P.all_exprs(plan))
-        e = self._plan_entry(plan, plan.fingerprint(), raw_lits)
-        decisions = e.pruner.decide([l.value for l in raw_lits],
-                                    block_skip=self._block_skip()) \
-            if self.enable_prune else None
-        from repro.core.physical_planner import NO_PRUNE
-        phys = plan_physical(e.opt, self.catalog, mode=self.mode,
-                             decisions=decisions or NO_PRUNE,
-                             enable_index=self.enable_index)
+        with self.catalog.snapshot() as snap:
+            e = self._plan_entry(plan, plan.fingerprint(), raw_lits, snap)
+            decisions = e.pruner.decide([l.value for l in raw_lits],
+                                        block_skip=self._block_skip()) \
+                if self.enable_prune else None
+            from repro.core.physical_planner import NO_PRUNE
+            phys = plan_physical(e.opt, snap, mode=self.mode,
+                                 decisions=decisions or NO_PRUNE,
+                                 enable_index=self.enable_index)
         return format_plan(phys)
 
     def persist(self, plan: P.Plan, name: str, dataverse: str = "Default") -> Dataset:
         """CREATE DATASET AS <query> — result stays engine-resident (paper
         Input 15: no data ever leaves storage)."""
-        opt = self._optimize(plan)
-        cq = compile_plan(opt, self.exec_context(),
-                          enable_index=self.enable_index,
-                          enable_prune=self.enable_prune)
-        out = cq.run(self.catalog)
+        with self.catalog.snapshot() as snap:
+            opt = self._optimize(plan, snap)
+            cq = compile_plan(opt, self.exec_context(snap),
+                              enable_index=self.enable_index,
+                              enable_prune=self.enable_prune)
+            out = cq.run(snap)
         if cq.kind == "scalar":
             raise ValueError("cannot persist a scalar result")
         env, mask = out

@@ -1,11 +1,24 @@
-"""Fault-tolerant training driver: checkpoint/rollback, NaN recovery,
-injected node failures, straggler mitigation (simulated deadlines).
+"""Fault injection and fault-tolerant drivers.
 
-The driver owns the step loop so every failure mode has one recovery path:
-restore the latest good checkpoint, fast-forward the data iterator, resume.
-On a real pod the failure signal is a missing heartbeat / XLA collective
-timeout; here ``FailureInjector`` raises on schedule so tests exercise the
-exact same recovery code (EXPERIMENTS.md §Fault).
+Two fault surfaces share this module:
+
+  * **storage** — :class:`FaultPlan` schedules deterministic crashes at the
+    LSM engine's named fault points (``flush`` / ``mid-merge`` /
+    ``pre-swap`` / ``post-swap``), raising :class:`StorageFault`. The
+    engine's crash-consistency contract (engine/lsm.py ``recover``): a
+    crash at ANY point leaves hard state (matter + tombstone rows, the
+    atomically-swapped manifest) intact and only soft state (index
+    payloads, zone maps, bookkeeping, view partials) rebuildable — readers
+    on the old manifest return bit-identical results throughout.
+  * **training** — :class:`FailureInjector` is the step-keyed
+    specialization driving :class:`FaultTolerantLoop` (checkpoint/rollback,
+    NaN recovery, straggler deadlines). On a real pod the failure signal is
+    a missing heartbeat / XLA collective timeout; here the injector raises
+    on schedule so tests exercise the exact same recovery code
+    (EXPERIMENTS.md §Fault).
+
+Both injectors are deterministic arrival schedules — seeded CI smoke tests
+replay identical failure sequences.
 """
 from __future__ import annotations
 
@@ -26,6 +39,55 @@ class NodeFailure(RuntimeError):
 
 class Straggler(RuntimeError):
     pass
+
+
+class StorageFault(RuntimeError):
+    """An injected storage-layer crash (the LSM analogue of NodeFailure):
+    raised by FaultPlan at a named engine fault point."""
+
+
+# The LSM engine's named crash points, in flush/merge order of occurrence:
+#   flush      — before the buffered batch becomes a run (buffer intact)
+#   mid-merge  — while a compaction builds fresh components (old set intact)
+#   pre-swap   — after the build, before the atomic manifest publish
+#   post-swap  — after the publish, before the soft-state bookkeeping
+STORAGE_FAULT_POINTS = ("flush", "mid-merge", "pre-swap", "post-swap")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic storage fault schedule over named crash points — the
+    storage generalization of :class:`FailureInjector` (which schedules by
+    training step; this schedules by Nth arrival at a point).
+
+    ``schedule`` maps a point name to the arrival indices (0-based) that
+    crash, or ``True`` to crash on every arrival. Each passage of a fault
+    point counts one arrival whether or not it fires, so a retry after an
+    injected crash naturally proceeds past a one-shot fault — exactly how
+    the BackgroundCompactor's bounded-retry loop recovers."""
+
+    schedule: dict[str, object] = dataclasses.field(default_factory=dict)
+    seen: dict[str, int] = dataclasses.field(default_factory=dict)
+    fired: list[tuple[str, int]] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def once(cls, point: str, arrival: int = 0) -> "FaultPlan":
+        """Crash exactly once: on the ``arrival``-th passage of ``point``."""
+        return cls(schedule={point: (arrival,)})
+
+    def check(self, point: str) -> None:
+        """Count one arrival at ``point``; raise StorageFault if scheduled."""
+        i = self.seen.get(point, 0)
+        self.seen[point] = i + 1
+        hits = self.schedule.get(point)
+        if hits is True or (hits is not None and i in hits):
+            self.fired.append((point, i))
+            raise StorageFault(
+                f"injected storage fault at {point} (arrival {i})")
+
+    def reset(self) -> None:
+        self.seen.clear()
+        self.fired.clear()
 
 
 @dataclasses.dataclass
@@ -59,11 +121,13 @@ class FaultTolerantLoop:
     (the fast-skip the paper-scale systems use)."""
 
     def __init__(self, train_step: Callable, ckpt: CheckpointManager,
-                 cfg: TrainLoopConfig = TrainLoopConfig(),
+                 cfg: Optional[TrainLoopConfig] = None,
                  injector: Optional[FailureInjector] = None):
         self.train_step = train_step
         self.ckpt = ckpt
-        self.cfg = cfg
+        # construct per instance: a dataclass default instance would be
+        # shared (and mutable) across every loop
+        self.cfg = cfg if cfg is not None else TrainLoopConfig()
         self.injector = injector or FailureInjector()
         self.events: list[tuple[int, str]] = []
 

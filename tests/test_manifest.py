@@ -1,0 +1,208 @@
+"""Manifest / snapshot-isolation unit coverage (core/catalog.py): atomic
+publish-then-retire swaps, LSN monotonicity, pinned snapshots, stable
+component addressing across compaction, Catalog.get error paths, and the
+open_widen dtype contract."""
+import numpy as np
+import pytest
+
+from repro.core.catalog import Catalog, Manifest, Snapshot, open_widen
+from repro.engine import lsm
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+from repro.engine.table import Table
+
+
+def _fresh(n=50, name="Live", primary="k", policy=None, flush_rows=10):
+    sess = Session()
+    sess.create_dataset(
+        name, Table({"k": np.arange(n, dtype=np.int32),
+                     "v": (np.arange(n, dtype=np.int32) * 3) % 17}),
+        dataverse="d", primary=primary)
+    feed = Feed(sess, name, "d", flush_rows=flush_rows,
+                policy=policy or lsm.CompactionPolicy(size_ratio=100.0,
+                                                      max_runs=64))
+    return sess, feed
+
+
+def _push(feed, lo, n=10):
+    feed.push({"k": np.arange(lo, lo + n, dtype=np.int32),
+               "v": (np.arange(lo, lo + n, dtype=np.int32) * 3) % 17})
+
+
+# -- manifest lifecycle ------------------------------------------------------
+
+
+def test_flush_publishes_new_manifest_and_retires_old():
+    sess, feed = _fresh()
+    ds = sess.catalog.get("d", "Live")
+    m0 = ds.manifest
+    assert isinstance(m0, Manifest) and m0.runs == () and not m0.retired
+    _push(feed, 50)
+    m1 = sess.catalog.get("d", "Live").manifest
+    assert m1 is not m0 and m1.lsn > m0.lsn
+    assert m0.retired and not m1.retired
+    assert [r.name for r in m1.runs] == ["Live@run0"]
+    # the retired manifest still describes exactly the old component set
+    assert m0.components == (ds,)
+
+
+def test_lsn_strictly_monotone_across_publishes():
+    sess, feed = _fresh()
+    seen = [sess.catalog.get("d", "Live").manifest.lsn]
+    for i in range(3):
+        _push(feed, 50 + 10 * i)
+        seen.append(sess.catalog.get("d", "Live").manifest.lsn)
+    feed.compact()
+    seen.append(sess.catalog.get("d", "Live").manifest.lsn)
+    assert seen == sorted(seen) and len(set(seen)) == len(seen)
+
+
+def test_snapshot_pins_old_manifest_across_flush_and_compaction():
+    sess, feed = _fresh()
+    _push(feed, 50)
+    snap = sess.catalog.snapshot()
+    pinned = snap.manifest("d", "Live")
+    assert pinned.pins == 1
+    before = [c.name for c in snap.components("d", "Live")]
+    _push(feed, 60)
+    feed.compact()
+    # the live catalog moved on ...
+    assert [c.name for c in sess.catalog.components("d", "Live")] == ["Live"]
+    # ... but the pinned snapshot still reads the exact old component set
+    assert [c.name for c in snap.components("d", "Live")] == before
+    assert snap.get("d", "Live@run0") is pinned.runs[0]
+    assert pinned.retired
+    snap.release()
+    assert pinned.pins == 0
+    snap.release()  # idempotent
+    assert pinned.pins == 0
+
+
+def test_snapshot_does_not_see_later_datasets():
+    sess, _ = _fresh()
+    with sess.catalog.snapshot() as snap:
+        sess.create_dataset("Late", Table({"k": np.arange(5)}), dataverse="d")
+        with pytest.raises(KeyError):
+            snap.get("d", "Late")
+    assert sess.catalog.get("d", "Late") is not None
+
+
+def test_dataset_runs_property_is_a_read_only_view():
+    sess, feed = _fresh()
+    _push(feed, 50)
+    ds = sess.catalog.get("d", "Live")
+    runs = ds.runs
+    runs.append("garbage")  # mutating the copy changes nothing
+    assert [r.name for r in ds.runs] == ["Live@run0"]
+
+
+# -- stable component addressing ---------------------------------------------
+
+
+def test_get_component_address_error_paths():
+    sess, feed = _fresh()
+    _push(feed, 50)
+    cat = sess.catalog
+    assert cat.get("d", "Live@run0").uid == 0
+    with pytest.raises(KeyError):  # out-of-range uid
+        cat.get("d", "Live@run99")
+    with pytest.raises(KeyError):  # malformed suffix: no uid
+        cat.get("d", "Live@run")
+    with pytest.raises(KeyError):  # malformed suffix: non-numeric uid
+        cat.get("d", "Live@runx")
+    with pytest.raises(KeyError):  # malformed suffix: not a run address
+        cat.get("d", "Live@foo")
+    with pytest.raises(KeyError):  # unknown dataset
+        cat.get("d", "Nope@run0")
+    with pytest.raises(KeyError):  # unknown dataverse
+        cat.get("nope", "Live@run0")
+    # the same contract through a snapshot
+    with cat.snapshot() as snap:
+        with pytest.raises(KeyError):
+            snap.get("d", "Live@run99")
+        with pytest.raises(KeyError):
+            snap.get("d", "Nope@run0")
+
+
+def test_stable_address_survives_level_merge_between_creation_and_resolution():
+    """A leveled merge folds runs 0..2 into a fresh run while run 3's
+    address — taken BEFORE the merge — keeps resolving to the same object;
+    the merged-away addresses go stale (KeyError), never alias."""
+    sess, feed = _fresh(flush_rows=10)
+    for i in range(4):
+        _push(feed, 50 + 10 * i)
+    cat = sess.catalog
+    survivor = cat.get("d", "Live@run3")
+    merged_away = [cat.get("d", f"Live@run{i}") for i in range(3)]
+    lsm.merge_runs(sess, cat.get("d", "Live"), 0, 3, level=1)
+    # the survivor keeps its stable address AND identity
+    assert cat.get("d", "Live@run3") is survivor
+    # the merged run took a fresh uid — it never shadows a retired address
+    names = [r.name for r in cat.get("d", "Live").runs]
+    assert names == ["Live@run4", "Live@run3"]
+    assert cat.get("d", "Live@run4").uid == 4
+    for i in range(3):
+        with pytest.raises(KeyError):
+            cat.get("d", f"Live@run{i}")
+    assert all(m.name == f"Live@run{i}" for i, m in enumerate(merged_away))
+
+
+def test_full_compaction_never_recycles_uids():
+    sess, feed = _fresh()
+    _push(feed, 50)
+    _push(feed, 60)
+    feed.compact()
+    _push(feed, 70)
+    # uids 0 and 1 were consumed pre-compaction; the next flush takes 2
+    assert [r.name for r in sess.catalog.get("d", "Live").runs] == ["Live@run2"]
+    with pytest.raises(KeyError):
+        sess.catalog.get("d", "Live@run0")
+
+
+# -- shared-catalog reader sessions ------------------------------------------
+
+
+def test_reader_session_shares_catalog_and_sees_writes():
+    from repro.core.frame import AFrame
+
+    sess, feed = _fresh()
+    reader = Session(catalog=sess.catalog)
+    df = AFrame("d", "Live", session=reader)
+    assert len(df) == 50
+    _push(feed, 50)
+    assert len(df) == 60
+    feed.compact()
+    assert len(df) == 60
+
+
+# -- open_widen dtype contract (regression: docs said float64) ---------------
+
+
+def test_open_widen_casts_integers_to_float32():
+    t = Table({"k": np.arange(8, dtype=np.int64),
+               "f": np.ones(8, dtype=np.float64),
+               "s": np.zeros((8, 16), dtype=np.uint8)})
+    w = open_widen(t)
+    assert w.columns["k"].dtype == np.float32  # the TPU-native lane dtype
+    assert w.meta["k"].dtype == np.dtype(np.float32)
+    assert w.columns["f"].dtype == t.columns["f"].dtype  # floats untouched
+    assert w.columns["s"].dtype == np.uint8  # strings untouched
+    np.testing.assert_array_equal(np.asarray(w.columns["k"]),
+                                  np.arange(8, dtype=np.float32))
+
+
+# -- FaultTolerantLoop config default (regression: shared instance) ----------
+
+
+def test_fault_tolerant_loop_config_not_shared():
+    from repro.runtime.fault import FaultTolerantLoop
+
+    class _NullCkpt:
+        def save(self, *a, **k):
+            pass
+
+    a = FaultTolerantLoop(lambda *a: None, _NullCkpt())
+    b = FaultTolerantLoop(lambda *a: None, _NullCkpt())
+    assert a.cfg is not b.cfg
+    a.cfg.ckpt_every = 999
+    assert b.cfg.ckpt_every != 999

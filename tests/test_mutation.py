@@ -309,7 +309,9 @@ def test_leveled_policy_trigger_boundaries():
     assert feed.stats["level_merges"] == 1
     assert [r.level for r in ds.runs] == [1]
     assert ds.runs[0].num_live_rows == 30
-    assert [r.name for r in ds.runs] == ["L@run0"]
+    # stable component ids: the merged run gets a FRESH uid (3 follows the
+    # three flushed runs 0..2) — addresses are never recycled by compaction
+    assert [r.name for r in ds.runs] == ["L@run3"]
     # cascade: 6 flushes -> two L1 runs -> one L2 (level_ratio=2)
     sess, feed = feed_with(pol, 6)
     ds = sess.catalog.get("d", "L")
