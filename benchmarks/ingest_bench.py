@@ -442,6 +442,13 @@ def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[d
         rows.extend(_block_skip_sweep(size))
         rows.extend(_mutation_sweep(size))
         rows.extend(_serving_sweep(size))
+    # attach the engine-wide telemetry snapshot (counters/gauges/histograms
+    # accumulated across every sweep above — plan cache, flush/compaction,
+    # write stalls, retired-manifest bytes, kernel launches); spans are
+    # dropped: the ring holds only the trailing queries and bloats the file.
+    from repro.runtime import telemetry as tel
+    rows.append({"variant": "telemetry",
+                 "snapshot": tel.snapshot(include_spans=False)})
     if out_path is not None:
         out_path.write_text(json.dumps(rows, indent=2) + "\n")
         print(f"ingest benchmark -> {out_path}")

@@ -33,12 +33,14 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import weakref
 from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.table import ColumnMeta, Table
+from repro.runtime import telemetry as tel
 
 # Engine-internal per-row columns that must never surface in query envs,
 # schemas, or statistics: the padding/validity mask and the anti-matter
@@ -174,6 +176,23 @@ class Manifest:
         return (self.base,) + tuple(self.runs)
 
 
+def component_nbytes(ds: Dataset) -> int:
+    """Device bytes one LSM component holds resident: table columns, index
+    payloads, and the sorted anti-key array. Metadata-only (sums ``nbytes``
+    over the arrays — no device work), so the GC-visibility sweep can run on
+    every publish/release."""
+    total = 0
+    for col in ds.table.columns.values():
+        total += int(getattr(col, "nbytes", 0) or 0)
+    if ds.anti_keys_arr is not None:
+        total += int(getattr(ds.anti_keys_arr, "nbytes", 0) or 0)
+    for ix in ds.indexes.values():
+        for arr in (ix.sorted_keys, ix.row_ids, ix.zone_min, ix.zone_max):
+            if arr is not None:
+                total += int(getattr(arr, "nbytes", 0) or 0)
+    return total
+
+
 def _resolve_run(manifest: Manifest, dataverse: str, base_name: str,
                  comp: str) -> Dataset:
     """Resolve a stable-id component address suffix ("run<uid>") against one
@@ -240,6 +259,10 @@ class Snapshot:
         with self._catalog._lock:
             for m in self._manifests.values():
                 m.pins -= 1
+        # refresh the GC-visibility gauges only when something is actually
+        # retired — the common query path (nothing to reclaim) stays free
+        if self._catalog._retired:
+            self._catalog.gc_stats()
 
     def __enter__(self) -> "Snapshot":
         return self
@@ -266,6 +289,15 @@ class Catalog:
         # so no query ever blocks on a running compaction.
         self._lock = threading.RLock()
         self._run_uids: dict[tuple[str, str], int] = {}
+        # Retired manifests still alive (weakly held): a retired-but-pinned
+        # manifest keeps superseded components device-resident for exactly
+        # its readers — the GC-visibility sweep (gc_stats) walks this set to
+        # report how many bytes long-lived snapshots are retaining. Weak
+        # references on purpose: once the last snapshot releases, the
+        # manifest (and its exclusive components) free normally and the
+        # series drops back to zero — tracking must not itself retain.
+        self._retired: "weakref.WeakValueDictionary[int, Manifest]" = \
+            weakref.WeakValueDictionary()
 
     @property
     def lock(self) -> threading.RLock:
@@ -310,7 +342,12 @@ class Catalog:
             self._datasets[key] = base
             if old_manifest is not None and old_manifest is not m:
                 old_manifest.retired = True
+                self._retired[id(old_manifest)] = old_manifest
             self.bump_stats_epoch()
+            tel.inc("catalog.publishes_total")
+            if old_manifest is not None and old_manifest is not m:
+                tel.inc("catalog.manifests_retired_total")
+            self.gc_stats()
             return m
 
     def manifest(self, dataverse: str, name: str) -> Manifest:
@@ -350,7 +387,47 @@ class Catalog:
             if ds is not None:
                 if ds.manifest is not None:
                     ds.manifest.retired = True
+                    self._retired[id(ds.manifest)] = ds.manifest
+                    tel.inc("catalog.manifests_retired_total")
                 self.bump_stats_epoch()
+                self.gc_stats()
+
+    def gc_stats(self) -> dict:
+        """The PR 6 GC-visibility follow-up, measured: walk the still-alive
+        retired manifests and report what they retain — manifest counts
+        (pinned vs merely awaiting collection) and the device bytes of
+        components reachable ONLY through them (a component also present in
+        a current manifest is not leaked, it is just shared). Updates the
+        ``catalog.*`` gauges; called on every publish/drop/snapshot-release
+        and callable directly."""
+        with self._lock:
+            current: set[int] = set()
+            pinned_current = 0
+            for ds in self._datasets.values():
+                if ds.manifest is None:
+                    continue
+                if ds.manifest.pins > 0:
+                    pinned_current += 1
+                for comp in ds.manifest.components:
+                    current.add(id(comp))
+            retired = retired_pinned = 0
+            leaked: dict[int, Dataset] = {}
+            for m in list(self._retired.values()):
+                retired += 1
+                if m.pins > 0:
+                    retired_pinned += 1
+                for comp in m.components:
+                    if id(comp) not in current:
+                        leaked[id(comp)] = comp
+            retained = sum(component_nbytes(c) for c in leaked.values())
+        out = {"manifests_retired": retired,
+               "manifests_retired_pinned": retired_pinned,
+               "manifests_pinned": pinned_current + retired_pinned,
+               "retired_components": len(leaked),
+               "retired_component_bytes": retained}
+        for k, v in out.items():
+            tel.set_gauge(f"catalog.{k}", v)
+        return out
 
     def names(self) -> list[str]:
         return [f"{dv}.{n}" for dv, n in self._datasets]

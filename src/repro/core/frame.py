@@ -194,11 +194,19 @@ class AFrame:
         from repro.core.dialect import render
         return render(self._plan, dialect)
 
-    def explain(self) -> str:
+    def explain(self, analyze: bool = False) -> str:
         """The costed physical plan: per-operator cost estimates, the access
         path the planner chose over its alternatives, and — over a fed
-        dataset — which LSM runs the zone maps pruned and why."""
-        return self._session.explain(self._plan)
+        dataset — which LSM runs the zone maps pruned and why.
+
+        ``analyze=True`` executes the query and adds measured per-operator
+        wall time + actual rows beside the estimates (``Session.profile``)."""
+        return self._session.explain(self._plan, analyze=analyze)
+
+    def profile(self) -> dict:
+        """Execute with per-operator measurement: returns ``{"text",
+        "result", "measures", "prune_report"}``."""
+        return self._session.profile(self._plan)
 
     def _project_plan(self, outputs) -> P.Plan:
         return P.Project(self._plan, outputs)

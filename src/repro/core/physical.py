@@ -66,6 +66,11 @@ class PhysOp:
     rows_touched: float = 0.0
     cost: float = 0.0
     note: str = ""
+    # Write-stall early warning (set by the planner's read-amp charge):
+    # component probes / write-stall component cap, and whether it crossed
+    # the warn fraction. 0.0 everywhere on un-fed plans.
+    stall_pressure: float = 0.0
+    stall_imminent: bool = False
 
     def exprs(self) -> list[Expr]:
         return []
@@ -658,10 +663,20 @@ class PointLookup(PhysOp):
 # -- explain rendering --------------------------------------------------------
 
 
-def format_plan(root: PhysOp) -> str:
+def _fmt_ms(seconds: float) -> str:
+    return f"{seconds * 1e3:.2f}ms"
+
+
+def format_plan(root: PhysOp, analyze: Optional[dict] = None) -> str:
     """The ``explain()`` rendering: one line per operator with cost
     estimates, nested tree structure, planner rationale, and a pruning line
-    per excluded LSM run."""
+    per excluded LSM run.
+
+    With ``analyze`` (the per-node measurement dict ``profile_physical``
+    returns, keyed by ``id(node)``), each operator line also shows the
+    *measured* self/total wall time and the actual row count beside the
+    estimates — estimate-vs-actual drift on one line."""
+    measures = (analyze or {}).get("nodes", {})
     lines: list[str] = []
 
     def emit(node: PhysOp, prefix: str, is_last: bool, is_root: bool):
@@ -669,6 +684,11 @@ def format_plan(root: PhysOp) -> str:
         meta = f"cost={node.cost:,.0f} rows≈{node.est_rows:,.0f}"
         if node.rows_touched and node.rows_touched != node.est_rows:
             meta += f" touched={node.rows_touched:,.0f}"
+        m = measures.get(id(node))
+        if m is not None:
+            meta += (f" | self={_fmt_ms(m['self_seconds'])} "
+                     f"total={_fmt_ms(m['total_seconds'])} "
+                     f"rows={m['rows']:,}")
         lines.append(f"{prefix}{branch}{node.label()}  [{meta}]")
         child_prefix = prefix if is_root else prefix + ("   " if is_last else "│  ")
         if node.note:
@@ -685,6 +705,14 @@ def format_plan(root: PhysOp) -> str:
 
     emit(root, "", True, True)
     lines.append(f"total estimated cost: {root.total_cost():,.0f}")
+    if analyze is not None:
+        rm = measures.get(id(root))
+        if rm is not None:
+            lines.append(f"measured wall time (per-operator, unjitted): "
+                         f"{_fmt_ms(rm['total_seconds'])}")
+        if analyze.get("jit_seconds") is not None:
+            lines.append(f"jitted end-to-end: "
+                         f"{_fmt_ms(analyze['jit_seconds'])}")
     return "\n".join(lines)
 
 
@@ -696,9 +724,15 @@ def prune_report(root: PhysOp) -> dict:
     rows_pruned = tombstones_retained = 0
     blocks_total = blocks_scanned = 0
     compaction_recommended = False
+    stall_pressure = 0.0
+    stall_imminent = False
     for node in walk(root):
         if getattr(node, "compaction_recommended", False):
             compaction_recommended = True
+        stall_pressure = max(stall_pressure,
+                             getattr(node, "stall_pressure", 0.0))
+        if getattr(node, "stall_imminent", False):
+            stall_imminent = True
         bt = getattr(node, "blocks_total", 0)
         if bt:
             blocks_total += bt
@@ -718,4 +752,6 @@ def prune_report(root: PhysOp) -> dict:
             "blocks_total": blocks_total, "blocks_scanned": blocks_scanned,
             "blocks_skipped": blocks_total - blocks_scanned,
             "compaction_recommended": compaction_recommended,
+            "stall_pressure": stall_pressure,
+            "stall_imminent": stall_imminent,
             "total_cost": root.total_cost()}

@@ -51,6 +51,7 @@ from repro.core.expr import Col, Compare, Expr, Lit
 from repro.core.optimizer import (_RANGE_MAX, _RANGE_MIN, _range_bounds,
                                   _split_conjuncts)
 from repro.core.stats import ColumnStats, TableStats, harvest
+from repro.runtime import telemetry as tel
 
 # -- cost model --------------------------------------------------------------
 # Units: ~relative per-row work of a generic masked scan. The absolute scale
@@ -76,6 +77,14 @@ _F32_EXACT = 1 << 24   # ints in [-2^24, 2^24] are exact in float32
 # exceeds what one compaction would amortize — explain() says so.
 READ_AMP_COMPONENTS = 6        # components probed per query
 READ_AMP_TOMBSTONE_FRAC = 0.25  # tombstones / visible rows
+
+# Write-stall early warning: the ingest path hard-stalls writers at
+# ~2× max_runs resident components (Feed.stall_runs). The planner sees the
+# same component count through its probe charge, so it can warn *before*
+# the cap: stall pressure = components probed / STALL_COMPONENT_CAP, with a
+# note once pressure crosses STALL_WARN_FRAC.
+STALL_COMPONENT_CAP = 2 * READ_AMP_COMPONENTS
+STALL_WARN_FRAC = 0.75
 
 
 def _conjunct_selectivity(c: Expr, stats: TableStats) -> float:
@@ -723,6 +732,8 @@ def _charge_read_amp(ctx: _PlannerCtx, out: PH.PhysOp, kids: list) -> None:
         visible += st.rows
     tombstones += sum(p.tombstones for p in getattr(out, "pruned", ()))
     out.cost += probes * C_PROBE
+    out.stall_pressure = probes / STALL_COMPONENT_CAP
+    tel.set_gauge("planner.stall_pressure", out.stall_pressure)
     amp = probes > READ_AMP_COMPONENTS or (
         visible > 0 and tombstones / visible > READ_AMP_TOMBSTONE_FRAC)
     if amp:
@@ -730,6 +741,12 @@ def _charge_read_amp(ctx: _PlannerCtx, out: PH.PhysOp, kids: list) -> None:
         note = (f"read amplification: {probes} component probe(s), "
                 f"{tombstones} tombstone(s) subtract per query — "
                 f"compaction recommended")
+        out.note = (out.note + " — " if out.note else "") + note
+    if out.stall_pressure >= STALL_WARN_FRAC:
+        out.stall_imminent = True
+        note = (f"stall imminent: {probes}/{STALL_COMPONENT_CAP} components "
+                f"toward the write-stall cap "
+                f"(pressure {out.stall_pressure:.2f})")
         out.note = (out.note + " — " if out.note else "") + note
 
 

@@ -28,12 +28,14 @@ never a rewrite.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import numpy as np
 
 from repro.engine import lsm
 from repro.engine.table import Table
+from repro.runtime import telemetry as tel
 
 
 class Feed:
@@ -133,6 +135,8 @@ class Feed:
         may then fold components."""
         if not self._buffer:
             return
+        t0 = time.perf_counter()
+        ds_label = f"{self.dataverse}.{self.dataset}"
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         key_col = ds.primary_index.column if ds.primary_index is not None else None
         # the buffer is the flush's write-ahead state: it is dropped only
@@ -155,6 +159,20 @@ class Feed:
         self._refresh_run_stats()
         if anti_keys is not None:  # post-normalization: actually flushed
             self.stats["tombstones_flushed"] += len(anti_keys)
+        tel.inc("ingest.flushes_total", dataset=ds_label)
+        tel.inc("ingest.flushed_rows_total", run.num_live_rows,
+                dataset=ds_label)
+        if anti_keys is not None:
+            tel.inc("ingest.flushed_tombstones_total", len(anti_keys),
+                    dataset=ds_label)
+        tel.observe("ingest.flush_seconds", time.perf_counter() - t0,
+                    dataset=ds_label)
+        tel.set_gauge("ingest.resident_runs", self.stats["runs"],
+                      dataset=ds_label)
+        # Gauge (not histogram) so the write-stall series is populated —
+        # and monotone — even on runs where no stall occurred.
+        tel.set_gauge("ingest.stall_seconds_total", self.stats["stall_s"],
+                      dataset=ds_label)
         self._apply_policy()
 
     def drop_buffer(self) -> None:
@@ -188,6 +206,12 @@ class Feed:
                     self.stall_timeout_s)
                 self.stats["stalls"] += 1
                 self.stats["stall_s"] += waited
+                ds_label = f"{self.dataverse}.{self.dataset}"
+                tel.inc("ingest.write_stalls_total", dataset=ds_label)
+                tel.observe("ingest.write_stall_seconds", waited,
+                            dataset=ds_label)
+                tel.set_gauge("ingest.stall_seconds_total",
+                              self.stats["stall_s"], dataset=ds_label)
                 self._refresh_run_stats()
             return
         for _ in range(16):

@@ -51,6 +51,7 @@ import numpy as np
 from repro.core import plan as P
 from repro.core.catalog import INTERNAL_COLUMNS, Dataset, Manifest, open_widen
 from repro.engine.table import ColumnMeta, Table, pad_to_block
+from repro.runtime import telemetry as tel
 from repro.runtime.fault import StorageFault
 
 RUN_BLOCK = 1024      # runs are padded to this row multiple
@@ -168,6 +169,7 @@ def make_run(session, base: Dataset, table: Table,
     probes search. Column stats/zone spans are harvested from matter only."""
     from repro.engine.session import _collect_stats
 
+    t0 = time.perf_counter()
     live = table.num_rows
     table = _collect_stats(table)
     if not base.closed:
@@ -219,6 +221,11 @@ def make_run(session, base: Dataset, table: Table,
         if ix.kind == "secondary":
             run.indexes[f"ix_{ix.column}"] = session._build_index(
                 table, ix.column, "secondary")
+    ds_label = f"{base.dataverse}.{base.name}"
+    tel.inc("lsm.runs_built_total", dataset=ds_label)
+    tel.observe("lsm.run_build_seconds", time.perf_counter() - t0,
+                dataset=ds_label)
+    tel.observe("lsm.run_build_rows", live, dataset=ds_label)
     return run
 
 
@@ -397,6 +404,8 @@ def compact(session, ds: Dataset, manifest: Optional[Manifest] = None) -> Datase
     are reconciled against the fresh base at swap time."""
     cat = session.catalog
     dv, name = ds.dataverse, ds.name
+    t0 = time.perf_counter()
+    tel.inc("lsm.compaction.attempts_total", kind="full")
     with cat.lock:
         m0 = manifest if manifest is not None else cat.manifest(dv, name)
         comps = m0.components
@@ -423,6 +432,7 @@ def compact(session, ds: Dataset, manifest: Optional[Manifest] = None) -> Datase
         cur = cat.manifest(dv, name)
         if cur.base is not m0.base \
                 or tuple(cur.runs[:len(m0.runs)]) != tuple(m0.runs):
+            tel.inc("lsm.compaction.conflicts_total", kind="full")
             raise ManifestConflict(
                 f"{dv}.{name}: component set changed under a full "
                 f"compaction (planned at lsn {m0.lsn}, now {cur.lsn})")
@@ -435,6 +445,9 @@ def compact(session, ds: Dataset, manifest: Optional[Manifest] = None) -> Datase
         for r in newer:
             if r.anti_rows:
                 _annihilate_older((new_base,), r, gather=False)
+    tel.inc("lsm.compactions_total", kind="full")
+    tel.observe("lsm.compaction_seconds", time.perf_counter() - t0,
+                kind="full")
     return new_base
 
 
@@ -457,6 +470,8 @@ def merge_runs(session, ds: Dataset, start: int, end: int, level: int,
     the merged run at swap time."""
     cat = session.catalog
     dv, name = ds.dataverse, ds.name
+    t0 = time.perf_counter()
+    tel.inc("lsm.compaction.attempts_total", kind="level")
     with cat.lock:
         m0 = manifest if manifest is not None else cat.manifest(dv, name)
         members = tuple(m0.runs[start:end])
@@ -477,6 +492,7 @@ def merge_runs(session, ds: Dataset, start: int, end: int, level: int,
     with cat.lock:
         cur = cat.manifest(dv, name)
         if cur.base is not m0.base:
+            tel.inc("lsm.compaction.conflicts_total", kind="level")
             raise ManifestConflict(
                 f"{dv}.{name}: base swapped under a level merge "
                 f"(planned at lsn {m0.lsn}, now {cur.lsn})")
@@ -485,6 +501,7 @@ def merge_runs(session, ds: Dataset, start: int, end: int, level: int,
         except ValueError:
             s = -1
         if s < 0 or tuple(cur.runs[s:s + len(members)]) != members:
+            tel.inc("lsm.compaction.conflicts_total", kind="level")
             raise ManifestConflict(
                 f"{dv}.{name}: merged run segment no longer contiguous "
                 f"(planned at lsn {m0.lsn}, now {cur.lsn})")
@@ -498,6 +515,9 @@ def merge_runs(session, ds: Dataset, start: int, end: int, level: int,
         _fault(session, "pre-swap")
         cat.publish(dv, name, cur.base, cur.runs[:s] + (run,) + tail)
         _fault(session, "post-swap")
+    tel.inc("lsm.compactions_total", kind="level")
+    tel.observe("lsm.compaction_seconds", time.perf_counter() - t0,
+                kind="level")
     return run
 
 
@@ -537,6 +557,8 @@ class BackgroundCompactor:
         self.backoff_s = backoff_s
         self.stats = {"level_merges": 0, "compactions": 0, "conflicts": 0,
                       "retries": 0, "faults": 0, "giveups": 0, "errors": 0}
+        for k in self.stats:  # seed the mirrored registry series
+            tel.inc(f"lsm.compactor.{k}_total", 0)
         self._cv = threading.Condition()
         self._pending: set[tuple[str, str]] = set()
         self._inflight = 0
@@ -634,32 +656,38 @@ class BackgroundCompactor:
             try:
                 if act[0] == "full":
                     compact(self.session, base, manifest=m)
-                    self.stats["compactions"] += 1
+                    self._bump("compactions")
                 else:
                     _, s, e, level = act
                     merge_runs(self.session, base, s, e, level, manifest=m)
-                    self.stats["level_merges"] += 1
+                    self._bump("level_merges")
                 failures = 0
                 delay = self.backoff_s
             except ManifestConflict:
-                self.stats["conflicts"] += 1
+                self._bump("conflicts")
                 failures += 1
             except StorageFault:
-                self.stats["faults"] += 1
+                self._bump("faults")
                 failures += 1
             except Exception:  # pragma: no cover - defensive: keep serving
-                self.stats["errors"] += 1
+                self._bump("errors")
                 return
             finally:
                 with self._cv:
                     self._cv.notify_all()  # progress signal for stalled writers
             if failures:
                 if failures > self.max_retries:
-                    self.stats["giveups"] += 1
+                    self._bump("giveups")
                     return  # dataset stays serveable, just under-compacted
-                self.stats["retries"] += 1
+                self._bump("retries")
                 time.sleep(delay)
                 delay *= 2
+
+    def _bump(self, key: str) -> None:
+        """One compactor event: the local dict (the back-compat ``stats``
+        surface tests read) and its registry mirror move together."""
+        self.stats[key] += 1
+        tel.inc(f"lsm.compactor.{key}_total")
 
 
 # -- crash recovery: rebuild soft state from hard state -----------------------

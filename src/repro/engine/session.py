@@ -6,7 +6,9 @@ expression time, paper §IV-D).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
+from collections.abc import Mapping
 from typing import Optional, Sequence
 
 import jax
@@ -21,6 +23,7 @@ from repro.core.compiler import (CompiledQuery, ExecContext, compile_physical,
 from repro.core.optimizer import optimize
 from repro.core.physical_planner import build_pruner, plan_physical
 from repro.engine.table import Table
+from repro.runtime import telemetry as tel
 
 try:
     from jax import shard_map as _shard_map
@@ -28,6 +31,86 @@ except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from jax.sharding import PartitionSpec as PS
+
+
+# Monotone per-process session ids: the `sid` label that keeps each
+# session's series separate inside the process-wide registry.
+_SESSION_IDS = itertools.count()
+
+
+class _StatsView(Mapping):
+    """``Session.stats`` as a read-only view over the telemetry registry.
+
+    Same keys and values as the old seeded dict (``dict(sess.stats)`` and
+    ``sess.stats["hits"]`` behave identically), but the counters live in ONE
+    place — the registry — instead of being double-booked. ``hits`` sums the
+    variant- and executable-level plan-cache hits (the two sites the old
+    counter incremented at); entry-level hits are a separate, new series.
+    ``point_lookups`` is seeded like every other key — the old dict left it
+    unseeded and read it with ``.get``."""
+
+    _KEYS = ("compiles", "hits", "optimizes", "plans",
+             "pruned_components", "point_lookups")
+
+    def __init__(self, sid: str):
+        self._sid = sid
+
+    def _value(self, key: str):
+        if key == "hits":
+            return (tel.counter_value("session.plan_cache.hits_total",
+                                      level="variant", sid=self._sid)
+                    + tel.counter_value("session.plan_cache.hits_total",
+                                        level="executable", sid=self._sid))
+        return tel.counter_value(f"session.{key}_total", sid=self._sid)
+
+    def __getitem__(self, key: str):
+        if key not in self._KEYS:
+            raise KeyError(key)
+        return self._value(key)
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self) -> int:
+        return len(self._KEYS)
+
+    def __repr__(self) -> str:
+        return repr({k: self._value(k) for k in self._KEYS})
+
+
+class _TimingsView(Mapping):
+    """``Session.timings`` as a read-only view over the registry's last-*
+    gauges. Fixed key set — the old dict grew one ``create:<dv>.<name>``
+    key per dataset forever; per-dataset timing now lives in the
+    ``session.create_dataset_seconds`` histogram series instead."""
+
+    _GAUGES = {
+        "last_execute": "session.last_execute_seconds",
+        "last_point_lookup": "session.last_point_lookup_seconds",
+        "last_create": "session.last_create_seconds",
+        "last_view_recompute": "session.last_view_recompute_seconds",
+    }
+
+    def __init__(self, sid: str):
+        self._sid = sid
+
+    def __getitem__(self, key: str):
+        name = self._GAUGES.get(key)
+        v = tel.gauge_value(name, sid=self._sid) if name else None
+        if v is None:
+            raise KeyError(key)
+        return v
+
+    def __iter__(self):
+        for key, name in self._GAUGES.items():
+            if tel.gauge_value(name, sid=self._sid) is not None:
+                yield key
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
+
+    def __repr__(self) -> str:
+        return repr({k: self[k] for k in self})
 
 
 @dataclasses.dataclass
@@ -121,9 +204,19 @@ class Session:
         # against a changed catalog — a dropped run is unreachable.
         self._plans: dict[str, _PlanEntry] = {}
         self._compiled: dict[tuple, CompiledQuery] = {}
-        self.timings: dict[str, float] = {}
-        self.stats = {"compiles": 0, "hits": 0, "optimizes": 0,
-                      "plans": 0, "pruned_components": 0}
+        # stats/timings are back-compat VIEWS over the registry, keyed by
+        # this session's `sid` label. Counters are seeded here so every
+        # series exists (and reads 0) before the first query.
+        self.sid = str(next(_SESSION_IDS))
+        for key in _StatsView._KEYS:
+            if key == "hits":
+                for level in ("entry", "variant", "executable"):
+                    tel.inc("session.plan_cache.hits_total", 0,
+                            level=level, sid=self.sid)
+            else:
+                tel.inc(f"session.{key}_total", 0, sid=self.sid)
+        self.stats = _StatsView(self.sid)
+        self.timings = _TimingsView(self.sid)
         # incrementally-maintained materialized views (engine/lsm.py),
         # refreshed from each feed flush's delta batch.
         self.views: dict[str, "object"] = {}
@@ -138,12 +231,15 @@ class Session:
         ``primary`` sorts the stored table by that column (clustered);
         ``indexes`` build secondary sorted indexes per shard."""
         t0 = time.perf_counter()
-        ds = self._build_dataset(name, table, dataverse=dataverse,
-                                 closed=closed, indexes=indexes,
-                                 primary=primary)
-        self.catalog.register(ds)
-        self._invalidate_plans()
-        self.timings[f"create:{dataverse}.{name}"] = time.perf_counter() - t0
+        with tel.span("session.create_dataset", sid=self.sid,
+                      dataset=f"{dataverse}.{name}"):
+            ds = self._build_dataset(name, table, dataverse=dataverse,
+                                     closed=closed, indexes=indexes,
+                                     primary=primary)
+            self.catalog.register(ds)
+            self._invalidate_plans()
+        tel.set_gauge("session.last_create_seconds",
+                      time.perf_counter() - t0, sid=self.sid)
         return ds
 
     def _build_dataset(self, name: str, table: Table, dataverse: str = "Default",
@@ -274,6 +370,9 @@ class Session:
         def recompute(op: str, column: str, group_keys: np.ndarray) -> np.ndarray:
             import jax.numpy as jnp
 
+            t0 = time.perf_counter()
+            tel.inc("session.view_recomputes_total", sid=self.sid,
+                    view=getattr(view, "name", "?"))
             with self.catalog.snapshot() as snap:
                 comps = snap.components(view.dataverse, view.dataset)
                 ds = comps[0]
@@ -305,6 +404,10 @@ class Session:
                 if h > l:
                     sel = vs[l:h]
                     out[i] = sel.max() if op == "max" else sel.min()
+            dt = time.perf_counter() - t0
+            tel.observe("session.view_recompute_seconds", dt, sid=self.sid)
+            tel.set_gauge("session.last_view_recompute_seconds", dt,
+                          sid=self.sid)
             return out
 
         return recompute
@@ -383,8 +486,10 @@ class Session:
         self.last_physical = node
         from repro.core.physical import prune_report
         self.last_prune_report = prune_report(node)
-        self.timings["last_point_lookup"] = time.perf_counter() - t0
-        self.stats["point_lookups"] = self.stats.get("point_lookups", 0) + 1
+        dt = time.perf_counter() - t0
+        tel.inc("session.point_lookups_total", sid=self.sid)
+        tel.observe("session.point_lookup_seconds", dt, sid=self.sid)
+        tel.set_gauge("session.last_point_lookup_seconds", dt, sid=self.sid)
         return result
 
     def explain_lookup(self, dataverse: str, dataset: str, key) -> str:
@@ -416,9 +521,10 @@ class Session:
         return self.enable_block_skip and single_shard(self.mesh)
 
     def _optimize(self, plan: P.Plan, catalog) -> P.Plan:
-        self.stats["optimizes"] += 1
-        return optimize(plan, catalog,
-                        enable_pushdown=self.enable_pushdown)
+        tel.inc("session.optimizes_total", sid=self.sid)
+        with tel.span("session.optimize", sid=self.sid):
+            return optimize(plan, catalog,
+                            enable_pushdown=self.enable_pushdown)
 
     def _plan_entry(self, plan: P.Plan, raw_fp: str, raw_lits: list,
                     snap) -> _PlanEntry:
@@ -427,13 +533,19 @@ class Session:
         pinned snapshot."""
         e = self._plans.get(raw_fp)
         if e is not None and (e.epoch, e.lsn) == (snap.stats_epoch, snap.lsn):
+            tel.inc("session.plan_cache.hits_total", level="entry",
+                    sid=self.sid)
             return e
+        tel.inc("session.plan_cache.misses_total", level="entry",
+                sid=self.sid)
         if e is not None:  # stale epoch/LSN: sweep dead executables with it
             self._compiled = {k: v for k, v in self._compiled.items()
                               if k[1:] == (snap.stats_epoch, snap.lsn)}
         opt = self._optimize(plan, snap)
+        with tel.span("session.prune_build", sid=self.sid):
+            pruner = build_pruner(opt, snap, raw_lits)
         e = _PlanEntry(snap.stats_epoch, snap.lsn, opt, opt.fingerprint(),
-                       list(raw_lits), build_pruner(opt, snap, raw_lits))
+                       list(raw_lits), pruner)
         self._plans[raw_fp] = e
         return e
 
@@ -445,25 +557,32 @@ class Session:
         from repro.core.expr import ordered_lits
         from repro.core.physical_planner import NO_PRUNE
 
-        decisions = e.pruner.decide([l.value for l in raw_lits],
-                                    block_skip=self._block_skip()) \
-            if self.enable_prune else NO_PRUNE
+        with tel.span("session.prune", sid=self.sid):
+            decisions = e.pruner.decide([l.value for l in raw_lits],
+                                        block_skip=self._block_skip()) \
+                if self.enable_prune else NO_PRUNE
         var = e.variants.get(decisions.signature)
         if var is not None:
-            self.stats["hits"] += 1
+            tel.inc("session.plan_cache.hits_total", level="variant",
+                    sid=self.sid)
             return var
-        phys = plan_physical(e.opt, snap, mode=self.mode,
-                             decisions=decisions,
-                             enable_index=self.enable_index)
-        self.stats["plans"] += 1
+        tel.inc("session.plan_cache.misses_total", level="variant",
+                sid=self.sid)
+        with tel.span("session.plan", sid=self.sid):
+            phys = plan_physical(e.opt, snap, mode=self.mode,
+                                 decisions=decisions,
+                                 enable_index=self.enable_index)
+        tel.inc("session.plans_total", sid=self.sid)
         key = (phys.fingerprint(), e.epoch, e.lsn)
         cq = self._compiled.get(key)
         if cq is None:
-            cq = compile_physical(e.opt, phys, self.exec_context(snap))
+            with tel.span("session.compile", sid=self.sid):
+                cq = compile_physical(e.opt, phys, self.exec_context(snap))
             self._compiled[key] = cq
-            self.stats["compiles"] += 1
+            tel.inc("session.compiles_total", sid=self.sid)
         else:
-            self.stats["hits"] += 1
+            tel.inc("session.plan_cache.hits_total", level="executable",
+                    sid=self.sid)
             # reuse the executable but surface THIS binding's physical plan
             # (its pruning rationale) for explain/stats readers.
             cq = dataclasses.replace(cq, physical=phys)
@@ -501,27 +620,38 @@ class Session:
         raw_fp = plan.fingerprint()
         raw_lits = ordered_lits(P.all_exprs(plan))
         with self.catalog.snapshot() as snap:
-            e = self._plan_entry(plan, raw_fp, raw_lits, snap)
-            cq, binding = self._variant(e, raw_lits, snap)
-            params = _bind_params(binding, raw_lits)
-            out = cq.run(snap, params=params)
-            out = jax.block_until_ready(out)
-        self.timings["last_execute"] = time.perf_counter() - t0
+            with tel.span("session.execute", sid=self.sid, mode=self.mode):
+                e = self._plan_entry(plan, raw_fp, raw_lits, snap)
+                cq, binding = self._variant(e, raw_lits, snap)
+                params = _bind_params(binding, raw_lits)
+                with tel.span("session.execute.run", sid=self.sid):
+                    out = cq.run(snap, params=params)
+                    out = jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        tel.inc("session.executes_total", sid=self.sid, mode=self.mode)
+        tel.set_gauge("session.last_execute_seconds", dt, sid=self.sid)
         self.last_optimized = e.opt
         self.last_physical = cq.physical
         self.last_prune_report = prune_report(cq.physical)
-        self.stats["pruned_components"] += self.last_prune_report["pruned"]
+        tel.inc("session.pruned_components_total",
+                self.last_prune_report["pruned"], sid=self.sid)
         if cq.kind == "scalar":
             vals = {k: np.asarray(v).item() for k, v in out.items()}
             return vals if len(vals) > 1 else next(iter(vals.values()))
         env, mask = out
         return _materialize(env, mask, cq.kind)
 
-    def explain(self, plan: P.Plan) -> str:
+    def explain(self, plan: P.Plan, analyze: bool = False) -> str:
         """The costed physical plan for ``plan``, rendered with per-operator
         cost estimates and the zone-map pruning rationale — what AsterixDB's
         EXPLAIN shows for the optimized Hyracks job. Runs the optimizer and
-        planner but compiles/executes nothing."""
+        planner but compiles/executes nothing.
+
+        ``analyze=True`` additionally EXECUTES the query (``profile``) and
+        annotates every operator line with measured self/total wall time and
+        the actual row count beside the cost-model estimates."""
+        if analyze:
+            return self.profile(plan)["text"]
         from repro.core.expr import ordered_lits
         from repro.core.physical import format_plan
 
@@ -536,6 +666,47 @@ class Session:
                                  decisions=decisions or NO_PRUNE,
                                  enable_index=self.enable_index)
         return format_plan(phys)
+
+    def profile(self, plan: P.Plan) -> dict:
+        """``explain(analyze=True)``'s engine: run ``plan`` through the full
+        cached pipeline under span capture, time the jitted end-to-end run,
+        then measure every operator's subtree standalone
+        (``compiler.profile_physical``) so the rendered plan shows measured
+        wall time and actual rows beside the cost estimates.
+
+        Returns ``{"text", "result", "measures", "prune_report"}`` —
+        ``result`` is exactly what ``execute(plan)`` returns."""
+        from repro.core.compiler import profile_physical
+        from repro.core.expr import ordered_lits
+        from repro.core.physical import format_plan, prune_report
+
+        tel.inc("session.profiles_total", sid=self.sid)
+        raw_lits = ordered_lits(P.all_exprs(plan))
+        with self.catalog.snapshot() as snap:
+            with tel.span("session.profile", sid=self.sid, mode=self.mode):
+                e = self._plan_entry(plan, plan.fingerprint(), raw_lits, snap)
+                cq, binding = self._variant(e, raw_lits, snap)
+                params = _bind_params(binding, raw_lits)
+                tables = cq.gather_tables(snap)
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(cq.fn(tables, params))
+                jit_seconds = time.perf_counter() - t0
+                measures = profile_physical(cq.physical,
+                                            self.exec_context(snap),
+                                            tables, params)
+        measures["jit_seconds"] = jit_seconds
+        self.last_optimized = e.opt
+        self.last_physical = cq.physical
+        self.last_prune_report = prune_report(cq.physical)
+        if cq.kind == "scalar":
+            vals = {k: np.asarray(v).item() for k, v in out.items()}
+            result = vals if len(vals) > 1 else next(iter(vals.values()))
+        else:
+            env, mask = out
+            result = _materialize(env, mask, cq.kind)
+        return {"text": format_plan(cq.physical, analyze=measures),
+                "result": result, "measures": measures,
+                "prune_report": self.last_prune_report}
 
     def persist(self, plan: P.Plan, name: str, dataverse: str = "Default") -> Dataset:
         """CREATE DATASET AS <query> — result stays engine-resident (paper

@@ -27,6 +27,7 @@ from repro.kernels.flash_attention import flash_mha_fwd as _flash_fwd_pallas
 from repro.kernels.merge_join import merge_join_count as _merge_join
 from repro.kernels.segment_agg import segment_agg as _segment_agg
 from repro.kernels.topk_mask import topk_merge as _topk_merge
+from repro.runtime import telemetry as tel
 
 _DEFAULT_BACKEND = "xla"
 
@@ -40,8 +41,24 @@ def reset_dispatch_counts() -> None:
     DISPATCH_COUNTS.clear()
 
 
-def _tick(name: str) -> None:
+def _tick(name: str, grid: Optional[int] = None,
+          blocks_total: Optional[int] = None,
+          backend: Optional[str] = None) -> None:
+    """One tick per trace. Mirrors into the telemetry registry with the
+    launch shape: which backend (pallas/xla), interpret vs compiled, and —
+    for the block-skipping kernels — grid size vs the component's physical
+    block count (scanned/skipped in kernel-block units)."""
     DISPATCH_COUNTS[name] = DISPATCH_COUNTS.get(name, 0) + 1
+    pallas = _use_pallas(backend)
+    tel.inc("kernel.launches_total", kernel=name,
+            backend="pallas" if pallas else "xla",
+            interpret=str(pallas and _interpret()).lower())
+    if grid is not None:
+        tel.inc("kernel.grid_blocks_total", grid, kernel=name)
+        if blocks_total is not None:
+            tel.inc("kernel.blocks_scanned_total", grid, kernel=name)
+            tel.inc("kernel.blocks_skipped_total", blocks_total - grid,
+                    kernel=name)
 
 
 def set_default_backend(name: str) -> None:
@@ -86,10 +103,12 @@ def _expand_block_ids(block_ids, zone_block: int, block: int,
 def filter_count(cols, bounds, n_valid, backend: Optional[str] = None,
                  block_ids: Optional[tuple] = None,
                  interpret: Optional[bool] = None):
-    _tick("filter_count")
     from repro.kernels.filter_count import BLOCK as _FC_BLOCK
     ids = _expand_block_ids(block_ids, ZONE_BLOCK_ROWS, _FC_BLOCK,
                             cols.shape[1])
+    nb = -(-cols.shape[1] // _FC_BLOCK)
+    _tick("filter_count", grid=len(ids) if ids is not None else nb,
+          blocks_total=nb, backend=backend)
     if _use_pallas(backend):
         return _filter_count(cols, bounds, n_valid, block_ids=ids,
                              interpret=_interpret() if interpret is None
@@ -102,10 +121,12 @@ def segment_agg(values, gids, num_groups, n_valid, op: str = "sum",
                 backend: Optional[str] = None,
                 block_ids: Optional[tuple] = None,
                 interpret: Optional[bool] = None):
-    _tick("segment_agg")
     from repro.kernels.segment_agg import BLOCK as _SA_BLOCK
     ids = _expand_block_ids(block_ids, ZONE_BLOCK_ROWS, _SA_BLOCK,
                             values.shape[0])
+    nb = -(-values.shape[0] // _SA_BLOCK)
+    _tick("segment_agg", grid=len(ids) if ids is not None else nb,
+          blocks_total=nb, backend=backend)
     if _use_pallas(backend):
         return _segment_agg(values, gids, num_groups, n_valid, op=op,
                             block_ids=ids,
@@ -131,7 +152,7 @@ def merge_join_count(lkeys, rkeys, nl, nr, backend: Optional[str] = None):
     nl/nr, +inf-style sentinel padding after). The XLA twin exploits the same
     sortedness contract via binary search — ref.merge_join_count's O(nl·nr)
     compare matrix is a test oracle, not an execution path."""
-    _tick("merge_join_count")
+    _tick("merge_join_count", backend=backend)
     if _use_pallas(backend):
         return _merge_join(lkeys, rkeys, nl, nr, interpret=_interpret())
     lo = jnp.searchsorted(rkeys, lkeys, side="left")
@@ -143,7 +164,7 @@ def merge_join_count(lkeys, rkeys, nl, nr, backend: Optional[str] = None):
 def topk(scores, mask, n_valid, k, backend: Optional[str] = None):
     """Masked top-k over the valid prefix: (values (k,), global indices (k,));
     identical tie-breaking (lowest index first) on both backends."""
-    _tick("topk")
+    _tick("topk", backend=backend)
     if _use_pallas(backend):
         return _topk_merge(scores, mask, n_valid, k, interpret=_interpret())
     live = mask & (jnp.arange(scores.shape[0]) < n_valid)

@@ -26,11 +26,11 @@ def _normalize(text: str) -> str:
     return text
 
 
-def _mutated_fed_session():
+def _mutated_fed_session(mode: str = "gspmd"):
     """Deterministic scenario: base keys 0..1999, run0 appends 2000..2999,
     run1 deletes {100, 150} and appends 3000..3499. A count over k ∈ [0,200]
     prunes both runs' matter — but run1's tombstones must be retained."""
-    sess = Session()
+    sess = Session(mode=mode)
     n = 2000
     k = np.arange(n, dtype=np.int32)
     sess.create_dataset("Events", Table({"k": k, "v": (k * 2).astype(np.int32)}),
@@ -113,3 +113,82 @@ def test_explain_no_mutation_no_subtraction_notes():
     text = sess.explain(plan)
     assert "anti-matter" not in text and "ShadowProbeCount" not in text
     assert "PRUNED" in text  # the appended run still prunes
+
+
+# -- explain(analyze=True) ----------------------------------------------------
+
+
+def _normalize_analyze(text: str) -> str:
+    """Pin structure and actual-row counts; scrub every measured time."""
+    text = re.sub(r"self=\d+\.\d\dms", "self=#", text)
+    text = re.sub(r"total=\d+\.\d\dms", "total=#", text)
+    text = re.sub(r"cost=[\d,]+ rows≈[\d,]+( touched=[\d,]+)?", "cost", text)
+    text = re.sub(r"cost=[\d,]+", "cost=#", text)
+    text = re.sub(r"total estimated cost: [\d,]+", "total estimated cost: #",
+                  text)
+    text = re.sub(r"measured wall time \(per-operator, unjitted\): "
+                  r"\d+\.\d\dms", "measured wall time: #", text)
+    text = re.sub(r"jitted end-to-end: \d+\.\d\dms", "jitted end-to-end: #",
+                  text)
+    return text
+
+
+GOLDEN_ANALYZE_TABLE = """\
+UnionRuns [1 components, 2 pruned]  [cost | self=# total=# rows=199]
+· zone maps pruned 2/3 components (1,500 rows skipped)
+├─ IndexProbe g.Events (k ∈ [?, ?]) ⊖ anti-matter of 1 newer component(s)  [cost | self=# total=# rows=199]
+│  · index primary:k bounds the stream — 2 newer tombstone(s) subtract from the mask
+├─ ✂ g.Events@run0 PRUNED: zone span k∈[2000, 2999] misses predicate [-∞, 200] (1000 rows skipped)
+└─ ✂ g.Events@run1 PRUNED: zone span k∈[3000, 3499] misses predicate [-∞, 200] (500 rows skipped); 2 anti-matter record(s) RETAINED — they still subtract from older components
+total estimated cost: #
+measured wall time: #
+jitted end-to-end: #"""
+
+
+def test_explain_analyze_golden_table():
+    """Golden analyze rendering: stable fields survive normalization, the
+    measured row counts are exact (199 = 201 − 2 tombstoned keys), and the
+    two measured-time trailer lines are present."""
+    sess = _mutated_fed_session()
+    df = AFrame("g", "Events", session=sess)
+    text = df[(df["k"] >= 0) & (df["k"] <= 200)].explain(analyze=True)
+    assert _normalize_analyze(text) == GOLDEN_ANALYZE_TABLE
+
+
+def test_explain_analyze_all_modes():
+    """analyze=True renders measured per-operator time + actual rows beside
+    the cost estimates in all three execution modes, and the actual rows
+    match the executed result."""
+    for mode in ("gspmd", "shard_map", "kernel"):
+        sess = _mutated_fed_session(mode=mode)
+        df = AFrame("g", "Events", session=sess)
+        sel = df[(df["k"] >= 0) & (df["k"] <= 200)]
+        prof = sel.profile()
+        assert len(prof["result"]["k"]) == 199, mode
+        text = prof["text"]
+        # every operator line carries measured fields beside the estimates
+        op_lines = [l for l in text.splitlines()
+                    if "cost=" in l and "rows≈" in l]
+        assert op_lines, mode
+        for line in op_lines:
+            assert "self=" in line and "total=" in line and "rows=" in line, \
+                (mode, line)
+        assert "rows=199" in text, mode
+        assert "measured wall time" in text and "jitted end-to-end" in text
+        # scalar path too: count under analyze matches execution
+        plan = P.Agg(sel._plan, [P.AggSpec("count", "count", None)])
+        sprof = sess.profile(plan)
+        assert sprof["result"] == 199, mode
+        assert "rows=1" in sprof["text"], mode
+        assert sess.explain(plan, analyze=True).count("self=") >= 1
+
+
+def test_profile_result_matches_execute():
+    sess = _mutated_fed_session()
+    df = AFrame("g", "Events", session=sess)
+    sel = df[(df["k"] >= 0) & (df["k"] <= 200)]
+    prof = sel.profile()
+    executed = sess.execute(sel._plan)
+    assert set(prof["result"]) == set(executed)
+    for c in executed:
+        np.testing.assert_array_equal(prof["result"][c], executed[c])
