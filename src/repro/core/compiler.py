@@ -71,16 +71,22 @@ class LoweringStrategy:
         return physical.group_agg(env, mask, key, lo, num_groups, aggs)
 
     def kernel_group_agg(self, gid, values, num_groups, n, op,
-                         block_ids: Optional[tuple] = None):
+                         block_ids: Optional[tuple] = None,
+                         shard_blocks=None):
         from repro.kernels import ops
+        assert shard_blocks is None, \
+            "per-shard grids need the shard_map strategy"
         return ops.segment_agg(values, gid, num_groups, n, op=op,
                                backend=self.kernel_backend,
                                block_ids=block_ids,
                                interpret=self.kernel_interpret)
 
     def kernel_filter_count(self, mat, bounds,
-                            block_ids: Optional[tuple] = None):
+                            block_ids: Optional[tuple] = None,
+                            shard_blocks=None):
         from repro.kernels import ops
+        assert shard_blocks is None, \
+            "per-shard grids need the shard_map strategy"
         return ops.filter_count(mat, bounds, mat.shape[1],
                                 backend=self.kernel_backend,
                                 block_ids=block_ids,
@@ -156,20 +162,24 @@ class ShardMapStrategy(LoweringStrategy):
         return out, gmask
 
     def kernel_group_agg(self, gid, values, num_groups, n, op,
-                         block_ids: Optional[tuple] = None):
+                         block_ids: Optional[tuple] = None,
+                         shard_blocks=None):
         from repro.engine import distributed as D
         return D.dist_kernel_group_agg(self.mesh, self.data_axes, gid, values,
                                        num_groups, op=op,
                                        backend=self.kernel_backend,
                                        block_ids=block_ids,
+                                       shard_blocks=shard_blocks,
                                        interpret=self.kernel_interpret)
 
     def kernel_filter_count(self, mat, bounds,
-                            block_ids: Optional[tuple] = None):
+                            block_ids: Optional[tuple] = None,
+                            shard_blocks=None):
         from repro.engine import distributed as D
         return D.dist_kernel_filter_count(self.mesh, self.data_axes, mat,
                                           bounds, backend=self.kernel_backend,
                                           block_ids=block_ids,
+                                          shard_blocks=shard_blocks,
                                           interpret=self.kernel_interpret)
 
     def index_count(self, ix_keys, valid, lo, hi):
@@ -286,12 +296,12 @@ def compile_plan(opt_plan, ctx: ExecContext, *, enable_index: bool = True,
     raw_lits = ordered_lits(P.all_exprs(opt_plan))
     decisions = NO_PRUNE
     if enable_prune:
-        from repro.core.stats import single_shard
+        from repro.core.stats import mesh_shards
 
-        pruner = build_pruner(opt_plan, ctx.catalog, raw_lits)
-        decisions = pruner.decide(
-            [l.value for l in raw_lits],
-            block_skip=enable_block_skip and single_shard(ctx.mesh))
+        pruner = build_pruner(opt_plan, ctx.catalog, raw_lits,
+                              n_shards=mesh_shards(ctx.mesh, ctx.data_axes))
+        decisions = pruner.decide([l.value for l in raw_lits],
+                                  block_skip=enable_block_skip)
     phys = plan_physical(opt_plan, ctx.catalog, mode=ctx.mode,
                          decisions=decisions, enable_index=enable_index)
     return compile_physical(opt_plan, phys, ctx)
@@ -373,18 +383,52 @@ def _shadowed(tables: dict, keys, shadow_sources) -> "jax.Array":
     return hit
 
 
-def _block_gather(blocks: Optional[tuple], zone_block: int):
+def _block_gather(blocks: Optional[tuple], zone_block: int,
+                  n_shards: int = 1, blocks_per_shard: int = 0,
+                  rows_per_shard: int = 0, pad_multiple: int = 1):
     """Static-slice gather of the surviving row blocks (ascending ids keep
     the original row order). None = identity. Used by the generic stream
     path — the gspmd/shard_map analogue of driving the kernel grid through
-    the block-id list."""
+    the block-id list.
+
+    With ``n_shards > 1`` flat block ids address per-shard local tiles
+    (``s * blocks_per_shard + j`` = shard ``s``'s local block ``j``); the
+    slice is computed inside shard ``s``'s contiguous row chunk and a
+    trailing partial block clips at the chunk boundary, so a gather never
+    straddles shards. ``pad_multiple`` zero-pads the gathered length up to a
+    multiple (shard_map operators split rows evenly over the mesh): pad rows
+    carry a False mask (bool zero), so every mask-aware operator ignores
+    them."""
     if blocks is None:
         return lambda col: col
+    spans = []
+    for b in blocks:
+        if n_shards <= 1:
+            spans.append((b * zone_block, (b + 1) * zone_block))
+        else:
+            s, j = divmod(b, blocks_per_shard)
+            base = s * rows_per_shard
+            spans.append((base + j * zone_block,
+                          base + min((j + 1) * zone_block, rows_per_shard)))
 
     def sel(col):
-        parts = [col[b * zone_block:(b + 1) * zone_block] for b in blocks]
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        parts = [col[lo:hi] for lo, hi in spans]
+        out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        if pad_multiple > 1:
+            pad = (-out.shape[0]) % pad_multiple
+            if pad:
+                out = jnp.pad(out, [(0, pad)] + [(0, 0)] * (out.ndim - 1))
+        return out
     return sel
+
+
+def _stream_pad(ctx: ExecContext) -> int:
+    """Row-count multiple gathered streams must keep: shard_map operators
+    split their inputs evenly over the mesh's data axes."""
+    if isinstance(ctx.strategy, ShardMapStrategy):
+        from repro.core.stats import mesh_shards
+        return mesh_shards(ctx.mesh, ctx.data_axes)
+    return 1
 
 
 def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
@@ -394,7 +438,8 @@ def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
         key = f"{node.dataverse}.{node.dataset}"
         open_cast = node.open_cast
         shadow, key_col = node.shadow_sources, node.key_col
-        sel = _block_gather(node.block_ids, node.zone_block)
+        sel = _block_gather(node.block_ids, node.zone_block,
+                            *node.shard_layout(), pad_multiple=_stream_pad(ctx))
 
         def fn(tables, params):
             env, mask = _env_of(tables[key], open_cast)
@@ -410,11 +455,19 @@ def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
         key = f"{node.dataverse}.{node.dataset}"
         open_cast = node.open_cast
         shadow, key_col = node.shadow_sources, node.key_col
+        # the probe inherits its Scan site's surviving-block list: rows in
+        # skipped blocks provably fail the very conjuncts that bound the
+        # probe, so gathering first shrinks what the range mask touches.
+        sel = _block_gather(node.block_ids, node.zone_block,
+                            *node.shard_layout(), pad_multiple=_stream_pad(ctx))
 
         def fn(tables, params):
             env, mask = _env_of(tables[key], open_cast)
+            env = {k: sel(v) for k, v in env.items()}
+            mask = sel(mask)
             if shadow:
-                mask = mask & ~_shadowed(tables, tables[key][key_col], shadow)
+                mask = mask & ~_shadowed(tables, sel(tables[key][key_col]),
+                                         shadow)
             keys_col = env[node.index_col]
             lo = node.lo.evaluate(env, params) if node.lo is not None else None
             hi = node.hi.evaluate(env, params) if node.hi is not None else None
@@ -541,6 +594,24 @@ def _lower_kernel_segment_agg(node: PH.KernelSegmentAgg, ctx: ExecContext,
     (col 0 counts, cols 1.. sum the value columns)."""
     key, lo, num_groups = node.key, node.lo, node.num_groups
     comp_blocks = node.comp_blocks or tuple(None for _ in comps)
+    # resolve each component's hoisted block list ONCE at lowering time:
+    # single-shard layouts keep the static zone-block tuple (the grid bakes
+    # it in); multi-shard layouts expand to the per-shard (-1-padded)
+    # kernel-block matrix each shard's launch scalar-prefetches.
+    resolved: list[tuple] = []
+    for blk in comp_blocks:
+        if blk is None or blk[0] is None:
+            resolved.append((None, None))
+            continue
+        ids, zb = blk[0], blk[1]
+        nsh, bp, rps = (blk[2:5] if len(blk) >= 5 else (1, 0, 0))
+        if nsh > 1:
+            from repro.kernels import ops
+            from repro.kernels.segment_agg import BLOCK as _SA_BLOCK
+            resolved.append((None, ops.shard_block_arrays(
+                ids, zb, _SA_BLOCK, nsh, bp, rps)))
+        else:
+            resolved.append((ids, None))
     vcols: list[str] = []   # distinct sum-family value columns, first-use order
     xcols: dict[str, list[str]] = {"max": [], "min": []}
     for _, op, col in aggs:
@@ -549,21 +620,21 @@ def _lower_kernel_segment_agg(node: PH.KernelSegmentAgg, ctx: ExecContext,
         elif op in ("max", "min") and col not in xcols[op]:
             xcols[op].append(col)
 
-    def launch(gid, cols_f32, n, op, block_ids):
+    def launch(gid, cols_f32, n, op, block_ids, shard_blocks):
         values = jnp.stack(cols_f32, axis=1)  # (n, C)
         return ctx.strategy.kernel_group_agg(gid, values, num_groups, n, op,
-                                             block_ids=block_ids)
+                                             block_ids=block_ids,
+                                             shard_blocks=shard_blocks)
 
     def fn(tables, params):
         sums = maxs = mins = None
         key_dtype = val_dtypes = None
-        for comp, blk in zip(comps, comp_blocks):
+        for comp, (block_ids, shard_blocks) in zip(comps, resolved):
             env, mask = comp(tables, params)
-            # blk = (surviving zone-block ids, zone block size), hoisted off
-            # the component's TableScan: the stream stays full-length and the
-            # segment_agg grid itself skips pruned tiles (rows there are
-            # already masked out by the filter the list came from).
-            block_ids = blk[0] if blk is not None else None
+            # block_ids/shard_blocks were hoisted off the component's
+            # TableScan: the stream stays full-length and the segment_agg
+            # grid itself skips pruned tiles (rows there are already masked
+            # out by the filter the list came from).
             key_col = env[key]
             key_dtype = key_col.dtype
             val_dtypes = {c: env[c].dtype for _, _, c in aggs if c}
@@ -573,17 +644,17 @@ def _lower_kernel_segment_agg(node: PH.KernelSegmentAgg, ctx: ExecContext,
             n = mask.shape[0]
             tiles = [jnp.ones(mask.shape, jnp.float32)]
             tiles += [env[c].astype(jnp.float32) for c in vcols]
-            part = launch(gid, tiles, n, "sum", block_ids)
+            part = launch(gid, tiles, n, "sum", block_ids, shard_blocks)
             sums = part if sums is None else sums + part
             if xcols["max"]:
                 part = launch(gid, [env[c].astype(jnp.float32)
                                     for c in xcols["max"]], n, "max",
-                              block_ids)
+                              block_ids, shard_blocks)
                 maxs = part if maxs is None else jnp.maximum(maxs, part)
             if xcols["min"]:
                 part = launch(gid, [env[c].astype(jnp.float32)
                                     for c in xcols["min"]], n, "min",
-                              block_ids)
+                              block_ids, shard_blocks)
                 mins = part if mins is None else jnp.minimum(mins, part)
         counts = sums[:, 0].astype(jnp.int32)
         out = {key: jnp.arange(lo, lo + num_groups, dtype=key_dtype)}
@@ -698,6 +769,16 @@ def _lower_kernel_range_count(node: PH.KernelRangeCount, ctx: ExecContext) -> Ca
     cols, los, his, has_valid = node.cols, node.los, node.his, node.has_valid
     shadow, key_col = node.shadow_sources, node.key_col
     block_ids = node.block_ids
+    shard_blocks = None
+    nsh, bp, rps = node.shard_layout()
+    if block_ids is not None and nsh > 1:
+        # multi-shard layout: expand the flat zone-block survivors into the
+        # per-shard kernel-block matrix each shard scalar-prefetches.
+        from repro.kernels import ops
+        from repro.kernels.filter_count import BLOCK as _FC_BLOCK
+        shard_blocks = ops.shard_block_arrays(block_ids, node.zone_block,
+                                              _FC_BLOCK, nsh, bp, rps)
+        block_ids = None
 
     def fn(tables, params):
         t = tables[key]
@@ -716,7 +797,8 @@ def _lower_kernel_range_count(node: PH.KernelRangeCount, ctx: ExecContext) -> Ca
         mat = jnp.stack(rows)
         bounds = jnp.stack([jnp.stack(lo_vals), jnp.stack(hi_vals)], axis=1)
         cnt = ctx.strategy.kernel_filter_count(mat, bounds,
-                                               block_ids=block_ids)
+                                               block_ids=block_ids,
+                                               shard_blocks=shard_blocks)
         return {"count": cnt.astype(jnp.int32)}
     return fn
 

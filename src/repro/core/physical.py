@@ -143,23 +143,49 @@ class _BlockSkip:
     component has no block zone maps). ``blocks_scanned`` reports the blocks
     the operator actually reads — it can differ from ``len(block_ids)``
     only when a parent hoisted the list into its own kernel grid
-    (KernelSegmentAgg)."""
+    (KernelSegmentAgg).
+
+    On a sharded mesh the ids live in the per-shard layout (flat id
+    ``s * blocks_per_shard + j`` = shard ``s``'s local block ``j`` —
+    stats.BlockZones): ``n_shards``/``blocks_per_shard``/``rows_per_shard``
+    carry that layout to the lowering, which re-bases the flat list into
+    per-shard local grids/gathers. ``n_shards == 1`` is the global layout."""
 
     block_ids: Optional[tuple] = None
     zone_block: int = 0
     blocks_total: int = 0
     blocks_scanned: int = 0
+    n_shards: int = 1
+    blocks_per_shard: int = 0
+    rows_per_shard: int = 0
 
-    def set_blocks(self, block_ids, zone_block: int, total: int) -> None:
+    def set_blocks(self, block_ids, zone_block: int, total: int,
+                   n_shards: int = 1, rows_per_shard: int = 0) -> None:
         self.block_ids = tuple(block_ids) if block_ids is not None else None
         self.zone_block = int(zone_block)
         self.blocks_total = int(total)
         self.blocks_scanned = total if block_ids is None else len(block_ids)
+        self.n_shards = max(int(n_shards), 1)
+        self.blocks_per_shard = self.blocks_total // self.n_shards
+        self.rows_per_shard = int(rows_per_shard)
+
+    def shard_layout(self) -> tuple:
+        """(n_shards, blocks_per_shard, rows_per_shard) — what the lowering
+        needs to slice a flat surviving-block list per shard."""
+        return (self.n_shards, self.blocks_per_shard, self.rows_per_shard)
 
     def block_note(self) -> str:
         skipped = self.blocks_total - self.blocks_scanned
-        return (f"zone maps: {self.blocks_scanned}/{self.blocks_total} "
-                f"block(s) scanned, {skipped} skipped")
+        out = (f"zone maps: {self.blocks_scanned}/{self.blocks_total} "
+               f"block(s) scanned, {skipped} skipped")
+        if self.n_shards > 1 and self.block_ids is not None:
+            bp = max(self.blocks_per_shard, 1)
+            per = [0] * self.n_shards
+            for b in self.block_ids:
+                per[min(b // bp, self.n_shards - 1)] += 1
+            out += (f" ({self.n_shards} shards, per-shard "
+                    f"{'/'.join(map(str, per))} of {bp})")
+        return out
 
 
 # -- stream operators (produce (env, mask)) ---------------------------------
@@ -204,10 +230,15 @@ class TableScan(PhysOp, _BlockSkip):
         return out
 
 
-class IndexProbe(PhysOp):
+class IndexProbe(PhysOp, _BlockSkip):
     """Streaming access path via an indexed column's range predicate: the
     bound conjuncts become the index mask, the rest stay residual. Shadow
-    sources subtract exactly like :class:`TableScan`."""
+    sources subtract exactly like :class:`TableScan`.
+
+    With ``block_ids`` set, the lowering gathers only the surviving row
+    blocks before the probe (the same static-slice gather as TableScan) —
+    the sorted-index mask then tests a fraction of the physical rows instead
+    of streaming all of them."""
 
     def __init__(self, dataverse: str, dataset: str, index_col: str,
                  lo: Optional[Expr], hi: Optional[Expr],
@@ -233,13 +264,16 @@ class IndexProbe(PhysOp):
         res = self.residual.fingerprint() if self.residual else ""
         return (f"p:ixprobe({self.dataverse}.{self.dataset},{self.index_col},"
                 f"{lo},{hi},{res},{int(self.open_cast)},{self.key_col},"
-                f"{_shadow_fp(self.shadow_sources)})")
+                f"{_shadow_fp(self.shadow_sources)},"
+                f"blk:{_blocks_fp(self.block_ids)})")
 
     def label(self):
         bounds = f"{self.index_col} ∈ [{'-∞' if self.lo is None else '?'}, " \
                  f"{'+∞' if self.hi is None else '?'}]"
         res = " +residual" if self.residual is not None else ""
         out = f"IndexProbe {self.dataverse}.{self.dataset} ({bounds}{res})"
+        if self.blocks_total and self.blocks_scanned < self.blocks_total:
+            out += f" [blocks {self.blocks_scanned}/{self.blocks_total}]"
         if self.shadow_sources:
             out += (f" ⊖ anti-matter of {len(self.shadow_sources)} newer "
                     f"component(s)")
@@ -637,27 +671,37 @@ class PointLookup(PhysOp):
     without any subtraction arithmetic (the first component owning the key
     decides: fresh matter wins, a tombstone kills every older occurrence).
     Components whose key zone span misses the probe are skipped without a
-    search. Rendered by ``explain`` like every other physical operator."""
+    search. On a sharded mesh each probe is routed to the owning row
+    partition(s) via the per-shard key zone spans (``shards`` is the mesh's
+    partition count, ``shard_probes`` the shard windows actually searched).
+    Rendered by ``explain`` like every other physical operator."""
 
     def __init__(self, dataverse: str, dataset: str, key_col: str,
                  components: int, probed: int, skipped: int,
                  found_in: Optional[str] = None,
-                 tombstoned_by: Optional[str] = None):
+                 tombstoned_by: Optional[str] = None,
+                 shards: int = 1, shard_probes: int = 0):
         self.dataverse, self.dataset, self.key_col = dataverse, dataset, key_col
         self.components = components
         self.probed, self.skipped = probed, skipped
         self.found_in = found_in
         self.tombstoned_by = tombstoned_by
+        self.shards = shards
+        self.shard_probes = shard_probes
 
     def fingerprint(self):
         return (f"p:pointlookup({self.dataverse}.{self.dataset},"
                 f"{self.key_col})")
 
     def label(self):
-        return (f"PointLookup {self.dataverse}.{self.dataset} on "
-                f"{self.key_col} [newest-wins, {self.probed} of "
-                f"{self.components} component(s) probed, "
-                f"{self.skipped} span-skipped]")
+        out = (f"PointLookup {self.dataverse}.{self.dataset} on "
+               f"{self.key_col} [newest-wins, {self.probed} of "
+               f"{self.components} component(s) probed, "
+               f"{self.skipped} span-skipped]")
+        if self.shards > 1:
+            out += (f" [shard-routed: {self.shard_probes} of "
+                    f"{self.probed * self.shards} shard window(s) searched]")
+        return out
 
 
 # -- explain rendering --------------------------------------------------------
@@ -723,10 +767,15 @@ def prune_report(root: PhysOp) -> dict:
     components = pruned = 0
     rows_pruned = tombstones_retained = 0
     blocks_total = blocks_scanned = 0
+    shards = 1
+    shard_probes = 0
     compaction_recommended = False
     stall_pressure = 0.0
     stall_imminent = False
     for node in walk(root):
+        shards = max(shards, getattr(node, "shards", 1),
+                     getattr(node, "n_shards", 1))
+        shard_probes += getattr(node, "shard_probes", 0)
         if getattr(node, "compaction_recommended", False):
             compaction_recommended = True
         stall_pressure = max(stall_pressure,
@@ -751,6 +800,7 @@ def prune_report(root: PhysOp) -> dict:
             "tombstones_retained": tombstones_retained,
             "blocks_total": blocks_total, "blocks_scanned": blocks_scanned,
             "blocks_skipped": blocks_total - blocks_scanned,
+            "shards": shards, "shard_probes": shard_probes,
             "compaction_recommended": compaction_recommended,
             "stall_pressure": stall_pressure,
             "stall_imminent": stall_imminent,

@@ -198,8 +198,10 @@ class _ScanDesc:
     address: str
     n_blocks: int
     zone_block: int
-    spans: dict                  # column -> (n_blocks, 2) int64 zone array
+    spans: dict                  # column -> (n_blocks, 2) zone array
     constraints: list[_Constraint]
+    n_shards: int = 1            # mesh row partitions the layout was built for
+    rows_per_shard: int = 0
 
 
 class PruneDecisions:
@@ -398,14 +400,21 @@ def _scan_constraints(opt: P.Plan, lit_ref) -> dict[int, list[_Constraint]]:
     return out
 
 
-def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list) -> Pruner:
+def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list,
+                 n_shards: int = 1) -> Pruner:
     """Walk the optimized plan's LSM unions and describe every component's
     prune opportunity: its zone spans plus the ``col <op> lit`` conjuncts
     (from the pushed-down per-component filters) that bound it. A second
     pass describes every constrained Scan's *block-level* opportunity (the
     per-ZONE_BLOCK zone maps harvested at load/flush time) — including
     scans of plain, non-fed datasets, which have no run to prune but whole
-    kernel tiles to skip."""
+    kernel tiles to skip.
+
+    ``n_shards`` is the session mesh's row-partition count: a scan's block
+    zones are usable only when harvested for the SAME layout (flat block ids
+    address per-shard local tiles, so a mismatched layout would skip the
+    wrong rows). Components harvested before a mesh change simply opt out of
+    block skipping until re-harvested — run-level pruning is unaffected."""
     raw_index = {id(l): i for i, l in enumerate(raw_lits)}
 
     def lit_ref(lit: Lit) -> tuple:
@@ -457,11 +466,14 @@ def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list) -> Pruner:
         bz = stats.block_zones
         if bz is None or bz.n_blocks <= 1:
             continue  # a single block can never be skipped
+        if bz.n_shards != max(n_shards, 1):
+            continue  # zone layout predates the mesh: ids would be wrong
         usable = [c for c in cons if c.column in bz.spans]
         if usable:
             scan_descs.append(_ScanDesc(scan_ords[id(node)], stats.address,
                                         bz.n_blocks, bz.block, dict(bz.spans),
-                                        usable))
+                                        usable, bz.n_shards,
+                                        bz.rows_per_shard))
     return Pruner(unions, scan_descs)
 
 
@@ -562,7 +574,9 @@ def _plan_scan(node: P.Scan, ctx: _PlannerCtx) -> PH.PhysOp:
         bz = stats.block_zones
         blocks = ctx.scan_blocks(node)
         if bz is not None:
-            out.set_blocks(blocks, bz.block, bz.n_blocks)
+            out.set_blocks(blocks, bz.block, bz.n_blocks,
+                           n_shards=bz.n_shards,
+                           rows_per_shard=bz.rows_per_shard)
         if blocks is not None and bz is not None:
             # discount the scan by the surviving fraction: the lowering
             # streams only these blocks (skipped blocks provably hold no
@@ -620,6 +634,26 @@ def _plan_filter(node: P.Filter, ctx: _PlannerCtx) -> PH.PhysOp:
                 probe.cost = stats.padded_rows * C_ROW_SCAN \
                     + n_anti * C_TOMBSTONE
                 probe.note = f"index {cs.index}:{colname} bounds the stream"
+                bz = stats.block_zones
+                blocks = ctx.scan_blocks(inner)
+                if bz is not None:
+                    probe.set_blocks(blocks, bz.block, bz.n_blocks,
+                                     n_shards=bz.n_shards,
+                                     rows_per_shard=bz.rows_per_shard)
+                if blocks is not None and bz is not None:
+                    # literal-aware refinement: the bind-time zone test
+                    # already intersected the predicate's literals with the
+                    # per-block spans, so the surviving-block fraction is a
+                    # tighter (and signature-stable — block lists are in the
+                    # prune signature) selectivity than the stats default.
+                    frac = len(blocks) / bz.n_blocks
+                    probe.rows_touched = min(stats.padded_rows,
+                                             len(blocks) * bz.block)
+                    probe.est_rows = max(min(probe.est_rows,
+                                             stats.rows * frac), 1)
+                    probe.cost = probe.rows_touched * C_ROW_SCAN \
+                        + n_anti * C_TOMBSTONE
+                    probe.note += " — " + probe.block_note()
                 if shadow:
                     probe.note += (f" — {n_anti} newer tombstone(s) subtract "
                                    f"from the mask")
@@ -1029,7 +1063,8 @@ def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
                               shadow_sources=shadow_sources)
     bz = stats.block_zones
     if bz is not None:
-        out.set_blocks(ctx.scan_blocks(scan), bz.block, bz.n_blocks)
+        out.set_blocks(ctx.scan_blocks(scan), bz.block, bz.n_blocks,
+                       n_shards=bz.n_shards, rows_per_shard=bz.rows_per_shard)
     return out
 
 
@@ -1185,7 +1220,8 @@ def _plan_groupagg(node: P.GroupAgg, ctx: _PlannerCtx) -> PH.PhysOp:
                      and s.block_ids is not None]
             if len(scans) == 1:
                 s = scans[0]
-                comp_blocks.append((s.block_ids, s.zone_block))
+                comp_blocks.append(
+                    (s.block_ids, s.zone_block) + s.shard_layout())
                 skipped += s.blocks_total - len(s.block_ids)
                 total += s.blocks_total
                 s.block_ids = None  # the kernel grid skips, not the stream

@@ -35,42 +35,71 @@ from repro.core.catalog import INTERNAL_COLUMNS, Catalog, Dataset
 from repro.kernels.filter_count import BLOCK as ZONE_BLOCK_ROWS
 
 
-def single_shard(mesh) -> bool:
-    """Block-skip eligibility: surviving-block lists are expressed over the
-    GLOBAL row layout, which per-shard kernel grids and gathers only match
-    when there is exactly one shard. The same predicate gates the harvest
-    (no point building zones a session can never consult) and the bind-time
-    decision."""
-    return mesh is None or mesh.devices.size == 1
+def mesh_shards(mesh, data_axes=None) -> int:
+    """Row-partition count of a session mesh: the product of the data-axis
+    extents (every data-parallel sharding spec row-shards over them). 1 for
+    meshless sessions — the zone-map layout then degenerates to global."""
+    if mesh is None:
+        return 1
+    if data_axes:
+        return int(np.prod([mesh.shape[a] for a in data_axes]))
+    return int(mesh.devices.size)
 
 
 @dataclasses.dataclass(frozen=True)
 class BlockZones:
     """Intra-component zone maps: per-``ZONE_BLOCK_ROWS`` [min, max] of each
-    integer column over the component's physical row layout (matter only).
-    Harvested once at load / flush / compaction; the bind-time block-skip
-    test intersects bound predicate intervals with these spans to compact
-    the kernel grid down to surviving blocks."""
+    numeric column over the component's physical row layout (matter only;
+    float NaNs count as dead rows). Harvested once at load / flush /
+    compaction; the bind-time block-skip test intersects bound predicate
+    intervals with these spans to compact the kernel grid down to surviving
+    blocks.
+
+    The layout is shard-aware: blocks are laid out per mesh row-partition
+    (flat block ``s * blocks_per_shard + j`` is shard ``s``'s LOCAL block
+    ``j`` — ``rows_per_shard`` rows per chunk, trailing partial blocks
+    sentinel-padded), so per-shard kernel grids and gathers address local
+    tiles directly. ``n_shards == 1`` is the original global layout."""
 
     block: int
     n_blocks: int
-    spans: Mapping[str, "object"]  # column -> (n_blocks, 2) int64 ndarray
+    spans: Mapping[str, "object"]  # column -> (n_blocks, 2) ndarray
+    n_shards: int = 1
+    rows_per_shard: int = 0        # 0 = whole table (unsharded)
+
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.n_blocks // max(self.n_shards, 1)
 
     def span_of(self, column: str):
         return self.spans.get(column)
 
+    def shard_lists(self, block_ids) -> list[list[int]]:
+        """Split a flat surviving-block-id tuple into per-shard LOCAL id
+        lists (flat id ``s * blocks_per_shard + j`` -> shard ``s``, local
+        ``j``). Flat ids arrive sorted, so each local list stays sorted."""
+        bp = self.blocks_per_shard
+        out: list[list[int]] = [[] for _ in range(max(self.n_shards, 1))]
+        for b in block_ids:
+            out[b // bp].append(b % bp)
+        return out
 
-def harvest_block_zones(table) -> Optional[BlockZones]:
-    """Compute a table's per-block zone maps (None when no integer column
-    exists or the table is empty). O(rows) at load/flush time — never at
-    query time."""
+
+def harvest_block_zones(table, n_shards: int = 1) -> Optional[BlockZones]:
+    """Compute a table's per-block zone maps (None when no numeric column
+    exists or the table is empty), laid out over ``n_shards`` row
+    partitions. O(rows) at load/flush time — never at query time."""
     from repro.engine.table import compute_block_zones
 
-    spans = compute_block_zones(table, ZONE_BLOCK_ROWS)
+    n = len(table)
+    if n_shards <= 1 or (n and n % n_shards):
+        n_shards = 1
+    spans = compute_block_zones(table, ZONE_BLOCK_ROWS, n_shards)
     if not spans:
         return None
     nb = int(next(iter(spans.values())).shape[0])
-    return BlockZones(ZONE_BLOCK_ROWS, nb, spans)
+    return BlockZones(ZONE_BLOCK_ROWS, nb, spans, n_shards,
+                      n // max(n_shards, 1))
 
 
 @dataclasses.dataclass(frozen=True)

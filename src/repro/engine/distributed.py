@@ -264,22 +264,52 @@ def hash_repartition_counts(mesh: Mesh, data_axes, lkey, lmask, rkey, rmask,
 
 def dist_kernel_filter_count(mesh: Mesh, data_axes, cols_mat: jax.Array,
                              bounds: jax.Array, backend=None,
-                             block_ids=None, interpret=None) -> jax.Array:
+                             block_ids=None, shard_blocks=None,
+                             interpret=None) -> jax.Array:
     """cols_mat: (k, n) int32 predicate tile, row-sharded on axis 1; bounds:
     (k, 2) replicated runtime params. Each shard runs filter_count over its
     local tile (any padding rows arrive pre-folded as a mask row with bounds
     (1, 1)); merge is one 4-byte psum.
 
-    ``block_ids`` are zone-block survivors over the GLOBAL row layout; the
-    planner only emits them on single-shard meshes (local == global), where
-    the per-shard kernel grid skips pruned tiles exactly like the
-    undistributed launch."""
+    ``block_ids`` are zone-block survivors over the GLOBAL row layout
+    (single-shard meshes only, where local == global). ``shard_blocks`` is
+    the multi-shard form: a host (n_shards, m) int32 matrix of per-shard
+    LOCAL kernel-block ids, ``-1``-padded to the max surviving count
+    (``ops.shard_block_arrays``). Row ``s`` rides to shard ``s`` through a
+    ``P(dp, None)``-sharded operand, so every shard's scalar-prefetched
+    grid scans only its own survivors — one compiled grid for all shards,
+    pad steps are gated no-ops."""
     from repro.kernels import ops
+    from repro.kernels.filter_count import BLOCK as _FC_BLOCK
+    from repro.runtime import telemetry as tel
 
     dp = _dp(data_axes)
     if block_ids is not None:
         nsh = int(np.prod([mesh.shape[a] for a in data_axes]))
-        assert nsh == 1, "block skipping requires a single-shard mesh"
+        assert nsh == 1, "global block_ids require a single-shard mesh " \
+                         "(use shard_blocks on multi-shard meshes)"
+    if shard_blocks is not None:
+        assert block_ids is None
+        sb = np.asarray(shard_blocks, np.int32)
+        nsh = int(np.prod([mesh.shape[a] for a in data_axes]))
+        assert sb.shape[0] == nsh, (sb.shape, nsh)
+        # true scanned/skipped accounting lives here, where the pad -1s are
+        # visible — the per-shard grid length over-counts by the padding.
+        nb_local = -(-(cols_mat.shape[1] // nsh) // _FC_BLOCK)
+        scanned = int((sb >= 0).sum())
+        tel.inc("kernel.blocks_scanned_total", scanned, kernel="filter_count")
+        tel.inc("kernel.blocks_skipped_total", nsh * nb_local - scanned,
+                kernel="filter_count")
+
+        def local_arr(cm, b, ids):
+            c = ops.filter_count(cm, b, cm.shape[1], backend=backend,
+                                 block_ids_arr=ids.reshape(-1),
+                                 interpret=interpret)
+            return jax.lax.psum(c, data_axes)
+
+        return _smap(mesh, data_axes, local_arr,
+                     (P(None, dp), P(None, None), P(dp, None)), P())(
+            cols_mat, bounds, jnp.asarray(sb))
 
     def local(cm, b):
         c = ops.filter_count(cm, b, cm.shape[1], backend=backend,
@@ -292,19 +322,44 @@ def dist_kernel_filter_count(mesh: Mesh, data_axes, cols_mat: jax.Array,
 
 def dist_kernel_group_agg(mesh: Mesh, data_axes, gids: jax.Array,
                           values: jax.Array, num_groups: int, op: str = "sum",
-                          backend=None, block_ids=None,
+                          backend=None, block_ids=None, shard_blocks=None,
                           interpret=None) -> jax.Array:
     """gids: (n,) int32 (-1 for dead rows); values: (n, C) f32. Shard-local
     one-hot segment reductions, minimal-collective merge (psum for sums,
-    pmax/pmin for extremes) -> replicated (G, C). ``block_ids`` as in
-    :func:`dist_kernel_filter_count` — single-shard meshes only."""
+    pmax/pmin for extremes) -> replicated (G, C). ``block_ids`` /
+    ``shard_blocks`` as in :func:`dist_kernel_filter_count` (shard_blocks
+    ids are in segment_agg's OWN kernel-block units)."""
     from repro.kernels import ops
+    from repro.kernels.segment_agg import BLOCK as _SA_BLOCK
+    from repro.runtime import telemetry as tel
 
     dp = _dp(data_axes)
     merge = {"sum": jax.lax.psum, "max": jax.lax.pmax, "min": jax.lax.pmin}[op]
     if block_ids is not None:
         nsh = int(np.prod([mesh.shape[a] for a in data_axes]))
-        assert nsh == 1, "block skipping requires a single-shard mesh"
+        assert nsh == 1, "global block_ids require a single-shard mesh " \
+                         "(use shard_blocks on multi-shard meshes)"
+    if shard_blocks is not None:
+        assert block_ids is None
+        sb = np.asarray(shard_blocks, np.int32)
+        nsh = int(np.prod([mesh.shape[a] for a in data_axes]))
+        assert sb.shape[0] == nsh, (sb.shape, nsh)
+        nb_local = -(-(gids.shape[0] // nsh) // _SA_BLOCK)
+        scanned = int((sb >= 0).sum())
+        tel.inc("kernel.blocks_scanned_total", scanned, kernel="segment_agg")
+        tel.inc("kernel.blocks_skipped_total", nsh * nb_local - scanned,
+                kernel="segment_agg")
+
+        def local_arr(g, v, ids):
+            out = ops.segment_agg(v, g, num_groups, v.shape[0], op=op,
+                                  backend=backend,
+                                  block_ids_arr=ids.reshape(-1),
+                                  interpret=interpret)
+            return merge(out, data_axes)
+
+        return _smap(mesh, data_axes, local_arr,
+                     (P(dp), P(dp, None), P(dp, None)), P(None, None))(
+            gids, values, jnp.asarray(sb))
 
     def local(g, v):
         out = ops.segment_agg(v, g, num_groups, v.shape[0], op=op,

@@ -33,9 +33,27 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.physical_planner import STALL_WARN_FRAC
 from repro.engine import lsm
 from repro.engine.table import Table
 from repro.runtime import telemetry as tel
+
+
+def stall_delay(pressure: float, max_delay_s: float,
+                warn_frac: float = STALL_WARN_FRAC) -> float:
+    """Proportional (AsterixDB-style) write-stall delay.
+
+    ``pressure`` is the planner's stall-pressure signal — resident
+    components over the stall cap. Below ``warn_frac`` (the same threshold
+    the planner flags ``stall_imminent`` at) the delay is zero; above it
+    the delay grows linearly, reaching ``max_delay_s`` at pressure 1.0
+    (the hard cap) and saturating there. The hard cap itself remains a
+    blocking ceiling — this curve only slows the writer down smoothly on
+    the approach instead of letting it slam into the cap and block for
+    the full timeout."""
+    if max_delay_s <= 0.0 or pressure < warn_frac:
+        return 0.0
+    return max_delay_s * min((pressure - warn_frac) / (1.0 - warn_frac), 1.0)
 
 
 class Feed:
@@ -44,13 +62,16 @@ class Feed:
                  policy: Optional[lsm.CompactionPolicy] = None,
                  compactor: Optional["lsm.BackgroundCompactor"] = None,
                  stall_runs: Optional[int] = None,
-                 stall_timeout_s: float = 5.0):
+                 stall_timeout_s: float = 5.0,
+                 stall_delay_s: float = 0.05):
         """``compactor`` moves compaction off the ingest hot path: flushes
         notify the background worker instead of merging inline, and the
-        write-stall policy backpressures THIS writer — never readers — when
-        more than ``stall_runs`` components pile up (default: 2× the
-        policy's ``max_runs``), waiting up to ``stall_timeout_s`` for the
-        worker to catch up."""
+        write-stall policy backpressures THIS writer — never readers.
+        Backpressure is proportional: as resident components approach
+        ``stall_runs`` (default: 2× the policy's ``max_runs``), each flush
+        sleeps up to ``stall_delay_s`` along the planner's stall-pressure
+        curve; at the hard cap the writer blocks up to ``stall_timeout_s``
+        for the worker to catch up (the ceiling)."""
         self.session = session
         self.dataset = dataset
         self.dataverse = dataverse
@@ -60,13 +81,14 @@ class Feed:
         self.stall_runs = stall_runs if stall_runs is not None \
             else max(2 * self.policy.max_runs, 4)
         self.stall_timeout_s = stall_timeout_s
+        self.stall_delay_s = stall_delay_s
         self._buffer: list[tuple[str, object]] = []  # (kind, payload)
         self._buffered = 0
         self.stats = {"ingested": 0, "flushes": 0, "compactions": 0,
                       "runs": 0, "run_rows": 0,
                       "upserts": 0, "deletes": 0, "tombstones": 0,
                       "tombstones_flushed": 0, "level_merges": 0,
-                      "stalls": 0, "stall_s": 0.0}
+                      "stalls": 0, "soft_stalls": 0, "stall_s": 0.0}
 
     # -- ingest ------------------------------------------------------------
 
@@ -193,26 +215,48 @@ class Feed:
         cascade (an L0 fold can overflow L1), the full fold ends it.
 
         With a background compactor attached, this only notifies the worker
-        — plus write-stall backpressure: when runs pile past the hard cap
-        (the worker is behind), THIS writer blocks until the count drops or
-        the stall timeout expires. Readers never block either way."""
+        — plus write-stall backpressure: as runs pile toward the hard cap
+        THIS writer sleeps a proportional delay (the planner's
+        stall-pressure curve), and at the cap it blocks until the count
+        drops or the stall timeout expires. Readers never block either
+        way."""
         if self.compactor is not None:
             self.compactor.notify(self.dataverse, self.dataset)
             runs = self.session.catalog.get(self.dataverse,
                                             self.dataset).runs
+            ds_label = f"{self.dataverse}.{self.dataset}"
             if self.stall_runs and len(runs) >= self.stall_runs:
                 waited = self.compactor.wait_below(
                     self.dataverse, self.dataset, self.stall_runs,
                     self.stall_timeout_s)
                 self.stats["stalls"] += 1
                 self.stats["stall_s"] += waited
-                ds_label = f"{self.dataverse}.{self.dataset}"
                 tel.inc("ingest.write_stalls_total", dataset=ds_label)
                 tel.observe("ingest.write_stall_seconds", waited,
                             dataset=ds_label)
                 tel.set_gauge("ingest.stall_seconds_total",
                               self.stats["stall_s"], dataset=ds_label)
                 self._refresh_run_stats()
+                return
+            if self.stall_runs:
+                # below the ceiling: proportional backpressure along the
+                # same pressure signal the planner gauges (max of what the
+                # planner last observed and this dataset's own run count)
+                pressure = max(
+                    len(runs) / self.stall_runs,
+                    float(tel.gauge_value("planner.stall_pressure",
+                                          default=0.0) or 0.0))
+                delay = stall_delay(pressure, self.stall_delay_s)
+                if delay > 0.0:
+                    time.sleep(delay)
+                    self.stats["soft_stalls"] += 1
+                    self.stats["stall_s"] += delay
+                    tel.inc("ingest.write_soft_stalls_total",
+                            dataset=ds_label)
+                    tel.observe("ingest.write_stall_seconds", delay,
+                                dataset=ds_label)
+                    tel.set_gauge("ingest.stall_seconds_total",
+                                  self.stats["stall_s"], dataset=ds_label)
             return
         for _ in range(16):
             m = self.session.catalog.manifest(self.dataverse, self.dataset)

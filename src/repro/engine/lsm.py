@@ -196,7 +196,7 @@ def make_run(session, base: Dataset, table: Table,
     table = pad_to_block(table, RUN_BLOCK)
     if session.mesh is not None:
         table = table.shard(session.mesh, session.data_axes)
-    from repro.core.stats import harvest_block_zones, single_shard
+    from repro.core.stats import harvest_block_zones, mesh_shards
     # stable component id: a per-dataset monotone uid, never reused — the
     # run keeps this address for life, compactions around it notwithstanding
     uid = session.catalog.next_run_uid(base.dataverse, base.name)
@@ -209,11 +209,11 @@ def make_run(session, base: Dataset, table: Table,
                   host_keys=host_keys,
                   # intra-run zone maps, harvested in the same flush pass
                   # that builds the sorted indexes (matter rows only: anti
-                  # rows and block padding never widen a span). Multi-shard
-                  # sessions skip the harvest: they can never consult it,
-                  # and the flush path must stay O(batch) device work.
-                  block_zones=harvest_block_zones(table)
-                  if single_shard(session.mesh) else None)
+                  # rows and block padding never widen a span). Sharded
+                  # sessions harvest the per-shard layout so block lists
+                  # re-base to each row partition.
+                  block_zones=harvest_block_zones(
+                      table, mesh_shards(session.mesh, session.data_axes)))
     if primary is not None:
         run.indexes["primary"] = session._build_index(table, primary.column,
                                                       "primary")
@@ -726,7 +726,7 @@ def _rebuild_soft(session, comp: Dataset) -> None:
     """Rebuild one component's soft state from its table columns: the same
     passes create_dataset/make_run run at build time, so the rebuilt state
     is bit-identical to the pre-crash state."""
-    from repro.core.stats import harvest_block_zones, single_shard
+    from repro.core.stats import harvest_block_zones, mesh_shards
 
     t = comp.table
     valid = np.asarray(t.valid)
@@ -751,8 +751,8 @@ def _rebuild_soft(session, comp: Dataset) -> None:
     if primary_col is not None:
         # matter prefix is clustered: masking preserves the sorted order
         comp.host_keys = np.asarray(t.columns[primary_col])[valid]
-    comp.block_zones = harvest_block_zones(t) \
-        if single_shard(session.mesh) else None
+    comp.block_zones = harvest_block_zones(
+        t, mesh_shards(session.mesh, session.data_axes))
     for key, ix in list(comp.indexes.items()):
         comp.indexes[key] = session._build_index(t, ix.column, ix.kind)
 

@@ -146,9 +146,10 @@ class Session:
         ``enable_prune`` turns bind-time zone-map run pruning on/off (off is
         only useful for benchmarking the pruning win); ``enable_block_skip``
         does the same for the intra-component block level (the surviving
-        blocks of a predicate-constrained scan — it only takes effect on
-        single-shard executions, where a block list over the global layout
-        is also valid per shard).
+        blocks of a predicate-constrained scan). Block skipping is fully
+        shard-aware: zone maps are harvested per mesh row partition, the
+        bind-time survivor list is re-based into per-shard local lists, and
+        each shard's kernel grid / gather scans only its own survivors.
 
         ``kernel_backend`` feeds the kernels/ops dispatch: 'pallas' forces
         the Pallas kernels (interpret mode off-TPU), 'xla' the jnp twins;
@@ -265,11 +266,12 @@ class Session:
             host_keys = np.asarray(table.columns[primary])
         if self.mesh is not None:
             table = table.shard(self.mesh, self.data_axes)
-        from repro.core.stats import harvest_block_zones, single_shard
+        from repro.core.stats import harvest_block_zones
         ds = Dataset(name=name, dataverse=dataverse, table=table, closed=closed,
                      host_keys=host_keys,
-                     block_zones=harvest_block_zones(table)
-                     if single_shard(self.mesh) else None)
+                     # per-shard zone layout: sharded meshes get block lists
+                     # local to each row partition (stats.BlockZones)
+                     block_zones=harvest_block_zones(table, self.n_shards))
         if primary is not None:
             ds.indexes["primary"] = self._build_index(table, primary, "primary")
         for col in indexes:
@@ -440,6 +442,8 @@ class Session:
                 f"point lookup needs a primary key on {dataverse}.{dataset} "
                 "(create the dataset with primary=<column>)")
         probed = skipped = 0
+        shards = 1
+        shard_probes = 0
         found_in = tombstoned_by = None
         result = None
         for comp in reversed(comps):  # newest component wins
@@ -450,9 +454,22 @@ class Session:
                 if key < hk[0] or key > hk[-1]:
                     skipped += 1
                 else:
+                    # shard routing: the per-shard key zone spans identify
+                    # the owning row partition(s); only their slice of the
+                    # clustered copy is searched (host-side — no gather of
+                    # the other shards' key ranges).
+                    wlo, whi, owners, comp_shards = _route_key(
+                        comp, primary.column, key, len(hk))
+                    shards = max(shards, comp_shards)
+                    if owners == 0:
+                        skipped += 1  # key falls between the shard spans
+                        continue
                     probed += 1
-                    lo = int(np.searchsorted(hk, key, side="left"))
-                    hi = int(np.searchsorted(hk, key, side="right"))
+                    shard_probes += owners
+                    lo = wlo + int(np.searchsorted(hk[wlo:whi], key,
+                                                   side="left"))
+                    hi = wlo + int(np.searchsorted(hk[wlo:whi], key,
+                                                   side="right"))
                     if hi > lo:
                         # matter prefix is clustered by the primary key:
                         # index-space positions are table row positions
@@ -473,7 +490,8 @@ class Session:
         node = PH.PointLookup(dataverse, dataset, primary.column,
                               components=len(comps), probed=probed,
                               skipped=skipped, found_in=found_in,
-                              tombstoned_by=tombstoned_by)
+                              tombstoned_by=tombstoned_by,
+                              shards=shards, shard_probes=shard_probes)
         node.est_rows = 0 if result is None else len(next(iter(result.values())))
         node.cost = probed * 2.0  # binary-search pairs; never a scan
         if tombstoned_by is not None:
@@ -512,13 +530,19 @@ class Session:
                            kernel_backend=self.kernel_backend,
                            kernel_interpret=self.kernel_interpret)
 
-    def _block_skip(self) -> bool:
-        """Block skipping is a single-shard decision (stats.single_shard):
-        the surviving-block list is expressed over the global row layout,
-        which per-shard grids and gathers only match with one shard."""
-        from repro.core.stats import single_shard
+    @property
+    def n_shards(self) -> int:
+        """Row-partition count of this session's mesh (1 when meshless) —
+        the layout zone maps are harvested over and block lists re-base to."""
+        from repro.core.stats import mesh_shards
 
-        return self.enable_block_skip and single_shard(self.mesh)
+        return mesh_shards(self.mesh, self.data_axes)
+
+    def _block_skip(self) -> bool:
+        """Block skipping works on any mesh: surviving-block lists are
+        expressed per shard (stats.BlockZones shard layout), so per-shard
+        kernel grids and gathers consume their own local lists."""
+        return self.enable_block_skip
 
     def _optimize(self, plan: P.Plan, catalog) -> P.Plan:
         tel.inc("session.optimizes_total", sid=self.sid)
@@ -543,7 +567,8 @@ class Session:
                               if k[1:] == (snap.stats_epoch, snap.lsn)}
         opt = self._optimize(plan, snap)
         with tel.span("session.prune_build", sid=self.sid):
-            pruner = build_pruner(opt, snap, raw_lits)
+            pruner = build_pruner(opt, snap, raw_lits,
+                                  n_shards=self.n_shards)
         e = _PlanEntry(snap.stats_epoch, snap.lsn, opt, opt.fingerprint(),
                        list(raw_lits), pruner)
         self._plans[raw_fp] = e
@@ -723,10 +748,9 @@ class Session:
         cols = dict(env)
         cols["__valid__"] = mask
         table = _collect_stats(Table(cols, num_rows=int(mask.shape[0])))
-        from repro.core.stats import harvest_block_zones, single_shard
+        from repro.core.stats import harvest_block_zones
         ds = Dataset(name=name, dataverse=dataverse, table=table, closed=True,
-                     block_zones=harvest_block_zones(table)
-                     if single_shard(self.mesh) else None)
+                     block_zones=harvest_block_zones(table, self.n_shards))
         self.catalog.register(ds)
         self._invalidate_plans()
         return ds
@@ -789,10 +813,38 @@ def _bind_params(binding, raw_lits):
             for kind, v in binding]
 
 
+def _route_key(comp, key_col: str, key, n_keys: int):
+    """Shard-route a point lookup inside one component: fold the clustered
+    key column's per-shard zone spans into one [lo, hi] per row partition
+    and return the ``host_keys`` window covering the owning shard(s) —
+    ``(window_lo, window_hi, owning_shards, n_shards)``. The matter prefix
+    is clustered, so owning shards are a contiguous run and the merged
+    window stays one slice (a duplicate key straddling a shard boundary is
+    still found whole). Components without a sharded zone layout fall back
+    to the full window."""
+    bz = comp.block_zones
+    if bz is None or bz.n_shards <= 1 or not bz.rows_per_shard:
+        return 0, n_keys, 1, 1
+    span = bz.span_of(key_col)
+    if span is None:
+        return 0, n_keys, 1, bz.n_shards
+    per = span.reshape(bz.n_shards, bz.blocks_per_shard, 2)
+    owners = np.nonzero((per[:, :, 0].min(axis=1) <= key)
+                        & (key <= per[:, :, 1].max(axis=1)))[0]
+    if not len(owners):
+        return 0, 0, 0, bz.n_shards
+    wlo = min(int(owners[0]) * bz.rows_per_shard, n_keys)
+    whi = min((int(owners[-1]) + 1) * bz.rows_per_shard, n_keys)
+    return wlo, whi, len(owners), bz.n_shards
+
+
 def _collect_stats(table: Table) -> Table:
-    """Fill missing lo/hi/distinct for integer columns (the statistics a DBMS
-    gathers at load; the bounded-domain group-by and index selection read
-    them from the catalog)."""
+    """Fill missing lo/hi/distinct for numeric columns (the statistics a
+    DBMS gathers at load; the bounded-domain group-by and index selection
+    read them from the catalog). Integer columns get lo/hi/distinct; float
+    columns get a NaN-safe lo/hi envelope (no distinct — float domains are
+    never group-by keys), so float predicates participate in run-level
+    zone-span pruning too."""
     from repro.engine.table import ColumnMeta
 
     meta = dict(table.meta)
@@ -803,10 +855,15 @@ def _collect_stats(table: Table) -> Table:
         if m is not None and m.lo is not None:
             continue
         a = np.asarray(col)
-        if a.ndim == 1 and np.issubdtype(a.dtype, np.integer) and a.size:
+        if a.ndim != 1 or not a.size:
+            continue
+        if np.issubdtype(a.dtype, np.integer):
             lo, hi = int(a.min()), int(a.max())
             distinct = min(hi - lo + 1, a.size)
             meta[name] = ColumnMeta(a.dtype, lo, hi, distinct)
+        elif np.issubdtype(a.dtype, np.floating) and not np.all(np.isnan(a)):
+            meta[name] = ColumnMeta(a.dtype, float(np.nanmin(a)),
+                                    float(np.nanmax(a)))
     return Table(table.columns, meta, table.num_rows)
 
 

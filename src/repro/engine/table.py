@@ -117,12 +117,25 @@ class Table:
         return jnp.ones((self.num_rows,), dtype=jnp.bool_)
 
 
-def compute_block_zones(table: Table, block: int) -> dict[str, np.ndarray]:
+def compute_block_zones(table: Table, block: int,
+                        n_shards: int = 1) -> dict[str, np.ndarray]:
     """Per-block [min, max] zone maps over the table's *physical* row layout
-    — one (n_blocks, 2) int64 array per 1-D integer column, min/max taken
-    over matter rows only (padding and anti-matter rows carry the
-    [int64.max, int64.min] empty-span sentinel, so they never widen a span
-    and an all-dead block is prunable under ANY constraint).
+    — one (n_blocks, 2) array per 1-D numeric column, min/max taken over
+    matter rows only (padding and anti-matter rows carry the ``[max, min]``
+    empty-span sentinel — ``[int64.max, int64.min]`` for integer columns,
+    ``[+inf, -inf]`` for float columns — so they never widen a span and an
+    all-dead block is prunable under ANY constraint). Float NaN rows are
+    treated like dead rows: a NaN never satisfies a range predicate, so it
+    must never widen a span either.
+
+    ``n_shards > 1`` lays the blocks out per shard: the table's rows are
+    contiguously partitioned into ``n_shards`` equal chunks (the mesh row
+    partitioning ``Table.shard`` produces), and each chunk gets its own
+    ``blocks_per_shard = ceil(rows_per_shard / block)`` blocks — flat block
+    index ``s * blocks_per_shard + j`` is shard ``s``'s LOCAL block ``j``.
+    A shard's trailing partial block is sentinel-padded, so per-shard kernel
+    grids address local tiles directly and never straddle a shard boundary.
+    With ``n_shards == 1`` this degenerates to the original global layout.
 
     This is the intra-component half of the zone-map hierarchy: the
     column-level lo/hi stats (the run's *zone span*) gate run pruning, and
@@ -132,28 +145,43 @@ def compute_block_zones(table: Table, block: int) -> dict[str, np.ndarray]:
     n = len(table)
     if n == 0:
         return {}
+    if n_shards <= 1 or n % n_shards:
+        n_shards = 1  # unsharded layout (or rows not evenly partitioned)
     matter = np.asarray(table.valid)
     anti = table.columns.get("__antimatter__")
     if anti is not None:
         matter = matter & ~np.asarray(anti)
-    nb = -(-n // block)
-    pad = nb * block - n
+    rps = n // n_shards                     # rows per shard chunk
+    bp = -(-rps // block)                   # blocks per shard
+    pad = bp * block - rps
     i64 = np.iinfo(np.int64)
     out: dict[str, np.ndarray] = {}
     for name, col in table.columns.items():
         if name in ("__valid__", "__antimatter__") or name.startswith("__ix"):
             continue
         a = np.asarray(col)
-        if a.ndim != 1 or not np.issubdtype(a.dtype, np.integer):
+        if a.ndim != 1:
             continue
-        v = a.astype(np.int64)
-        lo = np.where(matter, v, i64.max)
-        hi = np.where(matter, v, i64.min)
+        if np.issubdtype(a.dtype, np.integer):
+            v = a.astype(np.int64)
+            live = matter
+            lo_fill, hi_fill = i64.max, i64.min
+        elif np.issubdtype(a.dtype, np.floating):
+            v = a.astype(np.float64)
+            live = matter & ~np.isnan(v)
+            lo_fill, hi_fill = np.inf, -np.inf
+        else:
+            continue
+        lo = np.where(live, v, lo_fill).reshape(n_shards, rps)
+        hi = np.where(live, v, hi_fill).reshape(n_shards, rps)
         if pad:
-            lo = np.concatenate([lo, np.full(pad, i64.max)])
-            hi = np.concatenate([hi, np.full(pad, i64.min)])
-        out[name] = np.stack([lo.reshape(nb, block).min(axis=1),
-                              hi.reshape(nb, block).max(axis=1)], axis=1)
+            lo = np.concatenate(
+                [lo, np.full((n_shards, pad), lo_fill, lo.dtype)], axis=1)
+            hi = np.concatenate(
+                [hi, np.full((n_shards, pad), hi_fill, hi.dtype)], axis=1)
+        out[name] = np.stack(
+            [lo.reshape(n_shards * bp, block).min(axis=1),
+             hi.reshape(n_shards * bp, block).max(axis=1)], axis=1)
     return out
 
 

@@ -66,6 +66,25 @@ def _kernel_ids(ids_ref, bounds_ref, nvalid_ref, cols_ref, out_ref):
           ids_ref[step] * cols_ref.shape[1])
 
 
+def _kernel_ids_arr(ids_ref, bounds_ref, nvalid_ref, cols_ref, out_ref):
+    """Runtime-id variant (per-shard grids under shard_map): the id list is
+    a TRACED scalar-prefetch operand padded with ``-1`` sentinels up to a
+    common length, so every shard shares one compiled grid while scanning a
+    different surviving set. The index_map clamps pad ids to tile 0 (some
+    tile must be addressed); the body is gated off for them, so a pad step
+    contributes nothing and the count stays bit-identical."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[0, 0] = jnp.int32(0)
+
+    @pl.when(ids_ref[step] >= 0)
+    def _run():
+        _body(bounds_ref, nvalid_ref, cols_ref, out_ref,
+              ids_ref[step] * cols_ref.shape[1])
+
+
 def _resolve_interpret(interpret):
     # None = auto: compiled Pallas on real TPUs, interpret mode elsewhere
     # (the kernels' semantics are validated everywhere, compiled where the
@@ -77,13 +96,19 @@ def _resolve_interpret(interpret):
                    static_argnames=("block", "interpret", "block_ids"))
 def filter_count(cols: jax.Array, bounds: jax.Array, n_valid,
                  *, block: int = BLOCK, interpret: bool | None = None,
-                 block_ids: tuple | None = None) -> jax.Array:
+                 block_ids: tuple | None = None,
+                 block_ids_arr: jax.Array | None = None) -> jax.Array:
     """cols: (k, n) int32; bounds: (k, 2); n_valid scalar. -> int32 count.
 
     ``block_ids``: optional static tuple of surviving block indices (units
     of ``block`` rows over the unpadded layout); the grid visits only those
     tiles. Skipped blocks provably contain no matching rows, so the count
-    is bit-identical to the full launch."""
+    is bit-identical to the full launch.
+
+    ``block_ids_arr``: TRACED (m,) int32 alternative, padded with ``-1``
+    sentinels at the END — the per-shard form: under shard_map every shard
+    binds its own local id list of a common padded length, so one compiled
+    grid serves all shards. Mutually exclusive with ``block_ids``."""
     interpret = _resolve_interpret(interpret)
     k, n = cols.shape
     pad = (-n) % block
@@ -93,6 +118,27 @@ def filter_count(cols: jax.Array, bounds: jax.Array, n_valid,
     args = [bounds.astype(jnp.int32),
             jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
             cols.astype(jnp.int32)]
+    if block_ids_arr is not None:
+        assert block_ids is None, "block_ids and block_ids_arr are exclusive"
+        ids = block_ids_arr.astype(jnp.int32)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(int(ids.shape[0]),),
+            in_specs=[
+                pl.BlockSpec((k, 2), lambda i, ids: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i, ids: (0, 0)),
+                pl.BlockSpec((k, block),
+                             lambda i, ids: (0, jnp.maximum(ids[i], 0))),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, ids: (0, 0)),
+        )
+        out = pl.pallas_call(
+            _kernel_ids_arr,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            interpret=interpret,
+        )(ids, *args)
+        return out[0, 0]
     if block_ids is None:
         out = pl.pallas_call(
             _kernel,

@@ -100,10 +100,48 @@ def _expand_block_ids(block_ids, zone_block: int, block: int,
     return out
 
 
+def shard_block_arrays(block_ids, zone_block: int, block: int, n_shards: int,
+                       blocks_per_shard: int, rows_per_shard: int) -> np.ndarray:
+    """Expand a flat shard-aware zone-block id tuple into the per-shard
+    KERNEL-block id matrix the distributed wrappers scalar-prefetch: row
+    ``s`` lists shard ``s``'s surviving local kernel-block ids (units of
+    ``block`` rows over the shard's own chunk), ``-1``-padded at the END to
+    the max surviving count (always >= 1 so the grid is non-empty — an
+    all-``-1`` row is a shard with nothing to scan). The zone layout places
+    flat block ``s * blocks_per_shard + j`` wholly inside shard ``s``, so
+    the expansion never crosses a shard boundary."""
+    assert zone_block % block == 0, (zone_block, block)
+    r = zone_block // block
+    nb_local = -(-rows_per_shard // block)
+    per: list[list[int]] = [[] for _ in range(n_shards)]
+    for b in block_ids:
+        s, j = divmod(int(b), blocks_per_shard)
+        per[s].extend(range(j * r, min((j + 1) * r, nb_local)))
+    m = max(1, max(len(p) for p in per))
+    out = np.full((n_shards, m), -1, np.int32)
+    for s, p in enumerate(per):
+        out[s, : len(p)] = p
+    return out
+
+
 def filter_count(cols, bounds, n_valid, backend: Optional[str] = None,
                  block_ids: Optional[tuple] = None,
+                 block_ids_arr=None,
                  interpret: Optional[bool] = None):
     from repro.kernels.filter_count import BLOCK as _FC_BLOCK
+    if block_ids_arr is not None:
+        # per-shard runtime ids (already kernel-block units, -1-padded):
+        # grid length is the padded list; true scanned/skipped telemetry is
+        # accounted host-side by the distributed wrapper, not here.
+        _tick("filter_count", grid=int(block_ids_arr.shape[0]),
+              backend=backend)
+        if _use_pallas(backend):
+            return _filter_count(cols, bounds, n_valid,
+                                 block_ids_arr=block_ids_arr,
+                                 interpret=_interpret() if interpret is None
+                                 else interpret)
+        return ref.filter_count(cols, bounds, n_valid,
+                                block_ids_arr=block_ids_arr, block=_FC_BLOCK)
     ids = _expand_block_ids(block_ids, ZONE_BLOCK_ROWS, _FC_BLOCK,
                             cols.shape[1])
     nb = -(-cols.shape[1] // _FC_BLOCK)
@@ -120,8 +158,19 @@ def filter_count(cols, bounds, n_valid, backend: Optional[str] = None,
 def segment_agg(values, gids, num_groups, n_valid, op: str = "sum",
                 backend: Optional[str] = None,
                 block_ids: Optional[tuple] = None,
+                block_ids_arr=None,
                 interpret: Optional[bool] = None):
     from repro.kernels.segment_agg import BLOCK as _SA_BLOCK
+    if block_ids_arr is not None:
+        _tick("segment_agg", grid=int(block_ids_arr.shape[0]),
+              backend=backend)
+        if _use_pallas(backend):
+            return _segment_agg(values, gids, num_groups, n_valid, op=op,
+                                block_ids_arr=block_ids_arr,
+                                interpret=_interpret() if interpret is None
+                                else interpret)
+        return ref.segment_agg(values, gids, num_groups, n_valid, op,
+                               block_ids_arr=block_ids_arr, block=_SA_BLOCK)
     ids = _expand_block_ids(block_ids, ZONE_BLOCK_ROWS, _SA_BLOCK,
                             values.shape[0])
     nb = -(-values.shape[0] // _SA_BLOCK)

@@ -19,14 +19,32 @@ def _block_select(n: int, block: int, block_ids) -> np.ndarray:
                            for b in block_ids])
 
 
+def _arr_select(n: int, block: int, ids: jax.Array):
+    """Traced analogue of ``_block_select`` for runtime (-1-padded) id
+    lists: returns (gather positions clamped into [0, n), original row
+    positions, live mask). Pad ids (< 0) clamp to block 0 and come back
+    dead — the twin of the Pallas grid's gated no-op steps."""
+    pos = (jnp.maximum(ids, 0)[:, None] * block
+           + jnp.arange(block)[None, :]).reshape(-1)
+    live = jnp.repeat(ids >= 0, block)
+    return jnp.minimum(pos, n - 1), pos, live
+
+
 def filter_count(cols: jax.Array, bounds: jax.Array, n_valid,
-                 block_ids=None, block: int = 4096) -> jax.Array:
+                 block_ids=None, block: int = 4096,
+                 block_ids_arr=None) -> jax.Array:
     """cols: (k, n) int32; bounds: (k, 2) int32 [lo, hi] inclusive.
     Count of rows i < n_valid with AND_k (lo_k <= cols[k, i] <= hi_k).
     ``block_ids`` restricts the pass to the listed row blocks (zone-map
-    block skipping); the original row index still gates ``n_valid``."""
+    block skipping); the original row index still gates ``n_valid``.
+    ``block_ids_arr`` is the traced -1-padded per-shard alternative."""
     k, n = cols.shape
-    if block_ids is not None:
+    if block_ids_arr is not None:
+        sel, pos, live = _arr_select(n, block,
+                                     jnp.asarray(block_ids_arr, jnp.int32))
+        cols = cols[:, sel]
+        m = live & (pos < n_valid)
+    elif block_ids is not None:
         sel = _block_select(n, block, block_ids)
         cols = cols[:, sel]
         m = jnp.asarray(sel) < n_valid
@@ -38,12 +56,21 @@ def filter_count(cols: jax.Array, bounds: jax.Array, n_valid,
 
 def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int,
                 n_valid, op: str = "sum",
-                block_ids=None, block: int = 2048) -> jax.Array:
+                block_ids=None, block: int = 2048,
+                block_ids_arr=None) -> jax.Array:
     """values: (n, c) f32; gids: (n,) int32. Per-group column ``op``-reductions
     (G, c); empty groups hold the identity (0 / -inf / +inf). ``block_ids``
-    restricts the reduction to the listed row blocks."""
+    restricts the reduction to the listed row blocks (``block_ids_arr``:
+    the traced -1-padded per-shard form)."""
     n = values.shape[0]
-    if block_ids is not None:
+    if block_ids_arr is not None:
+        sel, pos, live = _arr_select(n, block,
+                                     jnp.asarray(block_ids_arr, jnp.int32))
+        values = values[sel]
+        gids = gids[sel]
+        idx = jnp.where(live & (pos < n), pos, n)  # dead rows fail n_valid
+        n = int(sel.shape[0])
+    elif block_ids is not None:
         sel = _block_select(n, block, block_ids)
         values = values[sel]
         gids = gids[sel]

@@ -79,13 +79,32 @@ def _kernel_ids(op, ids_ref, nvalid_ref, gid_ref, val_ref, out_ref):
           ids_ref[step] * gid_ref.shape[1])
 
 
+def _kernel_ids_arr(op, ids_ref, nvalid_ref, gid_ref, val_ref, out_ref):
+    """Runtime-id variant (per-shard grids under shard_map): the id list is
+    a TRACED scalar-prefetch operand padded with ``-1`` sentinels — one
+    compiled grid of the max surviving count serves every shard. Pad steps
+    clamp to tile 0 in the index_map and are gated off here, so the partial
+    aggregates stay bit-identical."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _INIT[op])
+
+    @pl.when(ids_ref[step] >= 0)
+    def _run():
+        _body(op, nvalid_ref, gid_ref, val_ref, out_ref,
+              ids_ref[step] * gid_ref.shape[1])
+
+
 @functools.partial(jax.jit,
                    static_argnames=("num_groups", "op", "block", "interpret",
                                     "block_ids"))
 def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int, n_valid,
                 *, op: str = "sum", block: int = BLOCK,
                 interpret: bool | None = None,
-                block_ids: tuple | None = None) -> jax.Array:
+                block_ids: tuple | None = None,
+                block_ids_arr: jax.Array | None = None) -> jax.Array:
     """values: (n, c) f32; gids: (n,) int32 -> (num_groups, c) per-group
     ``op``-reductions. Groups with no live member hold the identity
     (0 / -inf / +inf) — callers mask by count.
@@ -93,7 +112,9 @@ def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int, n_valid,
     ``interpret=None`` auto-detects: compiled Pallas on TPU, interpret mode
     elsewhere. ``block_ids`` (static tuple, units of ``block`` rows) makes
     the grid visit only the listed blocks — sound whenever every live row
-    with gid ≥ 0 lives in a listed block."""
+    with gid ≥ 0 lives in a listed block. ``block_ids_arr`` is the TRACED
+    (m,) int32 per-shard alternative, ``-1``-padded at the end (mutually
+    exclusive with ``block_ids``)."""
     assert op in _INIT, op
     from repro.kernels.filter_count import _resolve_interpret
     interpret = _resolve_interpret(interpret)
@@ -105,6 +126,27 @@ def segment_agg(values: jax.Array, gids: jax.Array, num_groups: int, n_valid,
     nb = values.shape[0] // block
     args = [jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
             gids.astype(jnp.int32).reshape(1, -1), values]
+    if block_ids_arr is not None:
+        assert block_ids is None, "block_ids and block_ids_arr are exclusive"
+        ids = block_ids_arr.astype(jnp.int32)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(int(ids.shape[0]),),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i, ids: (0, 0)),
+                pl.BlockSpec((1, block),
+                             lambda i, ids: (0, jnp.maximum(ids[i], 0))),
+                pl.BlockSpec((block, c),
+                             lambda i, ids: (jnp.maximum(ids[i], 0), 0)),
+            ],
+            out_specs=pl.BlockSpec((num_groups, c), lambda i, ids: (0, 0)),
+        )
+        return pl.pallas_call(
+            functools.partial(_kernel_ids_arr, op),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((num_groups, c), jnp.float32),
+            interpret=interpret,
+        )(ids, *args)
     if block_ids is None:
         return pl.pallas_call(
             functools.partial(_kernel, op),

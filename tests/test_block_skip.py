@@ -429,6 +429,187 @@ def test_point_lookup_requires_primary_and_bare_frame():
         df2[df2["val"] >= 0].get(5)
 
 
+# -- float zone maps ----------------------------------------------------------
+
+
+def test_float_zone_maps_nan_safe_with_empty_sentinel():
+    """Float columns harvest NaN-safe per-block spans; all-NaN (and pad)
+    blocks carry the [+inf, -inf] empty sentinel, so they fail every
+    predicate test and are always skipped."""
+    from repro.core.stats import harvest_block_zones
+
+    n = 2 * ZONE_BLOCK_ROWS + 100  # trailing partial block
+    ids = np.arange(n, dtype=np.int32)
+    fts = ids.astype(np.float32)
+    fts[0] = np.nan                          # dead row must not widen block 0
+    fts[ZONE_BLOCK_ROWS:2 * ZONE_BLOCK_ROWS] = np.nan  # block 1 all dead
+    bz = harvest_block_zones(Table({"id": ids, "fts": fts}))
+    sp = np.asarray(bz.span_of("fts"))
+    assert sp.shape == (3, 2)
+    assert not np.isnan(sp).any()
+    assert sp[0, 0] == 1.0 and sp[0, 1] == float(ZONE_BLOCK_ROWS - 1)
+    assert sp[1, 0] == np.inf and sp[1, 1] == -np.inf  # empty sentinel
+    assert sp[2, 0] == float(2 * ZONE_BLOCK_ROWS)
+    assert sp[2, 1] == float(n - 1)
+
+
+@pytest.mark.parametrize("mode", ["gspmd", "shard_map"])
+def test_float_block_skip_matches_unskipped(mode):
+    """A range predicate over a clustered FLOAT column prunes blocks off the
+    float zone maps and stays bit-identical to the unskipped scan — NaN rows
+    simply never match."""
+    rng = np.random.default_rng(9)
+    ids = np.arange(N, dtype=np.int32)
+    fts = ids.astype(np.float32)
+    fts[7] = np.nan  # a dead row inside block 0
+    t = Table({"id": ids, "fts": fts,
+               "val": rng.integers(0, 100, N).astype(np.int32)})
+    sess = _session(mode, enable_index=False)
+    sess.create_dataset("Ev", t, dataverse="f", primary="id")
+    df = AFrame("f", "Ev", session=sess)
+    got = _range_count(df, "fts", 8192.0, 8700.0)
+    rep = sess.last_prune_report
+    assert got == 509
+    assert rep["blocks_scanned"] == 1 and rep["blocks_skipped"] == 4
+    sess.enable_block_skip = False
+    assert _range_count(df, "fts", 8192.0, 8700.0) == got
+    sess.enable_block_skip = True
+    # the NaN row is invisible to every range — including one over block 0
+    assert _range_count(df, "fts", 0.0, 100.0) == 100
+
+
+# -- sharded pruning (8 simulated devices, subprocess) ------------------------
+
+
+_SHARDED_PRELUDE = """
+import numpy as np
+from repro.core.frame import AFrame
+from repro.engine import lsm
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+from repro.engine.table import Table
+from repro.launch.mesh import make_local_mesh
+
+N = 20_000
+
+def clustered(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = np.arange(n, dtype=np.int32)
+    return Table({"id": ids, "ts": ids.copy(),
+                  "val": rng.integers(0, 100, n).astype(np.int32)})
+
+def mutated(sess):
+    sess.create_dataset("Mut", clustered(), dataverse="m", primary="id")
+    feed = Feed(sess, "Mut", "m", flush_rows=10**9,
+                policy=lsm.CompactionPolicy(size_ratio=100.0, max_runs=64))
+    ids = np.arange(20_480, 21_504, dtype=np.int32)
+    feed.push({"id": ids, "ts": ids.copy(),
+               "val": np.zeros(len(ids), np.int32)})
+    feed.flush()
+    feed.delete(np.array([8200, 8300], np.int32))
+    feed.upsert({"id": np.array([8400], np.int32),
+                 "ts": np.array([8400], np.int32),
+                 "val": np.array([7], np.int32)})
+    feed.flush()
+    return sess
+
+def rc(df, lo, hi):
+    return len(df[(df["ts"] >= lo) & (df["ts"] <= hi)])
+"""
+
+
+def test_sharded_block_skip_equivalence_property():
+    """The acceptance property on an 8-shard mesh: sharded-with-block-skip ≡
+    unsharded ≡ skip-disabled in all three modes over a mutated,
+    uncompacted dataset (hypothesis sweeps the predicate range), and the
+    per-shard kernel grids provably skip blocks. Hypothesis drives the
+    sweep when installed; otherwise a deterministic grid covers the same
+    boundary cases (block edges, shard edges, run spans, empty ranges)."""
+    from test_distributed import run_script
+
+    run_script(_SHARDED_PRELUDE + """
+sessions = {"unsharded": mutated(Session(enable_index=False))}
+for mode in ("gspmd", "shard_map", "kernel"):
+    sessions[mode] = mutated(Session(mesh=make_local_mesh(data=8, model=1),
+                                     mode=mode, enable_index=False))
+
+alive = (set(range(N)) | set(range(20_480, 21_504))) - {8200, 8300}
+keys = np.array(sorted(alive))
+
+def check_one(qlo, qw):
+    lo, hi = qlo * 512, (qlo + qw) * 512
+    want = int(((keys >= lo) & (keys <= hi)).sum())
+    for label, sess in sessions.items():
+        df = AFrame("m", "Mut", session=sess)
+        try:
+            for skip in (True, False):
+                sess.enable_block_skip = skip
+                got = rc(df, lo, hi)
+                assert got == want, (label, skip, lo, hi, got, want)
+        finally:
+            sess.enable_block_skip = True
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # deterministic boundary grid: shard edges (2500-row partitions land at
+    # 512-multiples nearby), zone-block edges, the appended run's span, the
+    # tombstoned block, and off-the-end empties
+    for qlo, qw in [(0, 0), (0, 6), (4, 1), (7, 3), (15, 4), (16, 0),
+                    (16, 6), (19, 2), (38, 5), (40, 3), (43, 6)]:
+        check_one(qlo, qw)
+else:
+    @settings(deadline=None, max_examples=8, database=None)
+    @given(st.integers(0, 43), st.integers(0, 6))
+    def check(qlo, qw):
+        check_one(qlo, qw)
+
+    check()
+
+# a 1-block-selective predicate on the 8-shard mesh provably skips: the base
+# lays out 8 per-shard blocks and only the owning shard's block is scanned
+k = sessions["kernel"]
+df = AFrame("m", "Mut", session=k)
+assert rc(df, 8192, 8700) == 507
+rep = k.last_prune_report
+assert rep["blocks_skipped"] > 0, rep
+from repro.runtime import telemetry as tel
+assert (tel.counter_value("kernel.blocks_skipped_total",
+                          kernel="filter_count") or 0) > 0
+print("OK")
+""")
+
+
+def test_sharded_point_lookup_routes_to_owning_shard():
+    """``get(key)`` on an 8-shard mesh searches only the owning row
+    partition's slice of the clustered key copy — and stays newest-wins
+    correct against tombstoned and upserted keys."""
+    from test_distributed import run_script
+
+    run_script(_SHARDED_PRELUDE + """
+sess = mutated(Session(mesh=make_local_mesh(data=8, model=1),
+                       mode="gspmd", enable_index=False))
+df = AFrame("m", "Mut", session=sess)
+
+row = df.get(123)                         # base matter, shard 0
+assert int(row["id"][0]) == 123
+ph = sess.last_physical
+assert ph.shards == 8, ph.shards          # base laid out over the mesh
+assert 1 <= ph.shard_probes < ph.probed * 8, (ph.probed, ph.shard_probes)
+rep = sess.last_prune_report
+assert rep["shards"] == 8 and rep["shard_probes"] >= 1
+assert "shard-routed" in ph.label()
+
+assert df.get(8200) is None               # run1 tombstone still annihilates
+assert "anti-matter" in sess.last_physical.note
+assert int(df.get(8400)["val"][0]) == 7   # upserted matter wins
+assert int(df.get(20_500)["ts"][0]) == 20_500  # run0 matter
+assert df.get(10**8) is None              # absent: every span short-circuits
+assert sess.last_physical.probed == 0
+print("OK")
+""")
+
+
 # -- read-amplification cost term ---------------------------------------------
 
 

@@ -162,6 +162,48 @@ def test_write_stall_backpressures_writer_not_readers():
             _expected(oracle)
 
 
+def test_proportional_stall_delay_curve():
+    """The AsterixDB-style proportional delay: zero below the warning
+    fraction of the cap, growing linearly with pressure, saturating at the
+    configured maximum (the hard cap itself stays a blocking ceiling)."""
+    from repro.core.physical_planner import STALL_WARN_FRAC
+    from repro.engine.ingest import stall_delay
+
+    assert stall_delay(0.0, 0.1) == 0.0
+    assert stall_delay(STALL_WARN_FRAC - 0.01, 0.1) == 0.0  # under warn
+    assert stall_delay(STALL_WARN_FRAC, 0.1) == 0.0         # curve starts
+    mid = (STALL_WARN_FRAC + 1.0) / 2
+    assert 0.0 < stall_delay(mid, 0.1) < 0.1
+    assert stall_delay(1.0, 0.1) == pytest.approx(0.1)      # cap -> max
+    assert stall_delay(5.0, 0.1) == pytest.approx(0.1)      # saturates
+    assert stall_delay(1.0, 0.0) == 0.0                     # disabled
+    # monotone non-decreasing across the whole pressure range
+    samples = [stall_delay(p, 0.1) for p in np.linspace(0, 2, 41)]
+    assert all(b >= a for a, b in zip(samples, samples[1:]))
+
+
+def test_proportional_stall_slows_writer_before_hard_cap():
+    """Approaching the cap, each flush sleeps a growing delay (soft stalls)
+    instead of running full speed into the hard stall — and the delay is
+    charged to the same stall accounting."""
+    sess, oracle = _setup("gspmd")
+    with lsm.BackgroundCompactor(sess, policy=DEFERRED) as bc:
+        feed = Feed(sess, "Live", "d", flush_rows=8, policy=DEFERRED,
+                    compactor=bc, stall_runs=8, stall_timeout_s=0.15,
+                    stall_delay_s=0.02)
+        for i in range(7):  # run count climbs 1..7: pressure crosses 0.75
+            rows = _rows(np.arange(48 + 8 * i, 56 + 8 * i))
+            feed.push(rows)
+            for k, v, g in zip(rows["k"], rows["v"], rows["g"]):
+                oracle[int(k)] = (int(v), int(g))
+        assert feed.stats["stalls"] == 0          # never hit the ceiling
+        assert feed.stats["soft_stalls"] >= 1     # but did slow down
+        assert feed.stats["stall_s"] > 0.0
+        reader = _session("gspmd", catalog=sess.catalog)
+        assert _observe(AFrame("d", "Live", session=reader)) == \
+            _expected(oracle)
+
+
 def test_background_compactor_retries_through_injected_fault():
     """A mid-merge crash on the worker thread is absorbed by its bounded
     retry loop — the writer never sees it, and the fold still lands."""
