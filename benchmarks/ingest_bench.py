@@ -230,6 +230,73 @@ def _block_skip_sweep(size: str, repeats: int = 5) -> list[dict]:
     return rows
 
 
+def _string_predicate_sweep(size: str, repeats: int = 5) -> list[dict]:
+    """String fast-path sweep (the PR 9 tentpole): equality predicates on a
+    LOW-cardinality clustered string column (dictionary-id lane → lowered
+    onto the filter_count kernel, dict-id zone maps skip blocks) and on a
+    HIGH-cardinality clustered column (past DICT_THRESHOLD: no dict lane,
+    the big-endian prefix lane's zone maps do the skipping), each with the
+    bind-time block test on vs. off. Reports latency, blocks touched, and
+    whether the plan lowered onto the kernel."""
+    from repro.core import physical as PH
+    from repro.engine.table import Table, encode_strings
+
+    base_rows, _, _ = SIZES[size]
+    n = max(base_rows, 8 * 4096)
+    n_blocks = -(-n // 4096)
+    # low cardinality: one tag per zone block (16 distinct << threshold);
+    # high cardinality: sorted unique names (prefix spans are disjoint)
+    lo_tags = ["T%02d" % ((i // 4096) % 16) for i in range(n)]
+    hi_names = ["u%07d" % i for i in range(n)]
+    sess = Session(mode="kernel", enable_index=False)
+    sess.create_dataset("Str", Table({
+        "id": np.arange(n, dtype=np.int32),
+        "tag": encode_strings(lo_tags),
+        "name": encode_strings(hi_names),
+    }), dataverse="bench", primary="id")
+    df = AFrame("bench", "Str", session=sess)
+    rows = []
+    for label, col, lit, want in (
+            ("low-card:dict", "tag", "T03", 4096 * len(
+                [b for b in range(n_blocks) if b % 16 == 3])),
+            ("high-card:prefix", "name", "u%07d" % (4096 * 2 + 7), 1)):
+        cell: dict = {"size": size, "variant": "string_predicate",
+                      "column": col, "cardinality": label.split(":")[0],
+                      "pruning_lane": label.split(":")[1], "n_rows": n,
+                      "blocks_total": n_blocks}
+        for skip in (True, False):
+            sess.enable_block_skip = skip
+            tag = "skipped" if skip else "unskipped"
+            got = len(df[df[col] == lit])  # warm/compile
+            assert got == want, (label, got, want)
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                len(df[df[col] == lit])
+                times.append(time.perf_counter() - t0)
+            rep = sess.last_prune_report
+            cell[tag] = {
+                "query_median_s": round(float(np.median(times)), 5),
+                "blocks_scanned": int(rep["blocks_scanned"]),
+                "blocks_skipped": int(rep["blocks_skipped"]),
+            }
+        sess.enable_block_skip = True
+        cell["kernel_lowered"] = any(
+            isinstance(nd, PH.KernelRangeCount)
+            for nd in PH.walk(sess.last_physical))
+        s, u = cell["skipped"], cell["unskipped"]
+        cell["query_speedup"] = round(
+            u["query_median_s"] / max(s["query_median_s"], 1e-9), 2)
+        print(f"  {size:>2} string_predicate {label:<16} blocks "
+              f"{u['blocks_scanned']} -> {s['blocks_scanned']} "
+              f"of {n_blocks}  kernel={cell['kernel_lowered']}  query "
+              f"{u['query_median_s']*1e3:.2f} -> "
+              f"{s['query_median_s']*1e3:.2f} ms "
+              f"({cell['query_speedup']}x)")
+        rows.append(cell)
+    return rows
+
+
 def _block_skip_sharded_sweep(size: str, repeats: int = 5,
                               devices: int = 8) -> list[dict]:
     """Multi-shard variant of the block-skip sweep: the same clustered
@@ -537,6 +604,7 @@ def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[d
         rows.append({"size": size, "variant": "speedup",
                      "ingest_speedup": round(speedup, 2)})
         rows.extend(_block_skip_sweep(size))
+        rows.extend(_string_predicate_sweep(size))
         rows.extend(_block_skip_sharded_sweep(size))
         rows.extend(_mutation_sweep(size))
         rows.extend(_serving_sweep(size))

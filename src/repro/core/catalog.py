@@ -39,7 +39,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.table import ColumnMeta, Table
+from repro.engine.table import ColumnMeta, Table, is_lane_column
 from repro.runtime import telemetry as tel
 
 # Engine-internal per-row columns that must never surface in query envs,
@@ -117,6 +117,12 @@ class Dataset:
     # The current manifest for a *registered base* dataset (None for run
     # components). Swapped atomically by Catalog.publish — never mutated.
     manifest: Optional["Manifest"] = None
+    # True for components whose device buffers the ENGINE built and owns
+    # exclusively (flush-built runs, compaction-built bases): only these are
+    # eagerly device-deleted by the retired-manifest reclamation sweep. A
+    # user-loaded base may share its arrays with the caller's Table, so it
+    # is left to ordinary Python GC.
+    engine_owned: bool = False
 
     @property
     def runs(self) -> list["Dataset"]:
@@ -193,6 +199,25 @@ def component_nbytes(ds: Dataset) -> int:
     return total
 
 
+def _delete_component_buffers(ds: Dataset) -> None:
+    """Eagerly free one component's device buffers (table columns, anti-key
+    array, index payloads). Host-side copies (``host_keys``,
+    ``host_anti_keys``, annihilation sets) are left alone — they are cheap
+    and point lookups on OTHER components never read a retired one."""
+    import jax
+
+    arrays = list(ds.table.columns.values())
+    if ds.anti_keys_arr is not None:
+        arrays.append(ds.anti_keys_arr)
+    for ix in ds.indexes.values():
+        for arr in (ix.sorted_keys, ix.row_ids, ix.zone_min, ix.zone_max):
+            if arr is not None:
+                arrays.append(arr)
+    for a in arrays:
+        if isinstance(a, jax.Array) and not a.is_deleted():
+            a.delete()
+
+
 def _resolve_run(manifest: Manifest, dataverse: str, base_name: str,
                  comp: str) -> Dataset:
     """Resolve a stable-id component address suffix ("run<uid>") against one
@@ -259,9 +284,10 @@ class Snapshot:
         with self._catalog._lock:
             for m in self._manifests.values():
                 m.pins -= 1
-        # refresh the GC-visibility gauges only when something is actually
-        # retired — the common query path (nothing to reclaim) stays free
+        # reclaim + refresh the GC-visibility gauges only when something is
+        # actually retired — the common query path (nothing to do) stays free
         if self._catalog._retired:
+            self._catalog._reclaim()
             self._catalog.gc_stats()
 
     def __enter__(self) -> "Snapshot":
@@ -347,6 +373,7 @@ class Catalog:
             tel.inc("catalog.publishes_total")
             if old_manifest is not None and old_manifest is not m:
                 tel.inc("catalog.manifests_retired_total")
+            self._reclaim()
             self.gc_stats()
             return m
 
@@ -390,7 +417,47 @@ class Catalog:
                     self._retired[id(ds.manifest)] = ds.manifest
                     tel.inc("catalog.manifests_retired_total")
                 self.bump_stats_epoch()
+                self._reclaim()
                 self.gc_stats()
+
+    def _reclaim(self) -> None:
+        """Active retired-manifest reclamation (the second half of the PR 6
+        follow-up — gc_stats is the visibility half): delete the device
+        buffers of components reachable ONLY through retired, UNPINNED
+        manifests, and drop those manifests from the retired set. Runs on
+        every publish/drop/snapshot-release, so
+        ``catalog.retired_component_bytes`` falls back to ~0 as soon as the
+        last reader releases — no reliance on the Python GC ever collecting
+        the weakly-held manifest objects. Protected components (present in
+        a current manifest, or in ANY still-pinned retired manifest) are
+        never touched; byte counts are captured before deletion."""
+        with self._lock:
+            protected: set[int] = set()
+            for ds in self._datasets.values():
+                if ds.manifest is not None:
+                    for comp in ds.manifest.components:
+                        protected.add(id(comp))
+            for m in list(self._retired.values()):
+                if m.pins > 0:
+                    for comp in m.components:
+                        protected.add(id(comp))
+            comps_freed = bytes_freed = 0
+            for mid, m in list(self._retired.items()):
+                if m.pins > 0:
+                    continue
+                for comp in m.components:
+                    if id(comp) in protected:
+                        continue
+                    protected.add(id(comp))  # shared across retired: once
+                    if not comp.engine_owned:
+                        continue  # may share buffers with a caller's Table
+                    bytes_freed += component_nbytes(comp)
+                    comps_freed += 1
+                    _delete_component_buffers(comp)
+                self._retired.pop(mid, None)
+        if comps_freed:
+            tel.inc("catalog.reclaimed_components_total", comps_freed)
+            tel.inc("catalog.reclaimed_bytes_total", bytes_freed)
 
     def gc_stats(self) -> dict:
         """The PR 6 GC-visibility follow-up, measured: walk the still-alive
@@ -443,7 +510,11 @@ def open_widen(table: Table) -> Table:
     meta = {}
     for name, col in table.columns.items():
         m = table.meta[name]
-        if col.ndim == 1 and jnp.issubdtype(col.dtype, jnp.integer) and name != "__valid__":
+        # derived string lanes stay integer even in an open dataset: they are
+        # engine internals (dict ids feed int32 kernels, prefixes feed zone
+        # maps), not user values paying the schema-on-read cast.
+        if col.ndim == 1 and jnp.issubdtype(col.dtype, jnp.integer) \
+                and name != "__valid__" and not is_lane_column(name):
             cols[name] = col.astype(jnp.float32)
             meta[name] = ColumnMeta(np.dtype(np.float32), m.lo, m.hi, m.distinct,
                                     m.is_string, m.sorted_ascending)

@@ -356,11 +356,15 @@ def profile_physical(phys: PH.PhysOp, ctx: ExecContext, tables: dict,
 
 
 def _env_of(cols: dict, open_cast: bool):
+    from repro.engine.table import is_lane_column
+
     env = {k: v for k, v in cols.items()
            if k not in INTERNAL_COLUMNS and not k.startswith("__ix")}
-    if open_cast:  # schema-on-read: pay a widen/cast per access
+    if open_cast:  # schema-on-read: pay a widen/cast per access — but the
+        # derived string lanes stay integer (dict-id remaps index with them)
         env = {k: (v.astype(jnp.float32) if jnp.issubdtype(v.dtype, jnp.integer)
-                   and v.ndim == 1 else v) for k, v in env.items()}
+                   and v.ndim == 1 and not is_lane_column(k) else v)
+               for k, v in env.items()}
     mask = cols.get("__valid__",
                     jnp.ones((next(iter(env.values())).shape[0],), jnp.bool_))
     return env, mask
@@ -494,6 +498,27 @@ def _lower_stream(node: PH.PhysOp, ctx: ExecContext) -> Callable:
             return env, jnp.concatenate(masks, axis=0)
         return fn
 
+    if isinstance(node, PH.DictRemapCols):
+        child = _lower_stream(node.children[0], ctx)
+        key, lane = node.key, node.lane
+        remap = np.asarray(node.remap, np.int32)
+
+        def fn(tables, params):
+            env, mask = child(tables, params)
+            env = dict(env)
+            lane_col = env.pop(lane)
+            if remap.size == 0:
+                # empty local dictionary: the component has no live string
+                # rows, so every row is masked — any id is fine.
+                env[key] = jnp.zeros_like(lane_col)
+            else:
+                # dead rows carry id -1: clamp to 0 — they map to SOME valid
+                # union id, but their mask is False so they weigh nothing.
+                env[key] = jnp.take(jnp.asarray(remap),
+                                    jnp.maximum(lane_col, 0).astype(jnp.int32))
+            return env, mask
+        return fn
+
     if isinstance(node, PH.FullScanFilter):
         child = _lower_stream(node.children[0], ctx)
 
@@ -572,14 +597,35 @@ def _lower_groupagg(node, ctx: ExecContext) -> Callable:
     aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
     if isinstance(node, PH.KernelSegmentAgg):
         comps = [_lower_stream(c, ctx) for c in node.children]
-        return _lower_kernel_segment_agg(node, ctx, comps, aggs)
+        inner = _lower_kernel_segment_agg(node, ctx, comps, aggs)
+    else:
+        child = _lower_stream(node.children[0], ctx)
+        key, lo, num_groups = node.key, node.lo, node.num_groups
 
-    child = _lower_stream(node.children[0], ctx)
-    key, lo, num_groups = node.key, node.lo, node.num_groups
+        def inner(tables, params):
+            env, mask = child(tables, params)
+            return ctx.strategy.group_agg(env, mask, key, lo, num_groups, aggs)
+
+    key_values = getattr(node, "key_values", None)
+    if key_values is None:
+        return inner
+
+    # string group-by: the machinery above grouped over union-dictionary ids
+    # (DictRemapCols remapped each component below the concat). Decode the
+    # surviving ids back to the encoded (G, 16) string rows at the result
+    # boundary — identical in all three modes because every path returns the
+    # group id itself as the key column.
+    from repro.engine.table import encode_strings
+
+    enc = np.asarray(encode_strings(list(key_values)))
+    out_key = node.key
 
     def fn(tables, params):
-        env, mask = child(tables, params)
-        return ctx.strategy.group_agg(env, mask, key, lo, num_groups, aggs)
+        out, gmask = inner(tables, params)
+        out = dict(out)
+        out[out_key] = jnp.take(jnp.asarray(enc),
+                                out[out_key].astype(jnp.int32), axis=0)
+        return out, gmask
     return fn
 
 

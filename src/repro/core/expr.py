@@ -187,6 +187,43 @@ class Compare(Expr):
         return f"cmp({self.op},{self.children[0].fingerprint()},{self.children[1].fingerprint()})"
 
 
+class IsIn(Expr):
+    """Membership against a literal set — SQL++ ``IN [...]`` (pandas
+    ``Series.isin``). Values are ordinary ``Lit`` children, so plan-cache
+    parameterization, fingerprinting, and literal rebinding all apply; the
+    kernel planner lowers a string ``isin`` onto per-value dict-id range
+    counts."""
+
+    def __init__(self, child: Expr, values: Sequence[Expr]):
+        self.children = (child,) + tuple(values)
+
+    @property
+    def values(self) -> tuple[Expr, ...]:
+        return self.children[1:]
+
+    def evaluate(self, env, params):
+        a = self.children[0].evaluate(env, params)
+        out = None
+        for v in self.values:
+            b = v.evaluate(env, params)
+            if a.ndim == 2 or (hasattr(b, "ndim") and b.ndim == 2):
+                hit = jnp.all(a == b, axis=-1)
+            else:
+                hit = a == b
+            out = hit if out is None else (out | hit)
+        if out is None:  # empty value set matches nothing
+            return jnp.zeros(a.shape[:1], dtype=jnp.bool_)
+        return out
+
+    def to_sql(self):
+        vals = ", ".join(v.to_sql() for v in self.values)
+        return f"{self.children[0].to_sql()} IN [{vals}]"
+
+    def fingerprint(self):
+        inner = ",".join(c.fingerprint() for c in self.children)
+        return f"isin({inner})"
+
+
 class BoolOp(Expr):
     def __init__(self, op: str, left: Expr, right: Expr):
         assert op in ("AND", "OR")

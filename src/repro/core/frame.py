@@ -17,8 +17,8 @@ from typing import Any, Callable, Optional, Sequence
 import numpy as np
 
 from repro.core import plan as P
-from repro.core.expr import (Arith, Col, Compare, ElementwiseUDF, Expr, IsKnown,
-                             Lit, ModelUDF, StrLower, StrUpper, wrap)
+from repro.core.expr import (Arith, Col, Compare, ElementwiseUDF, Expr, IsIn,
+                             IsKnown, Lit, ModelUDF, StrLower, StrUpper, wrap)
 
 
 class ColumnExpr:
@@ -84,6 +84,13 @@ class ColumnExpr:
 
     def notna(self) -> "ColumnExpr":
         return self._wrap(IsKnown(self.expr), self.name)
+
+    def isin(self, values: Sequence[Any]) -> "ColumnExpr":
+        """Membership filter (pandas ``Series.isin`` / SQL++ ``IN``); on a
+        dictionary-encoded string column this lowers onto per-value dict-id
+        kernel range counts."""
+        return self._wrap(IsIn(self.expr,
+                               [wrap(_unbox(v)) for v in values]), self.name)
 
     def map(self, fn: Any, name: Optional[str] = None) -> "ColumnExpr":
         """Apply a function elementwise — the paper's §III-C UDF application.
@@ -238,8 +245,10 @@ class AFrame:
             if isinstance(node, (P.Scan,)):
                 ds = self._session.catalog.get(node.dataverse, node.dataset)
                 from repro.core.catalog import INTERNAL_COLUMNS
+                from repro.engine.table import is_lane_column
                 return [c for c in ds.table.column_names()
-                        if c not in INTERNAL_COLUMNS]
+                        if c not in INTERNAL_COLUMNS
+                        and not is_lane_column(c)]
             if not node.children:
                 raise ValueError("cannot infer columns")
             node = node.children[0]

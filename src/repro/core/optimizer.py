@@ -239,14 +239,21 @@ def _prune_columns(node: P.Plan, catalog: Catalog, needed: set[str] | None = Non
         if needed is None:
             return node
         from repro.core.catalog import INTERNAL_COLUMNS
+        from repro.engine.table import dict_lane_name, is_lane_column
 
         ds = catalog.get(node.dataverse, node.dataset)
-        cols = [c for c in ds.table.column_names()
-                if c in needed and c not in INTERNAL_COLUMNS]
-        if set(cols) >= set(n for n in ds.table.column_names()
-                            if n not in INTERNAL_COLUMNS):
+        names = ds.table.column_names()
+        cols = [c for c in names
+                if c in needed and c not in INTERNAL_COLUMNS
+                and not is_lane_column(c)]
+        if set(cols) >= set(n for n in names if n not in INTERNAL_COLUMNS
+                            and not is_lane_column(n)):
             return node
-        return P.Project(node, [(c, Col(c)) for c in cols])
+        # keep the selected string columns' dict lanes riding along: the
+        # kernel group-by remap (DictRemapCols) reads them from the env.
+        lanes = [dict_lane_name(c) for c in cols
+                 if dict_lane_name(c) in names]
+        return P.Project(node, [(c, Col(c)) for c in cols + lanes])
 
     if isinstance(node, P.Project):
         child_needed = set()

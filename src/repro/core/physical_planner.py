@@ -47,10 +47,12 @@ import numpy as np
 from repro.core import physical as PH
 from repro.core import plan as P
 from repro.core.catalog import Catalog
-from repro.core.expr import Col, Compare, Expr, Lit
+from repro.core.expr import Col, Compare, Expr, IsIn, Lit
 from repro.core.optimizer import (_RANGE_MAX, _RANGE_MIN, _range_bounds,
                                   _split_conjuncts)
 from repro.core.stats import ColumnStats, TableStats, harvest
+from repro.engine.table import (canon_string, dict_lane_name, encode_strings,
+                                pack_prefix, prefix_lane_name)
 from repro.runtime import telemetry as tel
 
 # -- cost model --------------------------------------------------------------
@@ -90,6 +92,15 @@ STALL_WARN_FRAC = 0.75
 def _conjunct_selectivity(c: Expr, stats: TableStats) -> float:
     """Deterministic textbook selectivity from stats alone (literal values
     are runtime params — the executable must not depend on them)."""
+    if isinstance(c, IsIn):
+        l = c.children[0]
+        if not isinstance(l, Col):
+            return 1.0
+        k = len(c.values)
+        cs = stats.column(l.name)
+        if cs is not None and cs.distinct:
+            return min(k / max(cs.distinct, 1), 1.0)
+        return min(k * DEFAULT_EQ_SELECTIVITY, 1.0)
     if not isinstance(c, Compare):
         return 1.0
     l, r = c.children
@@ -117,25 +128,52 @@ def _filter_selectivity(pred: Optional[Expr], stats: TableStats) -> float:
 # -- bind-time zone-map pruning ----------------------------------------------
 
 
+def _prefix_xform(v):
+    """Bind-time transform for string constraints routed through a
+    ``__pfx_<col>`` lane: the big-endian pack of the literal's first
+    PREFIX_BYTES encoded bytes. Order-preserving over the space-padded
+    encoding, so span tests against prefix-lane zone maps are conservative-
+    correct for ==/IN (a prefix miss proves the full string cannot match).
+    Non-string values return None — the constraint then simply doesn't
+    apply (literal rebinding may swap a string for an int)."""
+    if not isinstance(v, str):
+        return None
+    return int(pack_prefix(encode_strings([v]))[0])
+
+
 @dataclasses.dataclass(frozen=True)
 class _Constraint:
     """One ``col <op> lit`` conjunct constraining a union component. ``ref``
     resolves the literal at bind time: ("raw", i) reads the i-th literal of
-    the raw plan, ("const", v) is a plan constant."""
+    the raw plan, ("const", v) is a plan constant. Op "in" carries a
+    ("many", (ref, ...)) set — it excludes only when EVERY member misses.
+    ``xform`` (prefix-lane twins) maps each resolved value into the lane's
+    integer domain before the interval tests."""
 
     column: str
     op: str
     ref: tuple
+    xform: object = None
 
     def value(self, raw_values: list):
         kind, v = self.ref
-        return raw_values[v] if kind == "raw" else v
+        if kind == "many":
+            vals = tuple(raw_values[i] if k == "raw" else i for k, i in v)
+            if self.xform is not None:
+                vals = tuple(self.xform(x) for x in vals)
+                if any(x is None for x in vals):
+                    return None
+            return vals
+        out = raw_values[v] if kind == "raw" else v
+        return self.xform(out) if self.xform is not None else out
 
     def excludes(self, span: tuple, v) -> bool:
         """True when the component's zone span proves zero matching rows."""
         lo, hi = span
         if self.op == "==":
             return v < lo or v > hi
+        if self.op == "in":
+            return all(x < lo or x > hi for x in v)
         if self.op == ">=":
             return hi < v
         if self.op == ">":
@@ -153,6 +191,11 @@ class _Constraint:
         lo, hi = spans[:, 0], spans[:, 1]
         if self.op == "==":
             return (lo <= v) & (v <= hi)
+        if self.op == "in":
+            keep = np.zeros(spans.shape[0], bool)
+            for x in v:
+                keep |= (lo <= x) & (x <= hi)
+            return keep
         if self.op == ">=":
             return hi >= v
         if self.op == ">":
@@ -164,6 +207,8 @@ class _Constraint:
         return np.ones(spans.shape[0], bool)
 
     def bound_repr(self, v) -> tuple:
+        if self.op == "in":
+            return (min(v), max(v)) if v else ("∅", "∅")
         return {"==": (v, v), ">=": (v, "+∞"), ">": (f">{v}", "+∞"),
                 "<=": ("-∞", v), "<": ("-∞", f"<{v}")}[self.op]
 
@@ -238,6 +283,15 @@ class PruneDecisions:
 NO_PRUNE = PruneDecisions({})
 
 
+def _numeric(v) -> bool:
+    """Bind-time type gate for the interval tests: a scalar number, or (op
+    "in") a non-empty tuple of numbers. A rebound literal of any other type
+    (or an xform that refused it) silently opts the constraint out."""
+    if isinstance(v, tuple):
+        return len(v) > 0 and all(_numeric(x) for x in v)
+    return isinstance(v, (int, float, np.integer, np.floating))
+
+
 class Pruner:
     """Extracted once per (optimized plan, stats epoch); ``decide`` is the
     cheap per-execution pass (pure interval arithmetic on python scalars,
@@ -267,8 +321,7 @@ class Pruner:
                         if span is None:
                             continue
                         v = con.value(raw_values)
-                        if not isinstance(v, (int, float, np.integer,
-                                              np.floating)):
+                        if v is None or not _numeric(v):
                             continue
                         if con.excludes(span, v):
                             record = PH.PrunedComponent(
@@ -297,8 +350,7 @@ class Pruner:
                     if spans is None:
                         continue
                     v = con.value(raw_values)
-                    if not isinstance(v, (int, float, np.integer,
-                                          np.floating)):
+                    if v is None or not _numeric(v):
                         continue
                     applied = True
                     keep &= con.block_keep(spans, v)
@@ -387,6 +439,16 @@ def _scan_constraints(opt: P.Plan, lit_ref) -> dict[int, list[_Constraint]]:
             continue
         scan = cur
         for c in _split_conjuncts(pred):
+            if isinstance(c, IsIn):
+                l = c.children[0]
+                if isinstance(l, Col) and c.values \
+                        and all(isinstance(v, Lit) for v in c.values):
+                    origin = _origin_column(node.children[0], l.name)
+                    if origin is not None:
+                        out.setdefault(id(scan), []).append(_Constraint(
+                            origin, "in",
+                            ("many", tuple(lit_ref(v) for v in c.values))))
+                continue
             if not isinstance(c, Compare):
                 continue
             l, r = c.children
@@ -397,6 +459,26 @@ def _scan_constraints(opt: P.Plan, lit_ref) -> dict[int, list[_Constraint]]:
             if origin is not None:
                 out.setdefault(id(scan), []).append(
                     _Constraint(origin, c.op, lit_ref(r)))
+    return out
+
+
+def _expand_string_constraints(cons, stats: TableStats) -> list[_Constraint]:
+    """String ==/IN conjuncts prune through the ``__pfx_<col>`` lane: emit a
+    twin constraint on the lane with the prefix-pack bind-time transform.
+    Component-independent by construction (the pack is a pure function of
+    the literal), unlike dict ids, which are per-component — so prefix lanes
+    are the ONLY string pruning route here."""
+    out = list(cons)
+    for c in cons:
+        if c.op not in ("==", "in") or c.xform is not None:
+            continue
+        cs = stats.column(c.column)
+        if cs is None or not cs.is_string:
+            continue
+        lane = prefix_lane_name(c.column)
+        if stats.column(lane) is None:
+            continue
+        out.append(dataclasses.replace(c, column=lane, xform=_prefix_xform))
     return out
 
 
@@ -445,8 +527,9 @@ def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list,
                 continue
             spans = {name: cs.span for name, cs in stats.columns.items()
                      if cs.span is not None and not cs.is_string}
-            constraints = [c for c in per_scan.get(id(scan), ())
-                           if c.column in spans]
+            cons_all = _expand_string_constraints(
+                per_scan.get(id(scan), ()), stats)
+            constraints = [c for c in cons_all if c.column in spans]
             comps.append(_CompDesc(stats.address, stats.rows, spans,
                                    constraints, prunable=True,
                                    tombstones=stats.tombstones))
@@ -468,6 +551,7 @@ def build_pruner(opt: P.Plan, catalog: Catalog, raw_lits: list,
             continue  # a single block can never be skipped
         if bz.n_shards != max(n_shards, 1):
             continue  # zone layout predates the mesh: ids would be wrong
+        cons = _expand_string_constraints(cons, stats)
         usable = [c for c in cons if c.column in bz.spans]
         if usable:
             scan_descs.append(_ScanDesc(scan_ords[id(node)], stats.address,
@@ -977,7 +1061,7 @@ def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
                 if krc is not None:
                     krc.est_rows = max(stats.rows * sel, 1)
                     krc.rows_touched = stats.padded_rows
-                    notes = []
+                    notes = [krc.note] if krc.note else []
                     if krc.block_ids is not None:
                         # the kernel grid visits only surviving blocks: the
                         # launch cost scales with blocks scanned, not total.
@@ -996,6 +1080,23 @@ def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
                                      f"tombstone(s) into one kernel row")
                     krc.note = " — ".join(notes)
                     candidates.append(krc)
+                kic = _try_kernel_isin_count(inner, pred, stats, ctx,
+                                             key_col if shadow else None,
+                                             shadow)
+                if kic is not None:
+                    for kid in kic.children:
+                        rt = stats.padded_rows
+                        if kid.block_ids is not None:
+                            rt = min(stats.padded_rows,
+                                     len(kid.block_ids) * kid.zone_block)
+                        kid.rows_touched = rt
+                        kid.est_rows = max(
+                            stats.rows * sel / len(kic.children), 1)
+                        kid.cost = C_KERNEL_LAUNCH + rt * C_ROW_KERNEL \
+                            + n_anti * C_TOMBSTONE
+                    kic.est_rows = max(stats.rows * sel, 1)
+                    kic.cost = 0.5 * len(kic.children)
+                    candidates.append(kic)
 
     generic = PH.MaskCount(_plan_stream(child, ctx), pred)
     gstats = _leaf_stats(generic, ctx)
@@ -1014,6 +1115,58 @@ def _plan_count(node: P.FilterCount, ctx: _PlannerCtx) -> PH.PhysOp:
     return best
 
 
+def _dict_lane_stats(stats: TableStats, col: str) -> Optional[ColumnStats]:
+    """The ``__dict_<col>`` lane's stats when the component dictionary-
+    encodes ``col`` AND the lane passes the filter_count int32 proof
+    (ids are 0..G-1, so the proof only fails on an empty dictionary)."""
+    cs = stats.column(col)
+    if cs is None or not cs.is_string or cs.dict_values is None:
+        return None
+    lcs = stats.column(dict_lane_name(col))
+    if lcs is None or not np.issubdtype(lcs.dtype, np.integer) \
+            or lcs.lo is None or lcs.hi is None \
+            or lcs.lo < _RANGE_MIN or lcs.hi > _RANGE_MAX:
+        return None
+    return lcs
+
+
+def _dict_eq_binders(values: tuple):
+    """lo/hi bind-time transforms for ``col == lit`` on the dict-id lane:
+    a present literal binds both bounds to its id; an absent one binds the
+    empty range [1, 0] — the kernel then counts zero rows, exactly what the
+    full-width comparison would. Literals are canonicalized to stored form
+    first (ascii, width-truncated, padding stripped) so e.g. a
+    trailing-space literal binds to the same id its encoded row matches."""
+    pos = {v: i for i, v in enumerate(values)}
+
+    def lo(v):
+        return pos.get(canon_string(v), 1)
+
+    def hi(v):
+        return pos.get(canon_string(v), 0)
+
+    return lo, hi
+
+
+def _isin_binders(pos: dict, j: int):
+    """lo/hi transforms for member ``j`` of an IN list. Each binder sees ALL
+    sibling values, so a duplicate of an earlier member (or an absent value)
+    binds the empty range — per-member counts stay disjoint and their sum
+    never double-counts. Members are compared in canonical stored form, so
+    two spellings that encode to the same row count as duplicates."""
+    def lo(*vals):
+        v = canon_string(vals[j])
+        return 1 if v in map(canon_string, vals[:j]) or v not in pos \
+            else pos[v]
+
+    def hi(*vals):
+        v = canon_string(vals[j])
+        return 0 if v in map(canon_string, vals[:j]) or v not in pos \
+            else pos[v]
+
+    return lo, hi
+
+
 def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
                             ctx: _PlannerCtx,
                             key_col: Optional[str] = None,
@@ -1021,10 +1174,14 @@ def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
                             ) -> Optional[PH.KernelRangeCount]:
     """COUNT whose predicate fully decomposes into ``Col {==,>=,<=} Lit``
     conjuncts on int32-provable integer columns → filter_count kernel.
-    Partial matches never fuse (graceful fallback to the mask path)."""
+    String equality on a dictionary-encoded column joins the fast path as
+    an ordinary int conjunct on the ``__dict_<col>`` id lane (the literal
+    binds to its sorted-dictionary id). Partial matches never fuse
+    (graceful fallback to the mask path)."""
     cols: list[str] = []
     los: list[Expr] = []
     his: list[Expr] = []
+    notes: list[str] = []
     for c in _split_conjuncts(pred):
         if not isinstance(c, Compare):
             return None
@@ -1032,7 +1189,27 @@ def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
         if not (isinstance(l, Col) and isinstance(r, Lit)):
             return None
         cs = stats.column(l.name)
-        if cs is None or cs.is_string or not np.issubdtype(cs.dtype, np.integer):
+        if cs is None:
+            return None
+        if cs.is_string:
+            if c.op != "==" or not isinstance(r.value, str) \
+                    or _dict_lane_stats(stats, l.name) is None:
+                return None
+            blo, bhi = _dict_eq_binders(cs.dict_values)
+            lo = Lit(blo(r.value))
+            lo.binder, lo.sources = blo, (r,)
+            hi = Lit(bhi(r.value))
+            hi.binder, hi.sources = bhi, (r,)
+            i = blo(r.value)
+            notes.append(
+                f"dict lane {dict_lane_name(l.name)}: {l.name} == "
+                f"{r.value!r} → id "
+                f"{i if i <= bhi(r.value) else '∅'}/{len(cs.dict_values)}")
+            cols.append(dict_lane_name(l.name))
+            los.append(lo)
+            his.append(hi)
+            continue
+        if not np.issubdtype(cs.dtype, np.integer):
             return None
         # the kernel evaluates on int32 tiles: column bounds must prove the
         # cast lossless, or wider-int values wrap and counts corrupt.
@@ -1061,10 +1238,81 @@ def _try_kernel_range_count(scan: P.Scan, pred: Expr, stats: TableStats,
     out = PH.KernelRangeCount(scan.dataverse, scan.dataset, cols, los, his,
                               has_valid, key_col=key_col,
                               shadow_sources=shadow_sources)
+    if notes:
+        out.note = "; ".join(notes)
     bz = stats.block_zones
     if bz is not None:
         out.set_blocks(ctx.scan_blocks(scan), bz.block, bz.n_blocks,
                        n_shards=bz.n_shards, rows_per_shard=bz.rows_per_shard)
+    return out
+
+
+def _try_kernel_isin_count(scan: P.Scan, pred: Expr, stats: TableStats,
+                           ctx: _PlannerCtx,
+                           key_col: Optional[str] = None,
+                           shadow_sources: tuple = ()
+                           ) -> Optional[PH.MergeScalars]:
+    """COUNT(col IN [...]) on a dictionary-encoded string column → one
+    filter_count launch per member on the ``__dict_<col>`` id lane, partial
+    counts summed. Dict ids partition rows, so the sum never double-counts;
+    duplicate or absent members bind the empty range and contribute zero."""
+    conjuncts = _split_conjuncts(pred)
+    if len(conjuncts) != 1 or not isinstance(conjuncts[0], IsIn):
+        return None
+    e = conjuncts[0]
+    l = e.children[0]
+    vals = e.values
+    if not (isinstance(l, Col) and vals
+            and all(isinstance(v, Lit) and isinstance(v.value, str)
+                    for v in vals)):
+        return None
+    cs = stats.column(l.name)
+    if _dict_lane_stats(stats, l.name) is None:
+        return None
+    lane = dict_lane_name(l.name)
+    ds = ctx.catalog.get(scan.dataverse, scan.dataset)
+    has_valid = "__valid__" in ds.table.columns
+    pos = {v: i for i, v in enumerate(cs.dict_values)}
+    sources = tuple(vals)
+    cur = tuple(v.value for v in vals)
+    bz = stats.block_zones
+    lane_spans = np.asarray(bz.span_of(lane)) if bz is not None else None
+    sblocks = ctx.scan_blocks(scan) if bz is not None else None
+    kids: list[PH.PhysOp] = []
+    for j in range(len(vals)):
+        blo, bhi = _isin_binders(pos, j)
+        mlo, mhi = blo(*cur), bhi(*cur)
+        lo = Lit(mlo)
+        lo.binder, lo.sources = blo, sources
+        hi = Lit(mhi)
+        hi.binder, hi.sources = bhi, sources
+        kid = PH.KernelRangeCount(scan.dataverse, scan.dataset, [lane],
+                                  [lo], [hi], has_valid, key_col=key_col,
+                                  shadow_sources=shadow_sources)
+        if bz is not None:
+            # per-member refinement: this launch only visits blocks whose
+            # dict-id zone span contains ITS member's id (a duplicate or
+            # absent member binds the empty range — nothing survives, the
+            # min-one-block guard keeps the grid non-empty). Block lists
+            # are in the prune signature, so a re-bind with different
+            # literals replans rather than reusing a stale grid.
+            cands = sblocks if sblocks is not None else range(bz.n_blocks)
+            keep = None
+            if lane_spans is not None:
+                keep = tuple(b for b in cands
+                             if lane_spans[b, 0] <= mhi
+                             and mlo <= lane_spans[b, 1]) or (0,)
+            elif sblocks is not None:
+                keep = tuple(sblocks)
+            kid.set_blocks(keep, bz.block, bz.n_blocks,
+                           n_shards=bz.n_shards,
+                           rows_per_shard=bz.rows_per_shard)
+        kids.append(kid)
+    out = PH.MergeScalars(kids, [("count", "sum")], ())
+    ids = [pos.get(v) for v in cur]
+    out.note = (f"dict lane {lane}: {l.name} IN {list(cur)!r} → ids "
+                f"{ids} ({len(kids)} filter_count launch(es), partials "
+                f"summed)")
     return out
 
 
@@ -1191,11 +1439,75 @@ def _kernel_groupagg_exact(node: P.GroupAgg, ctx: _PlannerCtx, aggs) -> bool:
     return True
 
 
+def _string_group_setup(node: P.GroupAgg, child: PH.PhysOp, key: str,
+                        ctx: _PlannerCtx):
+    """String group-by over dictionary-encoded components: build the UNION
+    dictionary U (byte-lex sorted — ASCII str-sort over the space-padded
+    encoding) and wrap every physical component in a ``DictRemapCols`` that
+    rewrites its local dict ids into positions in U *below* the union
+    concat. The group-by then runs over the int domain [0, |U|) on the
+    existing segment-reduce/segment_agg machinery; ``key_values`` decodes
+    surviving ids back to strings at the result boundary. None when the key
+    isn't a stored dictionary-encoded string column on every component."""
+    top = node.children[0]
+    origins = {_origin_column(c, key) for c in top.children} \
+        if isinstance(top, P.UnionRuns) else {_origin_column(top, key)}
+    if origins != {key}:
+        return None  # renamed/computed key: lane names would not line up
+    comps = list(child.children) if isinstance(child, PH.PrunedUnionRuns) \
+        else [child]
+    dicts: list[tuple] = []
+    family = None
+    for c in comps:
+        skey = None
+        for leaf in PH.walk(c):
+            skey = getattr(leaf, "source_key", None)
+            if skey is not None:
+                break
+        if skey is None:
+            return None
+        stats = ctx.stats(*skey)
+        cs = stats.column(key) if stats is not None else None
+        if cs is None or not cs.is_string or cs.dict_values is None:
+            return None
+        fam = (skey[0], skey[1].split("@")[0])
+        if family is None:
+            family = fam
+        elif fam != family:
+            return None
+        dicts.append(tuple(cs.dict_values))
+    union: set = set()
+    for d in dicts:
+        union.update(d)
+    if not union:
+        return None  # no live string anywhere: stay on the generic raise
+    U = sorted(union)
+    upos = {v: i for i, v in enumerate(U)}
+    lane = dict_lane_name(key)
+    wrapped: list[PH.PhysOp] = []
+    for c, d in zip(comps, dicts):
+        w = PH.DictRemapCols(c, key, lane, tuple(upos[v] for v in d))
+        w.est_rows = c.est_rows
+        w.cost = c.est_rows * 0.05
+        wrapped.append(w)
+    return wrapped, tuple(U)
+
+
 def _plan_groupagg(node: P.GroupAgg, ctx: _PlannerCtx) -> PH.PhysOp:
     assert len(node.keys) == 1, "single-key group-by (paper expressions 4/8)"
     key = node.keys[0]
     child = _plan_stream(node.children[0], ctx)
-    lo, num_groups = _group_domain(child, key, ctx)
+    key_values = None
+    setup = _string_group_setup(node, child, key, ctx)
+    if setup is not None:
+        wrapped, key_values = setup
+        if isinstance(child, PH.PrunedUnionRuns):
+            child.children = tuple(wrapped)  # remap BELOW the concat
+        else:
+            child = wrapped[0]
+        lo, num_groups = 0, len(key_values)
+    else:
+        lo, num_groups = _group_domain(child, key, ctx)
     aggs = [(s.out_name, s.op, s.column) for s in node.aggs]
 
     if ctx.kernels \
@@ -1204,7 +1516,8 @@ def _plan_groupagg(node: P.GroupAgg, ctx: _PlannerCtx) -> PH.PhysOp:
             and _kernel_groupagg_exact(node, ctx, aggs):
         comps = list(child.children) if isinstance(child, PH.PrunedUnionRuns) \
             else [child]
-        out = PH.KernelSegmentAgg(comps, key, lo, num_groups, node.aggs)
+        out = PH.KernelSegmentAgg(comps, key, lo, num_groups, node.aggs,
+                                  key_values=key_values)
         if isinstance(child, PH.PrunedUnionRuns):
             out.pruned = child.pruned
             out.note = child.note
@@ -1239,7 +1552,8 @@ def _plan_groupagg(node: P.GroupAgg, ctx: _PlannerCtx) -> PH.PhysOp:
             "f32 exactness proven from stats: segment_agg kernel"
         return out
 
-    out = PH.GroupAggGeneric(child, key, lo, num_groups, node.aggs)
+    out = PH.GroupAggGeneric(child, key, lo, num_groups, node.aggs,
+                             key_values=key_values)
     out.est_rows = num_groups
     out.cost = child.est_rows * C_ROW_GROUP + num_groups
     return out

@@ -117,6 +117,10 @@ class ColumnStats:
     is_string: bool = False
     sorted_ascending: bool = False
     index: Optional[str] = None
+    # dictionary-encoded string column: this component's sorted value
+    # dictionary (byte-lex order; position == ``__dict_<col>`` lane id).
+    # Presence is what lets the planner bind a string literal to an int id.
+    dict_values: Optional[tuple] = None
 
     @property
     def bounded(self) -> bool:
@@ -176,7 +180,8 @@ def harvest(ds: Dataset) -> TableStats:
             dtype=np.dtype(meta.dtype), lo=meta.lo, hi=meta.hi,
             distinct=meta.distinct, is_string=meta.is_string,
             sorted_ascending=meta.sorted_ascending,
-            index=ix.kind if ix is not None else None)
+            index=ix.kind if ix is not None else None,
+            dict_values=getattr(meta, "dict_values", None))
     return TableStats(address=f"{ds.dataverse}.{ds.name}",
                       rows=ds.num_live_rows,
                       padded_rows=len(ds.table),

@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core.physical_planner import STALL_WARN_FRAC
 from repro.engine import lsm
-from repro.engine.table import Table
+from repro.engine.table import Table, is_lane_column
 from repro.runtime import telemetry as tel
 
 
@@ -322,7 +322,8 @@ def _normalize_buffer(buffer, base: Table, key_col: Optional[str]):
             kill = uk if kill is None else np.union1d(kill, uk)
     matter.reverse()
     schema = [c for c in base.column_names()
-              if c not in lsm.INTERNAL_COLUMNS]
+              if c not in lsm.INTERNAL_COLUMNS
+              and not is_lane_column(c)]
     out: dict[str, np.ndarray] = {}
     for c in schema:
         parts = [np.asarray(cols[c])[m] for cols, m in matter]
@@ -362,7 +363,8 @@ def _validate_batch(rows: dict[str, np.ndarray], base: Table) -> dict[str, np.nd
     set, rectangular, dtypes safely castable, string widths matching.
     Returns the batch cast to the base dtypes, in base column order."""
     schema = [c for c in base.column_names()
-              if c not in lsm.INTERNAL_COLUMNS]
+              if c not in lsm.INTERNAL_COLUMNS
+              and not is_lane_column(c)]
     missing = [c for c in schema if c not in rows]
     extra = [c for c in rows if c not in schema]
     if missing or extra:

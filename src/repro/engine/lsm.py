@@ -50,7 +50,8 @@ import numpy as np
 
 from repro.core import plan as P
 from repro.core.catalog import INTERNAL_COLUMNS, Dataset, Manifest, open_widen
-from repro.engine.table import ColumnMeta, Table, pad_to_block
+from repro.engine.table import (ColumnMeta, Table, is_lane_column,
+                                pad_to_block)
 from repro.runtime import telemetry as tel
 from repro.runtime.fault import StorageFault
 
@@ -171,7 +172,9 @@ def make_run(session, base: Dataset, table: Table,
 
     t0 = time.perf_counter()
     live = table.num_rows
-    table = _collect_stats(table)
+    # `like` hint: a run's dict-lane presence follows the base table's, so
+    # the column set stays uniform across every component in the union.
+    table = _collect_stats(table, like=base.table.meta)
     if not base.closed:
         table = open_widen(table)
     primary = base.primary_index
@@ -181,9 +184,8 @@ def make_run(session, base: Dataset, table: Table,
                            kind="stable")
         cols = {k: np.asarray(v)[order] for k, v in table.columns.items()}
         meta = dict(table.meta)
-        m = meta[primary.column]
-        meta[primary.column] = ColumnMeta(m.dtype, m.lo, m.hi, m.distinct,
-                                          m.is_string, True)
+        meta[primary.column] = dataclasses.replace(meta[primary.column],
+                                                   sorted_ascending=True)
         table = Table(cols, meta, table.num_rows)
         host_keys = np.asarray(table.columns[primary.column])
     anti_sorted = None
@@ -202,6 +204,7 @@ def make_run(session, base: Dataset, table: Table,
     uid = session.catalog.next_run_uid(base.dataverse, base.name)
     run = Dataset(name=f"{base.name}@run{uid}", uid=uid,
                   dataverse=base.dataverse, table=table, closed=base.closed,
+                  engine_owned=True,  # flush-built: safe to device-delete
                   live_rows=live, anti_rows=n_anti,
                   anti_keys_arr=None if anti_sorted is None
                   else jnp.asarray(anti_sorted),
@@ -326,7 +329,8 @@ def _annihilate_older(older, run: Dataset,
         gathered.append({k: np.asarray(v[jnp.asarray(idx)])
                          for k, v in comp.table.columns.items()
                          if k not in INTERNAL_COLUMNS
-                         and not k.startswith("__ix")})
+                         and not k.startswith("__ix")
+                         and not is_lane_column(k)})
     if not gathered:
         return None
     names = list(gathered[0])
@@ -358,8 +362,10 @@ def host_visible_mask(comp: Dataset, key_col: Optional[str],
 def _visible_columns(comp: Dataset, key_col: Optional[str],
                      annihilated: Optional[set] = None) -> dict[str, np.ndarray]:
     mask = host_visible_mask(comp, key_col, annihilated)
+    # per-component dict lanes are dropped: merged/compacted outputs rebuild
+    # coherent lanes through _collect_stats (the merge-on-compaction remap).
     return {k: np.asarray(v)[mask] for k, v in comp.table.columns.items()
-            if k not in INTERNAL_COLUMNS}
+            if k not in INTERNAL_COLUMNS and not is_lane_column(k)}
 
 
 def _merge_meta(metas: list[ColumnMeta], total_rows: int) -> ColumnMeta:
@@ -427,7 +433,11 @@ def compact(session, ds: Dataset, manifest: Optional[Manifest] = None) -> Datase
     _fault(session, "mid-merge")
     new_base = session._build_dataset(name, Table(merged, meta), dataverse=dv,
                                       closed=m0.base.closed,
-                                      indexes=secondary, primary=key_col)
+                                      indexes=secondary, primary=key_col,
+                                      stats_like=m0.base.table.meta)
+    # compaction-built buffers are engine-exclusive (merged copies), unlike a
+    # user-loaded base whose arrays may be shared with the caller's Table
+    new_base.engine_owned = True
     with cat.lock:
         cur = cat.manifest(dv, name)
         if cur.base is not m0.base \

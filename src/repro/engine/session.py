@@ -245,12 +245,15 @@ class Session:
 
     def _build_dataset(self, name: str, table: Table, dataverse: str = "Default",
                        closed: bool = True, indexes: Sequence[str] = (),
-                       primary: Optional[str] = None) -> Dataset:
+                       primary: Optional[str] = None,
+                       stats_like: Optional[Mapping] = None) -> Dataset:
         """Build (stats → widen → cluster → shard → index) WITHOUT touching
         the catalog: background compaction builds replacement bases off the
         hot path and publishes them separately with one atomic manifest
-        swap."""
-        table = _collect_stats(table)  # DBMS-style stats on load
+        swap. ``stats_like`` (compaction: the retiring base's meta) keeps
+        the string dict-lane decision sticky so runs flushed mid-merge stay
+        column-uniform with the replacement base."""
+        table = _collect_stats(table, like=stats_like)  # DBMS-style stats on load
         if not closed:
             table = open_widen(table)
         host_keys = None
@@ -258,8 +261,8 @@ class Session:
             order = np.argsort(np.asarray(table.columns[primary]), kind="stable")
             cols = {k: np.asarray(v)[order] for k, v in table.columns.items()}
             meta = dict(table.meta)
-            m = meta[primary]
-            meta[primary] = type(m)(m.dtype, m.lo, m.hi, m.distinct, m.is_string, True)
+            meta[primary] = dataclasses.replace(meta[primary],
+                                                sorted_ascending=True)
             table = Table(cols, meta, table.num_rows)
             # host copy of the clustered key order: anti-matter annihilation
             # bookkeeping (engine/lsm.py) binary-searches it at flush time
@@ -315,13 +318,14 @@ class Session:
     def _seed_view(self, view, comps) -> None:
         """Seed (or reseed) one view from a pinned component tuple."""
         from repro.engine.lsm import host_visible_mask
+        from repro.engine.table import is_lane_column
 
         base = comps[0]
         key_col = base.primary_index.column \
             if base.primary_index is not None else None
         for comp in comps:
             cols = {k: np.asarray(v) for k, v in comp.table.columns.items()
-                    if k not in INTERNAL_COLUMNS}
+                    if k not in INTERNAL_COLUMNS and not is_lane_column(k)}
             # seed from VISIBLE rows only: anti rows are __valid__ False, and
             # matter newer components already annihilated must not count
             view.apply_delta(cols, host_visible_mask(comp, key_col))
@@ -473,11 +477,13 @@ class Session:
                     if hi > lo:
                         # matter prefix is clustered by the primary key:
                         # index-space positions are table row positions
+                        from repro.engine.table import is_lane_column
                         result = {
                             c: np.asarray(v[lo:hi])
                             for c, v in comp.table.columns.items()
                             if c not in INTERNAL_COLUMNS
-                            and not c.startswith("__ix")}
+                            and not c.startswith("__ix")
+                            and not is_lane_column(c)}
                         found_in = f"{comp.dataverse}.{comp.name}"
                         break
             if comp.anti_rows:
@@ -744,8 +750,12 @@ class Session:
             out = cq.run(snap)
         if cq.kind == "scalar":
             raise ValueError("cannot persist a scalar result")
+        from repro.engine.table import is_lane_column
         env, mask = out
-        cols = dict(env)
+        # strip the inputs' per-component dict lanes: concatenated ids from
+        # different components don't share a dictionary — _collect_stats
+        # rebuilds coherent lanes for the persisted table.
+        cols = {k: v for k, v in env.items() if not is_lane_column(k)}
         cols["__valid__"] = mask
         table = _collect_stats(Table(cols, num_rows=int(mask.shape[0])))
         from repro.core.stats import harvest_block_zones
@@ -792,25 +802,48 @@ def _literal_binding(raw_lits, opt_lits) -> list[tuple[str, object]]:
     ``source``; a literal reachable from neither is a plan constant (sentinel
     range bounds) and rebinds to its compile-time value. The binding lets a
     plan-cache hit feed fresh literal values into the executable without
-    re-running the optimizer."""
+    re-running the optimizer.
+
+    A literal the planner synthesized through a value TRANSFORM (the dict-id
+    bounds of a string predicate) carries a ``binder`` callable plus the
+    user ``sources`` it derives from: the binding records the transform and
+    each source's resolution, so a rebind maps the fresh string literal
+    through the same dictionary."""
     index = {id(l): j for j, l in enumerate(raw_lits)}
-    binding: list[tuple[str, object]] = []
-    for lit in opt_lits:
+
+    def resolve(lit):
         src = lit
         while id(src) not in index and getattr(src, "source", None) is not None:
             src = src.source
         if id(src) in index:
-            binding.append(("raw", index[id(src)]))
+            return ("raw", index[id(src)])
+        return ("const", lit.value)
+
+    binding: list[tuple[str, object]] = []
+    for lit in opt_lits:
+        binder = getattr(lit, "binder", None)
+        if binder is not None:
+            refs = tuple(resolve(s) for s in lit.sources)
+            binding.append(("xform", (binder, refs)))
         else:
-            binding.append(("const", lit.value))
+            binding.append(resolve(lit))
     return binding
 
 
 def _bind_params(binding, raw_lits):
     from repro.core.expr import encode_param
 
-    return [encode_param(raw_lits[v].value if kind == "raw" else v)
-            for kind, v in binding]
+    def value(kind, v):
+        return raw_lits[v].value if kind == "raw" else v
+
+    out = []
+    for kind, v in binding:
+        if kind == "xform":
+            binder, refs = v
+            out.append(encode_param(binder(*[value(k, r) for k, r in refs])))
+        else:
+            out.append(encode_param(value(kind, v)))
+    return out
 
 
 def _route_key(comp, key_col: str, key, n_keys: int):
@@ -838,23 +871,87 @@ def _route_key(comp, key_col: str, key, n_keys: int):
     return wlo, whi, len(owners), bz.n_shards
 
 
-def _collect_stats(table: Table) -> Table:
+def _collect_stats(table: Table, like: Optional[Mapping] = None) -> Table:
     """Fill missing lo/hi/distinct for numeric columns (the statistics a
     DBMS gathers at load; the bounded-domain group-by and index selection
     read them from the catalog). Integer columns get lo/hi/distinct; float
     columns get a NaN-safe lo/hi envelope (no distinct — float domains are
     never group-by keys), so float predicates participate in run-level
-    zone-span pruning too."""
-    from repro.engine.table import ColumnMeta
+    zone-span pruning too.
+
+    String columns additionally grow their derived integer lanes here
+    (engine/table.py): an always-on order-preserving ``__pfx_<col>`` prefix
+    lane (int32 — zone-map pruning only), and a per-component sorted
+    dictionary-id lane ``__dict_<col>`` (int32 — what string ==/IN/group-by
+    lower onto the kernels through) when the live distinct count stays
+    under ``DICT_THRESHOLD``. ``like`` is the base table's meta when
+    building an LSM run: dict-lane presence follows the hint instead of the
+    threshold, so lane presence stays uniform across one dataset's
+    components (the union-concat lowering requires a uniform column set)."""
+    from repro.engine.table import (DICT_THRESHOLD, ColumnMeta,
+                                    decode_strings, dict_lane_name,
+                                    is_lane_column, pack_prefix,
+                                    prefix_lane_name)
 
     meta = dict(table.meta)
+    cols = dict(table.columns)
+    live = None  # lazily-computed visible-row mask (string lanes only)
+
+    def live_mask():
+        nonlocal live
+        if live is None:
+            m = np.ones(table.num_rows, bool)
+            v = cols.get("__valid__")
+            if v is not None:
+                m &= np.asarray(v)
+            am = cols.get("__antimatter__")
+            if am is not None:
+                m &= ~np.asarray(am)
+            live = m
+        return live
+
     for name, col in table.columns.items():
-        if name in INTERNAL_COLUMNS:
+        if name in INTERNAL_COLUMNS or is_lane_column(name):
             continue
         m = meta.get(name)
+        a = np.asarray(col)
+        if a.ndim == 2 and a.dtype == np.uint8:
+            pfx = prefix_lane_name(name)
+            if pfx not in cols:
+                packed = pack_prefix(a)
+                lm = live_mask()
+                plo, phi = ((int(packed[lm].min()), int(packed[lm].max()))
+                            if lm.any() else (None, None))
+                cols[pfx] = packed
+                meta[pfx] = ColumnMeta(np.dtype(np.int32), plo, phi)
+            dname = dict_lane_name(name)
+            if dname not in cols:
+                lm = live_mask()
+                uniq, inv = np.unique(a[lm], axis=0, return_inverse=True)
+                inv = np.asarray(inv).reshape(-1)
+                hint = getattr(like.get(name), "dict_values", None) \
+                    if like is not None else None
+                want_dict = (hint is not None) if like is not None \
+                    else len(uniq) <= DICT_THRESHOLD
+                new = m if m is not None else ColumnMeta(a.dtype,
+                                                         is_string=True)
+                new = dataclasses.replace(new, distinct=len(uniq))
+                if want_dict:
+                    # dead rows carry id -1: every consumer masks them, and
+                    # the lane's zone span covers live ids [0, G-1] only.
+                    ids = np.full(a.shape[0], -1, np.int32)
+                    ids[lm] = inv.astype(np.int32)
+                    cols[dname] = ids
+                    g = len(uniq)
+                    meta[dname] = ColumnMeta(np.dtype(np.int32),
+                                             0 if g else None,
+                                             g - 1 if g else None, g)
+                    new = dataclasses.replace(
+                        new, dict_values=tuple(decode_strings(uniq)))
+                meta[name] = new
+            continue
         if m is not None and m.lo is not None:
             continue
-        a = np.asarray(col)
         if a.ndim != 1 or not a.size:
             continue
         if np.issubdtype(a.dtype, np.integer):
@@ -864,14 +961,19 @@ def _collect_stats(table: Table) -> Table:
         elif np.issubdtype(a.dtype, np.floating) and not np.all(np.isnan(a)):
             meta[name] = ColumnMeta(a.dtype, float(np.nanmin(a)),
                                     float(np.nanmax(a)))
-    return Table(table.columns, meta, table.num_rows)
+    return Table(cols, meta, table.num_rows)
 
 
 def _materialize(env: dict, mask, kind: str) -> dict[str, np.ndarray]:
-    """Compact to valid rows on the host (result delivery boundary)."""
+    """Compact to valid rows on the host (result delivery boundary).
+    Derived string lanes are storage internals — never delivered."""
+    from repro.engine.table import is_lane_column
+
     m = np.asarray(mask)
     out = {}
     for k, v in env.items():
+        if is_lane_column(k):
+            continue
         a = np.asarray(v)
         out[k] = a[m]
     return out

@@ -17,6 +17,55 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 STRING_WIDTH = 16  # fixed-width template strings (Wisconsin stringu1/u2/4)
 
+# -- derived string lanes ------------------------------------------------------
+# Every string column carries fixed-width *integer* lanes derived at
+# load/flush time (the TPU adaptation of gnitz's "German strings"): an
+# always-present big-endian prefix lane (the first PREFIX_BYTES of the
+# encoded row packed into one int32 — order-preserving, so zone-map range
+# tests on it are lexicographic range tests on the strings) and, for
+# columns whose live distinct count stays under DICT_THRESHOLD, a
+# per-component sorted dictionary-id lane (int32 ids into the component's
+# byte-lex-sorted value dictionary — what string ==/IN/group-by lower onto
+# the filter_count / segment_agg kernels through).
+#
+# PREFIX_BYTES is 4, not 8: device arrays are 32-bit (x64 is off), so an
+# int64 pack would be silently truncated at device placement and the
+# recovered-from-device zone maps would disagree with the host-built ones.
+# A 4-byte ASCII pack (top bit clear on every byte) is int32-exact,
+# non-negative, and still order-preserving — the conservative prefix
+# envelope just covers a shorter prefix.
+
+DICT_THRESHOLD = 256   # distinct values above this: prefix lane only
+PREFIX_BYTES = 4       # leading encoded bytes packed into the prefix lane
+
+_PREFIX_LANE = "__pfx_"
+_DICT_LANE = "__dict_"
+
+
+def prefix_lane_name(column: str) -> str:
+    return _PREFIX_LANE + column
+
+
+def dict_lane_name(column: str) -> str:
+    return _DICT_LANE + column
+
+
+def is_lane_column(name: str) -> bool:
+    """True for the derived string-lane columns (never user-visible)."""
+    return name.startswith(_PREFIX_LANE) or name.startswith(_DICT_LANE)
+
+
+def pack_prefix(arr: np.ndarray) -> np.ndarray:
+    """Pack the first PREFIX_BYTES of each (n, width) uint8 row into one
+    big-endian int32 per row. Big-endian keeps the pack order-preserving:
+    ``a < b`` byte-lexicographically over the prefix iff
+    ``pack(a) < pack(b)`` — the property the prefix zone maps rely on.
+    ASCII rows keep the top bit clear, so the packed value stays in
+    [0, 0x7F7F7F7F]: int32-exact on device, never negative."""
+    a = np.asarray(arr, dtype=np.uint8)[:, :PREFIX_BYTES].astype(np.int64)
+    shifts = np.arange(PREFIX_BYTES - 1, -1, -1, dtype=np.int64) * 8
+    return (a << shifts).sum(axis=1).astype(np.int32)
+
 
 def encode_strings(values: Sequence[str], width: int = STRING_WIDTH) -> np.ndarray:
     """Encode python strings into an (n, width) uint8 tensor (space padded)."""
@@ -30,6 +79,15 @@ def encode_strings(values: Sequence[str], width: int = STRING_WIDTH) -> np.ndarr
 def decode_strings(arr: np.ndarray) -> list[str]:
     arr = np.asarray(arr, dtype=np.uint8)
     return [bytes(row).decode("ascii").rstrip() for row in arr]
+
+
+def canon_string(v: str, width: int = STRING_WIDTH) -> str:
+    """A string literal in its stored form: ascii, truncated to ``width``,
+    trailing padding stripped. Dictionary values are held in this form, so
+    any literal → dict-id lookup must round-trip through it first —
+    ``col == "ab  "`` and ``col == "ab"`` encode to the same (width,) row
+    and must bind to the same id."""
+    return v.encode("ascii")[:width].decode("ascii").rstrip()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +105,12 @@ class ColumnMeta:
     distinct: int | None = None
     is_string: bool = False
     sorted_ascending: bool = False  # true for a clustered (primary) index
+    # For a dictionary-encoded string column: the component's sorted value
+    # dictionary (byte-lex order; position == dict-lane id). Presence is the
+    # signal that the ``__dict_<col>`` lane exists for this component — and
+    # the hint ``_collect_stats`` follows when building runs, so lane
+    # presence stays uniform across one dataset's LSM components.
+    dict_values: tuple | None = None
 
 
 class Table:

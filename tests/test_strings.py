@@ -1,0 +1,382 @@
+"""String fast-path tests (the PR 9 tentpole): every string column carries
+two derived integer lanes — an order-preserving big-endian prefix lane
+(int32, zone-map pruning only) and, under the cardinality threshold, a
+per-component sorted dictionary-id lane that string ==/IN/group-by lower
+onto the existing filter_count/segment_agg kernels through.
+
+The acceptance property: over a fed, MUTATED, uncompacted dataset
+(upserts + deletes producing anti-matter runs), string equality, IN, and
+group-by are bit-identical across gspmd/shard_map/kernel, match a pure
+numpy oracle, and survive both a run merge (dictionary-id remap) and a
+full compaction unchanged. Hypothesis drives the literal sweep when
+installed; a deterministic grid covers the same cases otherwise."""
+import numpy as np
+import pytest
+
+from repro.core import physical as PH
+from repro.core import plan as P
+from repro.core.frame import AFrame
+from repro.data import wisconsin
+from repro.engine import lsm
+from repro.engine.ingest import Feed
+from repro.engine.session import Session
+from repro.engine.table import (DICT_THRESHOLD, Table, decode_strings,
+                                dict_lane_name, encode_strings, pack_prefix,
+                                prefix_lane_name)
+from repro.kernels import ops
+
+DEFERRED = lsm.CompactionPolicy(size_ratio=10.0, max_runs=64)
+MODES = ("gspmd", "shard_map", "kernel")
+
+BASE = 2000
+PUSH = 600
+
+_STR4 = ["AAAAxxxx", "HHHHxxxx", "OOOOxxxx", "VVVVxxxx"]
+
+
+# -- lane unit tests ----------------------------------------------------------
+
+
+def test_pack_prefix_order_preserving_int32():
+    vals = ["", "A", "AAAA", "AAAAzzzz", "HHHH", "ZZZZZZZZ", "aaaa", "zzzz"]
+    packed = pack_prefix(encode_strings(vals))
+    assert packed.dtype == np.int32
+    assert (packed >= 0).all()  # ASCII top bit clear: int32-exact on device
+    # big-endian pack is order-preserving over the prefix: the packs of
+    # byte-lex-sorted (space-padded) inputs are sorted
+    order = np.argsort(packed, kind="stable")
+    assert [vals[i] for i in order] == sorted(vals, key=lambda s: s.ljust(4))
+
+
+def test_lanes_materialize_and_stay_hidden():
+    sess = Session()
+    t = wisconsin.generate(512, seed=0)
+    sess.create_dataset("W", t, dataverse="lane", primary="unique2")
+    ds = sess.catalog.get("lane", "W")
+    names = ds.table.column_names()
+    assert prefix_lane_name("string4") in names
+    assert dict_lane_name("string4") in names          # distinct=4 < threshold
+    assert prefix_lane_name("stringu1") in names
+    assert dict_lane_name("stringu1") not in names     # distinct=512 > 256
+    meta = ds.table.meta["string4"]
+    assert meta.dict_values == tuple(sorted(set(_STR4[: 4])))
+    # lanes never leak into user-visible column lists or row materialization
+    df = AFrame("lane", "W", session=sess)
+    assert not any(c.startswith("__") for c in df._current_columns())
+    assert not any(c.startswith("__") for c in df.head(4))
+
+
+# -- the acceptance property --------------------------------------------------
+
+
+def _push_rows(n, seed, key_lo):
+    t = wisconsin.generate(n, seed=seed)
+    rows = {k: np.asarray(v) for k, v in t.columns.items()}
+    rows["unique2"] = np.arange(key_lo, key_lo + n,
+                                dtype=rows["unique2"].dtype)
+    return rows
+
+
+def _build(mode):
+    """Base + two pushed runs + an upsert run + a delete: the uncompacted
+    tree holds anti-matter and per-run dictionaries built independently."""
+    sess = Session(mode=mode)
+    sess.create_dataset("Live", wisconsin.generate(BASE, seed=3),
+                        dataverse="s", primary="unique2")
+    feed = Feed(sess, "Live", "s", flush_rows=PUSH, policy=DEFERRED)
+    for i in range(2):
+        feed.push(_push_rows(PUSH, 20 + i, BASE + i * PUSH))
+    feed.upsert(_push_rows(100, 99, 100))
+    feed.delete(np.arange(0, 50, dtype=np.int64))
+    feed.flush()
+    return sess, feed
+
+
+def _oracle():
+    """Pure python/numpy replay of _build's visible rows: key -> row dict."""
+    rows = {}
+
+    def absorb(t_rows):
+        u2 = np.asarray(t_rows["unique2"])
+        s4 = decode_strings(np.asarray(t_rows["string4"]))
+        four = np.asarray(t_rows["four"])
+        for i, k in enumerate(u2.tolist()):
+            rows[k] = {"string4": s4[i], "four": int(four[i])}
+
+    base = wisconsin.generate(BASE, seed=3)
+    absorb({k: np.asarray(v) for k, v in base.columns.items()})
+    for i in range(2):
+        absorb(_push_rows(PUSH, 20 + i, BASE + i * PUSH))
+    absorb(_push_rows(100, 99, 100))
+    for k in range(0, 50):
+        rows.pop(k, None)
+    return rows
+
+
+def _suite(sess, lit, members):
+    df = AFrame("s", "Live", session=sess)
+    return {
+        "eq": len(df[df["string4"] == lit]),
+        "eq_miss": len(df[df["string4"] == "ZZZZnope"]),
+        "isin": len(df[df["string4"].isin(members)]),
+        "group": df.groupby("string4").agg({"four": "sum"}),
+        "group_count": df.groupby("string4").agg("count"),
+    }
+
+
+def _assert_equal(a, b, ctx):
+    for k, v in a.items():
+        w = b[k]
+        if isinstance(v, dict):
+            assert set(v) == set(w), (ctx, k)
+            for c in v:
+                x, y = np.asarray(v[c]), np.asarray(w[c])
+                assert x.dtype == y.dtype, (ctx, k, c, x.dtype, y.dtype)
+                np.testing.assert_array_equal(x, y, err_msg=f"{ctx}:{k}:{c}")
+        else:
+            assert v == w, (ctx, k, v, w)
+
+
+def test_string_fastpath_mutated_equivalence_property():
+    rows = _oracle()
+    vals = np.array([r["string4"] for r in rows.values()])
+    fours = np.array([r["four"] for r in rows.values()])
+    sessions = {m: _build(m) for m in MODES}
+
+    def check_one(li, mi):
+        lit = (_STR4 + ["ZZZZnope"])[li]
+        members = [m for j, m in enumerate(_STR4 + ["QQQQnope"])
+                   if (mi >> j) & 1]
+        want_keys = sorted(set(vals))
+        want = {
+            "eq": int((vals == lit).sum()),
+            "eq_miss": 0,
+            "isin": int(np.isin(vals, members).sum()),
+            "group": {"string4": np.asarray(encode_strings(want_keys)),
+                      "sum_four": np.array([fours[vals == g].sum()
+                                            for g in want_keys])},
+            "group_count": {"string4": np.asarray(encode_strings(want_keys)),
+                            "count": np.array([(vals == g).sum()
+                                               for g in want_keys])},
+        }
+        outs = {}
+        for mode, (sess, _) in sessions.items():
+            outs[mode] = _suite(sess, lit, members)
+            assert outs[mode]["eq"] == want["eq"], (mode, lit)
+            assert outs[mode]["eq_miss"] == 0, mode
+            assert outs[mode]["isin"] == want["isin"], (mode, members)
+            for k in ("group", "group_count"):
+                got = outs[mode][k]
+                g_keys = decode_strings(np.asarray(got["string4"]))
+                assert g_keys == want_keys, (mode, k)
+                col = "sum_four" if k == "group" else "count"
+                np.testing.assert_array_equal(
+                    np.asarray(got[col]).astype(np.int64),
+                    want[k][col].astype(np.int64), err_msg=f"{mode}:{k}")
+        for m in MODES[1:]:  # bit-identity: values AND dtypes
+            _assert_equal(outs[MODES[0]], outs[m], f"gspmd-vs-{m}")
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        for li, mi in [(0, 0), (1, 3), (3, 31), (4, 1), (2, 16), (1, 21)]:
+            check_one(li, mi)
+    else:
+        @settings(deadline=None, max_examples=10, database=None)
+        @given(st.integers(0, 4), st.integers(0, 31))
+        def check(li, mi):
+            check_one(li, mi)
+
+        check()
+
+    # merge the two pushed runs (dictionary-id remap across the merge),
+    # then fully compact — results must not move at either step
+    before = {m: _suite(s, _STR4[1], _STR4[:2])
+              for m, (s, _) in sessions.items()}
+    for mode, (sess, feed) in sessions.items():
+        ds = sess.catalog.get("s", "Live")
+        assert len(ds.manifest.runs) >= 2
+        lsm.merge_runs(sess, ds, 0, 2, level=1)
+        _assert_equal(before[mode], _suite(sess, _STR4[1], _STR4[:2]),
+                      f"{mode}:merged")
+        feed.compact()
+        _assert_equal(before[mode], _suite(sess, _STR4[1], _STR4[:2]),
+                      f"{mode}:compacted")
+
+
+def test_dict_remap_across_merge_disjoint_dictionaries():
+    """Two runs with DISJOINT value sets: the merged run's dictionary is the
+    sorted union and both runs' local ids are remapped — equality counts and
+    group-bys stay exact through merge and compaction."""
+    sess = Session(mode="kernel")
+    keys = np.arange(256, dtype=np.int32)
+    base = Table({"k": keys, "tag": encode_strings(["mm"] * 256),
+                  "v": np.ones(256, np.int32)})
+    sess.create_dataset("T", base, dataverse="rm", primary="k")
+    feed = Feed(sess, "T", "rm", flush_rows=10**9, policy=DEFERRED)
+    for lo, tags in ((1000, ["aa", "bb"]), (2000, ["yy", "zz"])):
+        ks = np.arange(lo, lo + 128, dtype=np.int32)
+        feed.push({"k": ks, "tag": encode_strings(tags * 64),
+                   "v": np.full(128, 2, np.int32)})
+        feed.flush()
+    df = AFrame("rm", "T", session=sess)
+
+    def probe():
+        return (len(df[df["tag"] == "bb"]), len(df[df["tag"] == "mm"]),
+                len(df[df["tag"].isin(["aa", "zz", "nope"])]),
+                {k: np.asarray(v).tolist()
+                 for k, v in df.groupby("tag").agg({"v": "sum"}).items()})
+
+    want = probe()
+    assert want[:3] == (64, 256, 128)
+    ds = sess.catalog.get("rm", "T")
+    lsm.merge_runs(sess, ds, 0, 2, level=1)
+    merged = sess.catalog.get("rm", "T").manifest.runs[0]
+    md = merged.table.meta["tag"].dict_values
+    assert md == ("aa", "bb", "yy", "zz")  # sorted union of disjoint dicts
+    assert probe() == want
+    feed.compact()
+    assert probe() == want
+
+
+def test_non_canonical_literal_spellings_bind_same_dict_id():
+    """A trailing-space literal encodes to the same (16,) row as its
+    stripped spelling, so every mode must count it identically — the dict
+    binder canonicalizes before the id lookup (a raw-string lookup would
+    miss and silently return 0 in kernel mode only). Two IN members that
+    canonicalize to the same value count as duplicates, never twice."""
+    n = 4 * 4096  # clustered: one tag per 4096-row block, so skipping wins
+    tags = [_STR4[i // 4096] for i in range(n)]
+    t = Table({"k": np.arange(n, dtype=np.int32),
+               "string4": encode_strings(tags)})
+    padded = _STR4[2] + "        "  # same encoded row as _STR4[2]
+    want_eq = 4096
+    for mode in MODES:
+        sess = Session(mode=mode)
+        sess.create_dataset("P", t, dataverse="pad", closed=True)
+        df = AFrame("pad", "P", session=sess)
+        assert len(df[df["string4"] == padded]) == want_eq, mode
+        dup_in = [padded, _STR4[2], _STR4[0]]  # first two: one member
+        assert len(df[df["string4"].isin(dup_in)]) == 2 * want_eq, mode
+        if mode == "kernel":
+            krc = [nd for nd in PH.walk(sess.last_physical)
+                   if isinstance(nd, PH.KernelRangeCount)]
+            assert krc and all(dict_lane_name("string4") in nd.cols
+                               for nd in krc), mode
+
+
+# -- kernel lowering + pruning ------------------------------------------------
+
+
+def test_string_eq_lowers_onto_filter_count_with_block_skip():
+    """A selective string equality must take the kernel fast path — lowered
+    onto KernelRangeCount over the dict lane, dispatched to filter_count —
+    and string-prefix/dict-id zone maps must skip blocks on a clustered
+    column."""
+    sess = Session(mode="kernel", enable_index=False)
+    n = 8192
+    ks = np.arange(n, dtype=np.int32)
+    # clustered string column: block-sized alternating zones
+    tags = ["AA" if (i // 4096) == 0 else "ZZ" for i in range(n)]
+    t = Table({"k": ks, "tag": encode_strings(tags),
+               "v": np.ones(n, np.int32)})
+    sess.create_dataset("C", t, dataverse="bs", primary="k")
+    df = AFrame("bs", "C", session=sess)
+    ops.reset_dispatch_counts()
+    assert len(df[df["tag"] == "ZZ"]) == 4096
+    assert ops.DISPATCH_COUNTS.get("filter_count", 0) >= 1
+    krcs = [nd for nd in PH.walk(sess.last_physical)
+            if isinstance(nd, PH.KernelRangeCount)]
+    assert krcs, "string == did not lower onto KernelRangeCount"
+    assert any(dict_lane_name("tag") in nd.cols for nd in krcs)
+    rep = sess.last_prune_report
+    assert rep["blocks_skipped"] > 0, rep  # the all-"AA" block is skipped
+    # miss probes don't even need the kernel: dict-id zone spans exclude
+    # every block, but the min-one-block guard still scans one
+    assert len(df[df["tag"] == "QQ"]) == 0
+
+
+def test_string_isin_lowers_as_merged_rangecounts():
+    """IN over a clustered dict-encoded column: one KernelRangeCount per
+    live member id (block skipping discounts each to its own zone), partial
+    counts summed — the k-launch plan beats the one-pass mask scan."""
+    sess = Session(mode="kernel", enable_index=False)
+    n = 12288  # three 4096-row zones: "AA" | "MM" | "ZZ"
+    tags = ["AA"] * 4096 + ["MM"] * 4096 + ["ZZ"] * 4096
+    t = Table({"k": np.arange(n, dtype=np.int32),
+               "tag": encode_strings(tags), "v": np.ones(n, np.int32)})
+    sess.create_dataset("C", t, dataverse="ki", primary="k")
+    df = AFrame("ki", "C", session=sess)
+    ops.reset_dispatch_counts()
+    got = len(df[df["tag"].isin(["AA", "ZZ", "missing!"])])
+    assert got == 8192
+    assert ops.DISPATCH_COUNTS.get("filter_count", 0) >= 2  # one per live id
+    ms = [nd for nd in PH.walk(sess.last_physical)
+          if isinstance(nd, PH.MergeScalars)]
+    assert ms and all(isinstance(c, PH.KernelRangeCount)
+                      for c in ms[0].children)
+    rep = sess.last_prune_report
+    assert rep["blocks_skipped"] > 0, rep  # each member scans its own zone
+
+
+def test_string_groupby_lowers_onto_segment_agg():
+    sess = Session(mode="kernel")
+    t = wisconsin.generate(2048, seed=7)
+    sess.create_dataset("W", t, dataverse="kg", primary="unique2")
+    df = AFrame("kg", "W", session=sess)
+    ops.reset_dispatch_counts()
+    out = df.groupby("string4").agg({"four": "sum"})
+    assert ops.DISPATCH_COUNTS.get("segment_agg", 0) >= 1
+    assert decode_strings(np.asarray(out["string4"])) == _STR4
+    segs = [nd for nd in PH.walk(sess.last_physical)
+            if isinstance(nd, PH.KernelSegmentAgg)]
+    assert segs and segs[0].key_values == tuple(_STR4)
+
+
+def test_string_selectivity_estimates_from_dictionary():
+    """Literal-aware selectivity: string4 equality on Wisconsin estimates
+    ~n/4 rows from the harvested distinct count, and explain() renders the
+    bound dict id beside the literal."""
+    sess = Session(mode="kernel", enable_index=False)
+    n = 4096
+    t = wisconsin.generate(n, seed=1)
+    sess.create_dataset("W", t, dataverse="sel", primary="unique2")
+    df = AFrame("sel", "W", session=sess)
+    plan = P.Agg(df[df["string4"] == "HHHHxxxx"]._plan,
+                 [P.AggSpec("count", "count", None)])
+    text = sess.explain(plan)
+    assert "string4 == 'HHHHxxxx'" in text and "id 1/4" in text
+    sess.execute(plan)
+    root = sess.last_physical
+    krcs = [nd for nd in PH.walk(root)
+            if isinstance(nd, PH.KernelRangeCount)]
+    assert krcs and abs(krcs[0].est_rows - n / 4) <= n / 16
+    # IN estimates k/distinct — and executes exactly
+    plan2 = P.Agg(df[df["string4"].isin(_STR4[:2])]._plan,
+                  [P.AggSpec("count", "count", None)])
+    assert int(sess.execute(plan2)) == n // 2
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_high_cardinality_prefix_pruning(mode):
+    """Columns past DICT_THRESHOLD get no dict lane, but the prefix lane
+    still prunes whole runs: a literal outside a run's prefix span excludes
+    it from the scan (visible in prune_report), and results stay exact."""
+    assert DICT_THRESHOLD == 256
+    sess = Session(mode=mode, enable_index=False)
+    mk = lambda lo, pre: Table({
+        "k": np.arange(lo, lo + 512, dtype=np.int32),
+        "name": encode_strings([f"{pre}{i:05d}" for i in range(512)]),
+    })
+    sess.create_dataset("H", mk(0, "alpha"), dataverse="pp", primary="k")
+    feed = Feed(sess, "H", "pp", flush_rows=10**9, policy=DEFERRED)
+    feed.push({k: np.asarray(v) for k, v in mk(5000, "omega").columns.items()})
+    feed.flush()
+    ds = sess.catalog.get("pp", "H")
+    assert dict_lane_name("name") not in ds.table.column_names()
+    df = AFrame("pp", "H", session=sess)
+    assert len(df[df["name"] == "omega00007"]) == 1
+    recs = [pc for nd in PH.walk(sess.last_physical)
+            for pc in (getattr(nd, "pruned", None) or ())]
+    assert any(pc.column == prefix_lane_name("name") for pc in recs), recs
+    assert len(df[df["name"] == "zzzzz"]) == 0

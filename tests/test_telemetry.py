@@ -281,6 +281,44 @@ def test_retired_manifest_gauges_lifecycle():
     assert tel.gauge_value("catalog.retired_component_bytes") == 0
 
 
+def test_retired_component_reclamation_lifecycle():
+    """Active reclamation (the PR 9 satellite): a pinned snapshot holds the
+    retired components' device buffers alive; the moment the last pin is
+    released the catalog itself deletes them — no reliance on the Python GC
+    — the retired-bytes gauge falls back to zero, the reclaimed counters
+    advance, and the buffers really are device-deleted."""
+    import jax
+
+    c0 = tel.counter_value("catalog.reclaimed_components_total")
+    b0 = tel.counter_value("catalog.reclaimed_bytes_total")
+    sess = Session()
+    feed = _fed(sess, name="R", dv="rc", runs=2)
+    snap = sess.catalog.snapshot()  # pins the pre-compaction manifest
+    pinned = list(snap.components("rc", "R"))
+    feed.compact()  # retires the pinned manifest; its runs become garbage
+    gs = sess.catalog.gc_stats()
+    assert gs["retired_component_bytes"] > 0  # held ONLY by the pin
+    # the pinned reader still sees live buffers
+    for ds in pinned:
+        for a in ds.table.columns.values():
+            assert not (isinstance(a, jax.Array) and a.is_deleted())
+    retired_runs = [ds for ds in pinned if "@run" in ds.name]
+    assert retired_runs
+    snap.release()  # last pin gone -> catalog reclaims eagerly, no gc.collect
+    gs2 = sess.catalog.gc_stats()
+    assert gs2["manifests_retired"] == 0
+    assert gs2["retired_component_bytes"] == 0
+    assert tel.gauge_value("catalog.retired_component_bytes") == 0
+    assert tel.counter_value("catalog.reclaimed_components_total") > c0
+    assert tel.counter_value("catalog.reclaimed_bytes_total") > b0
+    for ds in retired_runs:  # buffers of compacted-away runs: device-deleted
+        assert all(a.is_deleted() for a in ds.table.columns.values()
+                   if isinstance(a, jax.Array))
+    # the post-compaction base is untouched and queries still work
+    df = AFrame("rc", "R", session=sess)
+    assert len(df[df["v"] >= 0]) == 512 + 2 * 64
+
+
 # -- planner stall-imminent signal -------------------------------------------
 
 
