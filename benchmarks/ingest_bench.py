@@ -586,6 +586,92 @@ def _mutation_sweep(size: str) -> list[dict]:
     return rows
 
 
+def _durability_cell(size: str, durability: str) -> dict:
+    """One durability cell: the deferred-policy stream with the WAL off
+    (memory-only), on with per-batch fsync, on without fsync, or on with
+    compact-every-flush (the 1-component recovery point). Durable cells
+    additionally close the session and time ``Session.open`` cold-start
+    recovery over the resulting component chain."""
+    import shutil
+    import tempfile
+
+    from repro.runtime.durable import DurableStore
+
+    base_rows, n_batches, batch_rows = SIZES[size]
+    base = wisconsin.generate(base_rows, seed=7)
+    policy = lsm.CompactionPolicy(size_ratio=0.0) \
+        if durability == "wal-fsync-compacted" \
+        else lsm.CompactionPolicy(size_ratio=1.0, max_runs=8)
+    tmp = None
+    if durability == "memory-only":
+        sess = Session()
+    else:
+        tmp = tempfile.mkdtemp(prefix="repro-durability-")
+        store = DurableStore(tmp, wal_fsync=(durability != "wal-nofsync"))
+        sess = Session(storage=store)
+    sess.create_dataset("Stream", base, dataverse="bench",
+                        indexes=["onePercent"], primary="unique2")
+    feed = Feed(sess, "Stream", "bench", flush_rows=batch_rows, policy=policy)
+    batches = _stream(base_rows, n_batches, batch_rows)
+    ingest_s = 0.0
+    # batch 0 is the warm-up: it pays the flush-path compilations (cached
+    # process-wide by shape), which would otherwise bill the first cell
+    for i, rows in enumerate(batches):
+        t0 = time.perf_counter()
+        feed.push(rows)  # flush_rows == batch_rows: flushes synchronously
+        if i > 0:
+            ingest_s += time.perf_counter() - t0
+    total_rows = (n_batches - 1) * batch_rows
+    out = {
+        "size": size,
+        "variant": "durability",
+        "durability": durability,
+        "rows": total_rows,
+        "ingest_s": round(ingest_s, 4),
+        "rows_per_s": round(total_rows / ingest_s, 1),
+        "components": 1 + len(sess.catalog.get("bench", "Stream").runs),
+    }
+    if tmp is not None:
+        expect = base_rows + n_batches * batch_rows
+        sess.close()
+        t0 = time.perf_counter()
+        re = Session.open(tmp)
+        recovery_s = time.perf_counter() - t0
+        n = len(AFrame("bench", "Stream", session=re))
+        assert n == expect, (n, expect)
+        out["recovery_s"] = round(recovery_s, 4)
+        re.close()
+        shutil.rmtree(tmp, ignore_errors=True)
+    return out
+
+
+def _durability_sweep(size: str) -> list[dict]:
+    """WAL-on vs memory-only ingest throughput, fsync-batching sensitivity,
+    and cold-start recovery latency vs resident component count."""
+    _durability_cell(size, "memory-only")  # throwaway pass: warm every
+    #                                        flush/compaction executable so
+    #                                        no timed cell bills compiles
+    cells = [_durability_cell(size, d) for d in
+             ("memory-only", "wal-fsync", "wal-nofsync",
+              "wal-fsync-compacted")]
+    by = {c["durability"]: c for c in cells}
+    overhead = by["memory-only"]["rows_per_s"] / by["wal-fsync"]["rows_per_s"]
+    fsync_cost = (by["wal-nofsync"]["rows_per_s"]
+                  / by["wal-fsync"]["rows_per_s"])
+    for c in cells:
+        rec = f"  recovery {c['recovery_s'] * 1e3:7.1f} ms " \
+              f"({c['components']} comps)" if "recovery_s" in c else ""
+        print(f"  {size:>2} durability {c['durability']:<20} "
+              f"{c['rows_per_s']:>12,.0f} rows/s{rec}")
+    print(f"  {size:>2} WAL ingest overhead: {overhead:.2f}x   "
+          f"fsync cost: {fsync_cost:.2f}x")
+    cells.append({"size": size, "variant": "durability",
+                  "durability": "summary",
+                  "wal_overhead_x": round(overhead, 3),
+                  "fsync_cost_x": round(fsync_cost, 3)})
+    return cells
+
+
 def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[dict]:
     names = list(sizes) if sizes else ["XS", "S"]
     rows = []
@@ -608,6 +694,7 @@ def run_ingest_bench(sizes=None, out_path: pathlib.Path | None = None) -> list[d
         rows.extend(_block_skip_sharded_sweep(size))
         rows.extend(_mutation_sweep(size))
         rows.extend(_serving_sweep(size))
+        rows.extend(_durability_sweep(size))
     # attach the engine-wide telemetry snapshot (counters/gauges/histograms
     # accumulated across every sweep above — plan cache, flush/compaction,
     # write stalls, retired-manifest bytes, kernel launches); spans are

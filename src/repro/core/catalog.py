@@ -123,6 +123,16 @@ class Dataset:
     # user-loaded base may share its arrays with the caller's Table, so it
     # is left to ordinary Python GC.
     engine_owned: bool = False
+    # Durable-segment filename (runtime/durable.py) once this component's
+    # hard state is on disk; None while memory-only. Set by
+    # DurableStore.write_component (idempotence marker) and at cold-start
+    # mount (so a re-publish never rewrites an existing segment).
+    seg_name: Optional[str] = None
+    # True while this component's SOFT state (index payloads, zone maps,
+    # host key copies, anti arrays, annihilation bookkeeping) has not been
+    # rebuilt since a cold-start mount — lsm.ensure_soft clears it lazily at
+    # first bind instead of paying every index build at Session.open.
+    soft_stale: bool = False
 
     @property
     def runs(self) -> list["Dataset"]:
@@ -324,6 +334,24 @@ class Catalog:
         # series drops back to zero — tracking must not itself retain.
         self._retired: "weakref.WeakValueDictionary[int, Manifest]" = \
             weakref.WeakValueDictionary()
+        # Durable storage attachment (runtime/durable.py DurableStore).
+        # None for memory-only catalogs — every durability hook below is a
+        # no-op then. When set, publish() gains a durable-commit step and
+        # _reclaim() also unlinks dead components' segment files.
+        self.store = None
+        # Datasets with soft-stale components (cold-start mounts awaiting
+        # their first bind): O(1) membership test on the query hot path —
+        # lsm.ensure_soft rebuilds and removes under the catalog lock.
+        self.stale: set[tuple[str, str]] = set()
+
+    def attach_store(self, store) -> None:
+        """Attach the durable store. One store per catalog: sessions that
+        share a catalog share its storage directory too."""
+        with self._lock:
+            if self.store is not None and self.store is not store:
+                raise RuntimeError(
+                    "catalog already has a durable store attached")
+            self.store = store
 
     @property
     def lock(self) -> threading.RLock:
@@ -373,6 +401,15 @@ class Catalog:
             tel.inc("catalog.publishes_total")
             if old_manifest is not None and old_manifest is not m:
                 tel.inc("catalog.manifests_retired_total")
+            if self.store is not None:
+                # The durable-commit step of the swap: segments for the new
+                # components (heavy tensor writes happen off-lock in the
+                # flush/compaction builders; this persists only what is
+                # still missing — fresh DDL bases; mounted republishes are
+                # no-ops), then the manifest generation via write-temp →
+                # fsync → atomic rename. A crash before the rename leaves
+                # the previous generation + the WAL tail authoritative.
+                self.store.commit(dataverse, name, m)
             self._reclaim()
             self.gc_stats()
             return m
@@ -411,11 +448,14 @@ class Catalog:
     def drop(self, dataverse: str, name: str) -> None:
         with self._lock:
             ds = self._datasets.pop((dataverse, name), None)
+            self.stale.discard((dataverse, name))
             if ds is not None:
                 if ds.manifest is not None:
                     ds.manifest.retired = True
                     self._retired[id(ds.manifest)] = ds.manifest
                     tel.inc("catalog.manifests_retired_total")
+                if self.store is not None:
+                    self.store.drop_dataset(dataverse, name)
                 self.bump_stats_epoch()
                 self._reclaim()
                 self.gc_stats()
@@ -442,6 +482,7 @@ class Catalog:
                     for comp in m.components:
                         protected.add(id(comp))
             comps_freed = bytes_freed = 0
+            dead_segs: list[tuple[str, str, str]] = []
             for mid, m in list(self._retired.items()):
                 if m.pins > 0:
                     continue
@@ -449,12 +490,22 @@ class Catalog:
                     if id(comp) in protected:
                         continue
                     protected.add(id(comp))  # shared across retired: once
+                    if comp.seg_name is not None:
+                        dead_segs.append((comp.dataverse,
+                                          comp.name.partition("@")[0],
+                                          comp.seg_name))
                     if not comp.engine_owned:
                         continue  # may share buffers with a caller's Table
                     bytes_freed += component_nbytes(comp)
                     comps_freed += 1
                     _delete_component_buffers(comp)
                 self._retired.pop(mid, None)
+        if self.store is not None:
+            # retired-component GC, durable half: unlink segment files no
+            # kept manifest generation references anymore (the store skips
+            # segments a kept generation or an in-flight build still needs)
+            for dv, name, seg in dead_segs:
+                self.store.maybe_unlink(dv, name, seg)
         if comps_freed:
             tel.inc("catalog.reclaimed_components_total", comps_freed)
             tel.inc("catalog.reclaimed_bytes_total", bytes_freed)

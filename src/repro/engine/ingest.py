@@ -84,6 +84,15 @@ class Feed:
         self.stall_delay_s = stall_delay_s
         self._buffer: list[tuple[str, object]] = []  # (kind, payload)
         self._buffered = 0
+        # Durable feed WAL (runtime/durable.py): when the session's catalog
+        # has a store attached, every validated batch is appended + fsynced
+        # BEFORE the ack (the push/upsert/delete return), and the covered
+        # prefix is truncated only after the covering flush's manifest
+        # commit. ``_replay`` marks cold-start WAL replay: batches arriving
+        # through the normal path must not be re-appended to the log they
+        # came from.
+        self._store = getattr(session.catalog, "store", None)
+        self._replay = False
         self.stats = {"ingested": 0, "flushes": 0, "compactions": 0,
                       "runs": 0, "run_rows": 0,
                       "upserts": 0, "deletes": 0, "tombstones": 0,
@@ -99,6 +108,7 @@ class Feed:
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         rows = _validate_batch(rows, ds.table)
         n = len(next(iter(rows.values())))
+        self._wal("push", rows)
         self._buffer.append(("push", rows))
         self._buffered += n
         self.stats["ingested"] += n
@@ -113,6 +123,7 @@ class Feed:
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         rows = _validate_batch(rows, ds.table)
         n = len(next(iter(rows.values())))
+        self._wal("upsert", rows)
         self._buffer.append(("upsert", rows))
         self._buffered += n
         self.stats["ingested"] += n
@@ -127,10 +138,21 @@ class Feed:
         key_col = self._key_column("delete")
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         keys = _validate_keys(keys, ds.table, key_col)
+        self._wal("delete", {"__keys__": keys})
         self._buffer.append(("delete", keys))
         self._buffered += len(keys)
         self.stats["deletes"] += len(keys)
         self._maybe_flush()
+
+    def _wal(self, kind: str, payload: dict) -> None:
+        """Durability ack: append the validated batch to the dataset's WAL
+        and fsync before returning. Runs AFTER validation (a rejected batch
+        never reaches the log) and BEFORE buffering (a crash mid-append —
+        the ``torn-write`` fault — leaves a CRC-invalid tail and an
+        un-acked, un-buffered batch: lost consistently on both sides)."""
+        if self._store is not None and not self._replay:
+            self._store.wal_append(self.dataverse, self.dataset, kind,
+                                   payload)
 
     def _key_column(self, op: str) -> str:
         ds = self.session.catalog.get(self.dataverse, self.dataset)
@@ -159,20 +181,36 @@ class Feed:
             return
         t0 = time.perf_counter()
         ds_label = f"{self.dataverse}.{self.dataset}"
+        # cold-start mounts rebuild their soft state at first bind — the
+        # flush path reads host keys (annihilation) and index inventory
+        lsm.ensure_soft(self.session, self.dataverse, self.dataset)
         ds = self.session.catalog.get(self.dataverse, self.dataset)
         key_col = ds.primary_index.column if ds.primary_index is not None else None
         # the buffer is the flush's write-ahead state: it is dropped only
         # AFTER the manifest publish succeeds, so a crash at the "flush" or
         # "pre-swap" fault point loses nothing — re-flushing replays the
-        # exact same batch (normalization is pure)
+        # exact same batch (normalization is pure). With a durable store
+        # the on-disk WAL mirrors the buffer batch for batch.
         lsm._fault(self.session, "flush")
         cols, anti_keys = _normalize_buffer(self._buffer, ds.table, key_col)
         if not len(next(iter(cols.values()))) and anti_keys is None:
             self._buffer.clear()
             self._buffered = 0
             return
+        if self._store is not None:
+            # the WAL sequence this flush covers: every buffered batch was
+            # appended at or below the current ack counter. The manifest
+            # commit inside register_run embeds it (wal_upto), making the
+            # covered prefix dead for replay purposes even if the truncate
+            # below never happens (the pre-wal-truncate crash point).
+            self._store.set_wal_coverage(
+                self.dataverse, self.dataset,
+                self._store.wal_seq(self.dataverse, self.dataset))
         run = lsm.make_run(self.session, ds, Table(cols), anti_keys=anti_keys)
         retracted = lsm.register_run(self.session, ds, run)
+        if self._store is not None:
+            # strictly after the covering manifest commit
+            self._store.wal_truncate(self.dataverse, self.dataset)
         self._buffer.clear()
         self._buffered = 0
         self.session.refresh_views(self.dataverse, self.dataset, cols,
@@ -200,9 +238,16 @@ class Feed:
     def drop_buffer(self) -> None:
         """Discard the buffered (un-flushed) batches. Crash recovery uses
         this after a post-swap fault: the manifest already committed the
-        flush, so replaying the buffer would double-apply it."""
+        flush, so replaying the buffer would double-apply it. With a
+        durable store the WAL mirror of the dropped batches is truncated
+        too — discard means discard on both sides."""
         self._buffer.clear()
         self._buffered = 0
+        if self._store is not None and not self._replay:
+            self._store.set_wal_coverage(
+                self.dataverse, self.dataset,
+                self._store.wal_seq(self.dataverse, self.dataset))
+            self._store.wal_truncate(self.dataverse, self.dataset)
 
     def _refresh_run_stats(self) -> None:
         runs = self.session.catalog.get(self.dataverse, self.dataset).runs

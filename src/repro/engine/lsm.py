@@ -274,6 +274,11 @@ def register_run(session, base: Dataset, run: Dataset) -> Optional[dict]:
     leaves the manifest committed and only soft state stale — recover()
     replays the bookkeeping from the hard rows."""
     cat = session.catalog
+    if cat.store is not None:
+        # persist the run's segment OFF the catalog lock (the heavy tensor
+        # write); publish's durable-commit step below only links it. The
+        # store's in-flight tracking protects it from GC until then.
+        cat.store.write_component(base.dataverse, base.name, run)
     with cat.lock:
         # re-read the CURRENT manifest: the base the caller fetched may have
         # been swapped by a concurrent background compaction since
@@ -410,6 +415,7 @@ def compact(session, ds: Dataset, manifest: Optional[Manifest] = None) -> Datase
     are reconciled against the fresh base at swap time."""
     cat = session.catalog
     dv, name = ds.dataverse, ds.name
+    ensure_soft(session, dv, name)  # kill-sets/host keys must be live
     t0 = time.perf_counter()
     tel.inc("lsm.compaction.attempts_total", kind="full")
     with cat.lock:
@@ -438,23 +444,30 @@ def compact(session, ds: Dataset, manifest: Optional[Manifest] = None) -> Datase
     # compaction-built buffers are engine-exclusive (merged copies), unlike a
     # user-loaded base whose arrays may be shared with the caller's Table
     new_base.engine_owned = True
-    with cat.lock:
-        cur = cat.manifest(dv, name)
-        if cur.base is not m0.base \
-                or tuple(cur.runs[:len(m0.runs)]) != tuple(m0.runs):
-            tel.inc("lsm.compaction.conflicts_total", kind="full")
-            raise ManifestConflict(
-                f"{dv}.{name}: component set changed under a full "
-                f"compaction (planned at lsn {m0.lsn}, now {cur.lsn})")
-        newer = cur.runs[len(m0.runs):]  # flushed while the merge built
-        _fault(session, "pre-swap")
-        cat.publish(dv, name, new_base, newer)
-        _fault(session, "post-swap")
-        # reconcile: the surviving newer runs' tombstones still shadow
-        # matter now living in the fresh base — replay their bookkeeping
-        for r in newer:
-            if r.anti_rows:
-                _annihilate_older((new_base,), r, gather=False)
+    if cat.store is not None:
+        cat.store.write_component(dv, name, new_base)  # off-lock, pre-CAS
+    try:
+        with cat.lock:
+            cur = cat.manifest(dv, name)
+            if cur.base is not m0.base \
+                    or tuple(cur.runs[:len(m0.runs)]) != tuple(m0.runs):
+                tel.inc("lsm.compaction.conflicts_total", kind="full")
+                raise ManifestConflict(
+                    f"{dv}.{name}: component set changed under a full "
+                    f"compaction (planned at lsn {m0.lsn}, now {cur.lsn})")
+            newer = cur.runs[len(m0.runs):]  # flushed while the merge built
+            _fault(session, "pre-swap")
+            cat.publish(dv, name, new_base, newer)
+            _fault(session, "post-swap")
+            # reconcile: the surviving newer runs' tombstones still shadow
+            # matter now living in the fresh base — replay their bookkeeping
+            for r in newer:
+                if r.anti_rows:
+                    _annihilate_older((new_base,), r, gather=False)
+    except ManifestConflict:
+        if cat.store is not None:  # orphan segment: never committed
+            cat.store.discard_component(dv, name, new_base)
+        raise
     tel.inc("lsm.compactions_total", kind="full")
     tel.observe("lsm.compaction_seconds", time.perf_counter() - t0,
                 kind="full")
@@ -480,6 +493,7 @@ def merge_runs(session, ds: Dataset, start: int, end: int, level: int,
     the merged run at swap time."""
     cat = session.catalog
     dv, name = ds.dataverse, ds.name
+    ensure_soft(session, dv, name)  # kill-sets/host keys must be live
     t0 = time.perf_counter()
     tel.inc("lsm.compaction.attempts_total", kind="level")
     with cat.lock:
@@ -499,32 +513,40 @@ def merge_runs(session, ds: Dataset, start: int, end: int, level: int,
     _fault(session, "mid-merge")
     run = make_run(session, m0.base, Table(merged_cols), anti_keys=anti_union)
     run.level = level
-    with cat.lock:
-        cur = cat.manifest(dv, name)
-        if cur.base is not m0.base:
-            tel.inc("lsm.compaction.conflicts_total", kind="level")
-            raise ManifestConflict(
-                f"{dv}.{name}: base swapped under a level merge "
-                f"(planned at lsn {m0.lsn}, now {cur.lsn})")
-        try:
-            s = cur.runs.index(members[0])  # identity: Dataset eq is id-based
-        except ValueError:
-            s = -1
-        if s < 0 or tuple(cur.runs[s:s + len(members)]) != members:
-            tel.inc("lsm.compaction.conflicts_total", kind="level")
-            raise ManifestConflict(
-                f"{dv}.{name}: merged run segment no longer contiguous "
-                f"(planned at lsn {m0.lsn}, now {cur.lsn})")
-        tail = cur.runs[s + len(members):]
-        # matter annihilated by newer-than-segment components known at build
-        # time was dropped above; tombstones that landed mid-build replay
-        # here (occurrence-counted, so stats stay truthful either way)
-        for newer in tail:
-            if newer.anti_rows:
-                _annihilate_older((run,), newer, gather=False)
-        _fault(session, "pre-swap")
-        cat.publish(dv, name, cur.base, cur.runs[:s] + (run,) + tail)
-        _fault(session, "post-swap")
+    if cat.store is not None:
+        cat.store.write_component(dv, name, run)  # off-lock, pre-CAS
+    try:
+        with cat.lock:
+            cur = cat.manifest(dv, name)
+            if cur.base is not m0.base:
+                tel.inc("lsm.compaction.conflicts_total", kind="level")
+                raise ManifestConflict(
+                    f"{dv}.{name}: base swapped under a level merge "
+                    f"(planned at lsn {m0.lsn}, now {cur.lsn})")
+            try:
+                s = cur.runs.index(members[0])  # identity: Dataset eq is
+                #                                 id-based
+            except ValueError:
+                s = -1
+            if s < 0 or tuple(cur.runs[s:s + len(members)]) != members:
+                tel.inc("lsm.compaction.conflicts_total", kind="level")
+                raise ManifestConflict(
+                    f"{dv}.{name}: merged run segment no longer contiguous "
+                    f"(planned at lsn {m0.lsn}, now {cur.lsn})")
+            tail = cur.runs[s + len(members):]
+            # matter annihilated by newer-than-segment components known at
+            # build time was dropped above; tombstones that landed mid-build
+            # replay here (occurrence-counted, so stats stay truthful)
+            for newer in tail:
+                if newer.anti_rows:
+                    _annihilate_older((run,), newer, gather=False)
+            _fault(session, "pre-swap")
+            cat.publish(dv, name, cur.base, cur.runs[:s] + (run,) + tail)
+            _fault(session, "post-swap")
+    except ManifestConflict:
+        if cat.store is not None:  # orphan segment: never committed
+            cat.store.discard_component(dv, name, run)
+        raise
     tel.inc("lsm.compactions_total", kind="level")
     tel.observe("lsm.compaction_seconds", time.perf_counter() - t0,
                 kind="level")
@@ -557,7 +579,13 @@ class BackgroundCompactor:
 
     Writers needing backpressure (Feed's write stall) call
     :meth:`wait_below`, which sleeps on the worker's progress condition
-    until the dataset's run count drops under the cap."""
+    until the dataset's run count drops under the cap.
+
+    The pending queue is sharded **per dataverse**: each dataverse gets its
+    own worker thread (created lazily at first notify), so one tenant's
+    long O(base) merge can never starve another tenant's compaction —
+    multi-tenant isolation at the compaction layer. Workers share one
+    condition variable; ``wait_idle``/``close`` span all of them."""
 
     def __init__(self, session, policy: Optional[CompactionPolicy] = None,
                  max_retries: int = 5, backoff_s: float = 0.002):
@@ -570,27 +598,38 @@ class BackgroundCompactor:
         for k in self.stats:  # seed the mirrored registry series
             tel.inc(f"lsm.compactor.{k}_total", 0)
         self._cv = threading.Condition()
-        self._pending: set[tuple[str, str]] = set()
-        self._inflight = 0
+        # per-dataverse pending shards and their (lazily created) workers
+        self._pending: dict[str, set[tuple[str, str]]] = {}
+        self._inflight: dict[str, int] = {}
+        self._threads: dict[str, threading.Thread] = {}
         self._stop = False
-        self._thread = threading.Thread(target=self._worker, daemon=True,
-                                        name="lsm-background-compactor")
-        self._thread.start()
 
     # -- control -----------------------------------------------------------
 
     def notify(self, dataverse: str, name: str) -> None:
-        """Mark a dataset dirty (a flush just published); returns at once."""
+        """Mark a dataset dirty (a flush just published); returns at once.
+        The notification lands on the dataset's dataverse shard, spawning
+        that shard's worker on first use."""
         with self._cv:
-            self._pending.add((dataverse, name))
+            if self._stop:
+                return
+            self._pending.setdefault(dataverse, set()).add((dataverse, name))
+            if dataverse not in self._threads:
+                t = threading.Thread(
+                    target=self._worker, args=(dataverse,), daemon=True,
+                    name=f"lsm-compactor-{dataverse}")
+                self._threads[dataverse] = t
+                t.start()
+                tel.set_gauge("lsm.compactor.workers", len(self._threads))
             self._cv.notify_all()
 
     def wait_idle(self, timeout: float = 30.0) -> bool:
-        """Block until the worker has drained every notification (tests and
-        benchmarks use this as a barrier). True if it went idle in time."""
+        """Block until every dataverse worker has drained its notifications
+        (tests and benchmarks use this as a barrier). True if all went idle
+        in time."""
         deadline = time.perf_counter() + timeout
         with self._cv:
-            while self._pending or self._inflight:
+            while any(self._pending.values()) or any(self._inflight.values()):
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     return False
@@ -620,7 +659,9 @@ class BackgroundCompactor:
         with self._cv:
             self._stop = True
             self._cv.notify_all()
-        self._thread.join(timeout=30.0)
+            threads = list(self._threads.values())
+        for t in threads:
+            t.join(timeout=30.0)
 
     def __enter__(self) -> "BackgroundCompactor":
         return self
@@ -628,22 +669,23 @@ class BackgroundCompactor:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    # -- worker ------------------------------------------------------------
+    # -- workers (one per dataverse) ---------------------------------------
 
-    def _worker(self) -> None:
+    def _worker(self, dataverse: str) -> None:
         while True:
             with self._cv:
-                while not self._pending and not self._stop:
+                while not self._pending.get(dataverse) and not self._stop:
                     self._cv.wait()
                 if self._stop:
                     return
-                key = self._pending.pop()
-                self._inflight += 1
+                key = self._pending[dataverse].pop()
+                self._inflight[dataverse] = \
+                    self._inflight.get(dataverse, 0) + 1
             try:
                 self._drain(key)
             finally:
                 with self._cv:
-                    self._inflight -= 1
+                    self._inflight[dataverse] -= 1
                     self._cv.notify_all()
 
     def _drain(self, key: tuple[str, str]) -> None:
@@ -703,7 +745,7 @@ class BackgroundCompactor:
 # -- crash recovery: rebuild soft state from hard state -----------------------
 
 
-def recover(session, dataverse: str, name: str) -> None:
+def recover(session, dataverse: str, name: str, lazy: bool = False) -> None:
     """Crash recovery: rebuild every component's SOFT state from its HARD
     state — the split the fault-injection tests assert.
 
@@ -717,19 +759,69 @@ def recover(session, dataverse: str, name: str) -> None:
     Soft state (rebuilt here): index payloads (sorted keys / row ids / zone
     arrays), block zone maps, host-side clustered-key and anti-key copies,
     the annihilation bookkeeping (replayed newest-wins in manifest order),
-    and materialized-view partials (reseeded from visible rows)."""
+    and materialized-view partials (reseeded from visible rows).
+
+    With ``lazy`` the rebuild is only MARKED: each component flips
+    ``soft_stale`` and the dataset joins ``catalog.stale``; the first bind
+    (query, point lookup, flush, compaction, view seed) pays the rebuild
+    via :func:`ensure_soft`. Cold start over a large catalog is then
+    dominated by manifest load + WAL replay, not index builds."""
     cat = session.catalog
+    if lazy:
+        with cat.lock:
+            m = cat.manifest(dataverse, name)
+            for comp in m.components:
+                comp.soft_stale = True
+            cat.stale.add((dataverse, name))
+        return
     with cat.lock:
         m = cat.manifest(dataverse, name)
     for comp in m.components:
         _rebuild_soft(session, comp)
+        comp.soft_stale = False
     with cat.lock:
         for i, run in enumerate(m.runs):
             if run.anti_rows:
                 _annihilate_older((m.base,) + tuple(m.runs[:i]), run,
                                   gather=False)
+        cat.stale.discard((dataverse, name))
         cat.bump_stats_epoch()
     session.reseed_views(dataverse, name)
+
+
+def ensure_soft(session, dataverse: str, name: str) -> None:
+    """First-bind hook of the lazy rebuild: if the dataset carries
+    soft-stale components (cold-start mounts), rebuild their soft state now
+    — indexes, zone maps, host key copies, anti arrays — and replay the
+    annihilation bookkeeping newest-wins across the whole component chain.
+    O(1) when nothing is stale (one set-membership probe), so every bind
+    site calls it unconditionally."""
+    cat = session.catalog
+    if (dataverse, name) not in cat.stale:
+        return
+    with cat.lock:
+        if (dataverse, name) not in cat.stale:
+            return  # another binder won the race
+        try:
+            m = cat.manifest(dataverse, name)
+        except KeyError:
+            cat.stale.discard((dataverse, name))
+            return
+        t0 = time.perf_counter()
+        for comp in m.components:
+            if comp.soft_stale:
+                _rebuild_soft(session, comp)
+                comp.soft_stale = False
+        # annihilation bookkeeping is cross-component: replay the full
+        # chain in manifest order (idempotent for freshly-zeroed sets)
+        for i, run in enumerate(m.runs):
+            if run.anti_rows:
+                _annihilate_older((m.base,) + tuple(m.runs[:i]), run,
+                                  gather=False)
+        cat.stale.discard((dataverse, name))
+        cat.bump_stats_epoch()
+    tel.inc("storage.lazy_rebuilds_total")
+    tel.observe("storage.lazy_rebuild_seconds", time.perf_counter() - t0)
 
 
 def _rebuild_soft(session, comp: Dataset) -> None:

@@ -137,7 +137,8 @@ class Session:
                  kernel_backend: Optional[str] = None,
                  kernel_interpret: Optional[bool] = None,
                  catalog: Optional[Catalog] = None,
-                 fault_plan: Optional[object] = None):
+                 fault_plan: Optional[object] = None,
+                 storage: Optional[object] = None):
         """mode: 'auto' (shard_map when a mesh is given), 'gspmd',
         'shard_map', or 'kernel' (the cost-based planner lowers fusable plan
         shapes onto the Pallas relational kernels; anything uncovered falls
@@ -161,9 +162,29 @@ class Session:
         reader sessions bind snapshots of a writer session's datasets; each
         session keeps its own plan caches). ``fault_plan`` arms the storage
         fault points (runtime/fault.py FaultPlan) for crash-consistency
-        tests."""
+        tests.
+
+        ``storage`` attaches a durable store (runtime/durable.py): a
+        DurableStore instance or a path to open one at. Every manifest
+        publish then gains a durable-commit step (checksummed component
+        segments + an atomically-renamed manifest generation) and feeds
+        write an fsynced WAL — see ``Session.open`` for cold-start
+        recovery of such a directory."""
         self.catalog = catalog if catalog is not None else Catalog()
         self.fault_plan = fault_plan
+        self.storage = None
+        if storage is not None:
+            from repro.engine import lsm
+            from repro.runtime.durable import DurableStore
+
+            store = storage if isinstance(storage, DurableStore) \
+                else DurableStore(storage)
+            # the store's crash points consult THIS session's FaultPlan —
+            # one fault source for in-memory and I/O points alike
+            store._fault = lambda point: lsm._fault(self, point)
+            self.catalog.attach_store(store)
+            self.storage = store
+        self.recovery_report: Optional[dict] = None
         self.mesh = mesh
         if mode == "auto":
             mode = "shard_map" if mesh is not None and mesh.devices.size > 1 else "gspmd"
@@ -221,6 +242,124 @@ class Session:
         # incrementally-maintained materialized views (engine/lsm.py),
         # refreshed from each feed flush's delta batch.
         self.views: dict[str, "object"] = {}
+
+    # -- durable cold start --------------------------------------------------
+
+    @classmethod
+    def open(cls, path, lazy: bool = True, **kwargs) -> "Session":
+        """Cold-start crash recovery: open a durable storage directory
+        (``Session(storage=...).``'s on-disk layout) and reconstruct the
+        catalog —
+
+          1. load each dataset's newest checksum-valid manifest generation
+             (a corrupt manifest or segment is quarantined and the previous
+             generation serves instead — ``storage.corruption_total``);
+          2. mount the component segments back onto the session's mesh and
+             republish them (the catalog LSN resumes past the recovered
+             high-water mark, run uids past the highest mounted uid);
+          3. mark soft state for lazy rebuild-at-first-bind (``lazy=False``
+             rebuilds indexes/zone maps eagerly, PR 6's ``recover``);
+          4. replay the WAL tail — acked batches whose covering flush never
+             committed — through the normal flush path, in order, skipping
+             batches at or below the manifest's ``wal_upto`` (idempotence
+             when the crash hit between commit and truncate).
+
+        Returns the session with ``recovery_report`` populated. Raises
+        ``StorageLockError`` if a live process holds the directory."""
+        from repro.engine import ingest, lsm
+        from repro.runtime.durable import DurableStore
+
+        t0 = time.perf_counter()
+        store = path if isinstance(path, DurableStore) else DurableStore(path)
+        corrupt0 = tel.counter_value("storage.corruption_total") or 0
+        sess = cls(storage=store, **kwargs)
+        cat = sess.catalog
+        report: dict = {"datasets": {}, "seconds": 0.0,
+                        "corruption_events": 0, "wal_replayed_batches": 0}
+        try:
+            loads = []
+            for dv, name in store.list_datasets():
+                loads.append((dv, name) + store.load_dataset(dv, name))
+            # restore the LSN high-water mark BEFORE any publish, so every
+            # mounted generation commits with a strictly newer LSN than
+            # anything already on disk
+            with cat.lock:
+                for dv, name, record, _, _ in loads:
+                    cat.lsn = max(cat.lsn, int(record["lsn"]))
+            for dv, name, record, segments, ds_report in loads:
+                base = _mount_component(
+                    sess, dv, record["base"]["seg"],
+                    *segments[record["base"]["seg"]])
+                runs = tuple(
+                    _mount_component(sess, dv, r["seg"], *segments[r["seg"]])
+                    for r in record["runs"])
+                with cat.lock:
+                    key = (dv, name)
+                    max_uid = max((r.uid for r in runs), default=-1)
+                    cat._run_uids[key] = max(cat._run_uids.get(key, 0),
+                                             max_uid + 1)
+                    cat.publish(dv, name, base, runs)
+                lsm.recover(sess, dv, name, lazy=lazy)
+                tail = store.wal_tail(dv, name)
+                replayed = 0
+                if tail:
+                    # the replay feed IS the normal ingest path: validate,
+                    # buffer, flush, publish — only WAL re-appends are off
+                    lsm.ensure_soft(sess, dv, name)
+                    feed = ingest.Feed(
+                        sess, name, dv, flush_rows=1 << 62,
+                        policy=lsm.CompactionPolicy(
+                            size_ratio=float("inf"), max_runs=1 << 30))
+                    feed._replay = True
+                    for seq, kind, payload in tail:
+                        lsm._fault(sess, "mid-replay")
+                        if kind == "push":
+                            feed.push(payload)
+                        elif kind == "upsert":
+                            feed.upsert(payload)
+                        else:
+                            feed.delete(payload["__keys__"])
+                        replayed += 1
+                    feed.flush()
+                    tel.inc("storage.wal_replayed_batches_total", replayed)
+                report["wal_replayed_batches"] += replayed
+                report["datasets"][f"{dv}.{name}"] = {
+                    "lsn": int(record["lsn"]),
+                    "components": 1 + len(runs),
+                    "wal_replayed_batches": replayed,
+                    "manifest_fallbacks": ds_report["fallbacks"],
+                    "quarantined": ds_report["quarantined"],
+                }
+        except BaseException:
+            store.close()
+            raise
+        report["seconds"] = time.perf_counter() - t0
+        report["corruption_events"] = int(
+            (tel.counter_value("storage.corruption_total") or 0) - corrupt0)
+        tel.observe("storage.recovery_seconds", report["seconds"])
+        sess.recovery_report = report
+        return sess
+
+    def close(self) -> None:
+        """Release the durable store (directory lock + WAL handles). A
+        memory-only session is a no-op. Crash tests call this to simulate
+        process death before reopening the same directory."""
+        if self.storage is not None:
+            self.storage.close()
+
+    def _ensure_bound(self, plan: P.Plan) -> None:
+        """Lazy-rebuild hook on the query path: before binding, rebuild the
+        soft state of any scanned dataset still stale from a cold-start
+        mount. O(1) when the catalog has no stale datasets — the common
+        case costs one set check."""
+        if not self.catalog.stale:
+            return
+        from repro.engine import lsm
+
+        for node in P.walk(plan):
+            if isinstance(node, P.Scan):
+                lsm.ensure_soft(self, node.dataverse,
+                                node.dataset.partition("@")[0])
 
     # -- DDL ----------------------------------------------------------------
 
@@ -309,6 +448,8 @@ class Session:
 
         plan = getattr(frame_or_plan, "_plan", frame_or_plan)
         view = MaterializedView.from_plan(name, plan)
+        from repro.engine import lsm
+        lsm.ensure_soft(self, view.dataverse, view.dataset)
         with self.catalog.snapshot() as snap:
             self._seed_view(view, snap.components(view.dataverse,
                                                   view.dataset))
@@ -435,7 +576,9 @@ class Session:
         node."""
         from repro.core import physical as PH
         from repro.core.catalog import INTERNAL_COLUMNS
+        from repro.engine import lsm
 
+        lsm.ensure_soft(self, dataverse, dataset)
         t0 = time.perf_counter()
         with self.catalog.snapshot() as snap:
             comps = list(snap.components(dataverse, dataset))
@@ -650,6 +793,7 @@ class Session:
         t0 = time.perf_counter()
         raw_fp = plan.fingerprint()
         raw_lits = ordered_lits(P.all_exprs(plan))
+        self._ensure_bound(plan)
         with self.catalog.snapshot() as snap:
             with tel.span("session.execute", sid=self.sid, mode=self.mode):
                 e = self._plan_entry(plan, raw_fp, raw_lits, snap)
@@ -687,6 +831,7 @@ class Session:
         from repro.core.physical import format_plan
 
         raw_lits = ordered_lits(P.all_exprs(plan))
+        self._ensure_bound(plan)
         with self.catalog.snapshot() as snap:
             e = self._plan_entry(plan, plan.fingerprint(), raw_lits, snap)
             decisions = e.pruner.decide([l.value for l in raw_lits],
@@ -713,6 +858,7 @@ class Session:
 
         tel.inc("session.profiles_total", sid=self.sid)
         raw_lits = ordered_lits(P.all_exprs(plan))
+        self._ensure_bound(plan)
         with self.catalog.snapshot() as snap:
             with tel.span("session.profile", sid=self.sid, mode=self.mode):
                 e = self._plan_entry(plan, plan.fingerprint(), raw_lits, snap)
@@ -742,6 +888,7 @@ class Session:
     def persist(self, plan: P.Plan, name: str, dataverse: str = "Default") -> Dataset:
         """CREATE DATASET AS <query> — result stays engine-resident (paper
         Input 15: no data ever leaves storage)."""
+        self._ensure_bound(plan)
         with self.catalog.snapshot() as snap:
             opt = self._optimize(plan, snap)
             cq = compile_plan(opt, self.exec_context(snap),
@@ -869,6 +1016,31 @@ def _route_key(comp, key_col: str, key, n_keys: int):
     wlo = min(int(owners[0]) * bz.rows_per_shard, n_keys)
     whi = min((int(owners[-1]) + 1) * bz.rows_per_shard, n_keys)
     return wlo, whi, len(owners), bz.n_shards
+
+
+def _mount_component(session: Session, dataverse: str, seg: str,
+                     arrays: Mapping, meta: Mapping) -> Dataset:
+    """Rehydrate one LSM component from its durable segment: hard state
+    only — table columns (re-sharded onto the session's mesh), column
+    metadata, and the index *inventory* (payloads stay None until the
+    lazy soft-state rebuild at first bind)."""
+    from repro.runtime.durable import _meta_from_json
+
+    cols, cmeta = {}, {}
+    for cname, mjson in meta["columns"]:
+        cols[cname] = arrays[cname]
+        cmeta[cname] = _meta_from_json(mjson)
+    table = Table(cols, cmeta, int(meta["num_rows"]))
+    if session.mesh is not None:
+        table = table.shard(session.mesh, session.data_axes)
+    ds = Dataset(name=meta["name"], dataverse=dataverse, table=table,
+                 closed=bool(meta["closed"]), live_rows=meta["live_rows"],
+                 anti_rows=int(meta["anti_rows"]), level=int(meta["level"]),
+                 uid=int(meta["uid"]), engine_owned=True, seg_name=seg,
+                 soft_stale=True)
+    for key, ix_name, column, kind in meta["indexes"]:
+        ds.indexes[key] = IndexInfo(name=ix_name, column=column, kind=kind)
+    return ds
 
 
 def _collect_stats(table: Table, like: Optional[Mapping] = None) -> Table:

@@ -53,6 +53,18 @@ class StorageFault(RuntimeError):
 #   post-swap  — after the publish, before the soft-state bookkeeping
 STORAGE_FAULT_POINTS = ("flush", "mid-merge", "pre-swap", "post-swap")
 
+# The durable-storage I/O crash points (runtime/durable.py), in write-path
+# order. A separate tuple — the in-memory points above keep their arrival
+# semantics and parametrized tests unchanged:
+#   torn-write       — half a segment/WAL payload is on disk (CRC-detected)
+#   pre-rename       — manifest tmp fully written + fsynced, not yet renamed
+#                      into place (previous generation still authoritative)
+#   pre-wal-truncate — manifest generation committed, covered WAL records
+#                      not yet dropped (replay skips them by sequence)
+#   mid-replay       — between replayed WAL batches during Session.open
+IO_FAULT_POINTS = ("torn-write", "pre-rename", "pre-wal-truncate",
+                   "mid-replay")
+
 
 @dataclasses.dataclass
 class FaultPlan:

@@ -20,6 +20,7 @@ from repro.engine import lsm
 from repro.engine.ingest import Feed
 from repro.engine.session import Session
 from repro.engine.table import Table
+from repro.runtime import telemetry as tel
 from repro.runtime.fault import STORAGE_FAULT_POINTS, FaultPlan, StorageFault
 
 MODES = ["gspmd", "shard_map", "kernel"]
@@ -223,6 +224,51 @@ def test_background_compactor_retries_through_injected_fault():
     assert len(sess.catalog.get("d", "Live").runs) == 0  # fold landed
     assert _observe(AFrame("d", "Live", session=sess)) == _expected(oracle)
     assert sess.fault_plan.fired == [("mid-merge", 0)]
+
+
+def test_per_dataverse_compactor_isolation(monkeypatch):
+    """The pending queue is sharded per dataverse: a stalled (long) merge in
+    one dataverse must not delay another dataverse's compaction — each shard
+    gets its own worker thread, created lazily at first notify."""
+    sess, _ = _setup("gspmd")  # dataverse "d"
+    rows = _rows(np.arange(48))
+    sess.create_dataset("Other", Table(dict(rows)), dataverse="d2",
+                        primary="k")
+
+    release = threading.Event()
+    entered = threading.Event()
+    real = lsm._visible_columns
+
+    def gated_visible(comp, *a, **kw):
+        if comp.dataverse == "d":     # block ONLY dataverse d's merge
+            entered.set()
+            assert release.wait(30.0)
+        return real(comp, *a, **kw)
+
+    monkeypatch.setattr(lsm, "_visible_columns", gated_visible)
+    with lsm.BackgroundCompactor(
+            sess, policy=lsm.CompactionPolicy(size_ratio=0.0)) as bc:
+        feed_d = Feed(sess, "Live", "d", flush_rows=8, policy=DEFERRED,
+                      compactor=bc)
+        feed_d.push(_rows(np.arange(48, 56)))
+        assert entered.wait(10.0)     # d's worker is parked mid-merge
+        assert tel.gauge_value("lsm.compactor.workers") == 1
+
+        feed_d2 = Feed(sess, "Other", "d2", flush_rows=8, policy=DEFERRED,
+                       compactor=bc)
+        feed_d2.push(_rows(np.arange(48, 56)))
+        # d2's shard compacts to quiescence while d is still blocked
+        deadline = time.time() + 15.0
+        while time.time() < deadline and \
+                len(sess.catalog.get("d2", "Other").runs) > 0:
+            time.sleep(0.02)
+        assert len(sess.catalog.get("d2", "Other").runs) == 0, \
+            "dataverse d2 compaction starved by d's stalled merge"
+        assert tel.gauge_value("lsm.compactor.workers") == 2
+        assert len(sess.catalog.get("d", "Live").runs) == 1  # still parked
+        release.set()
+        assert bc.wait_idle(30.0)
+    assert len(sess.catalog.get("d", "Live").runs) == 0
 
 
 # -- crash points on the synchronous path ------------------------------------
